@@ -1,0 +1,80 @@
+"""Beyond-paper: multi-host fleet tuning (DESIGN.md §2 multi-pod semantics).
+
+A lockstep SPMD fleet's effective transfer time is the MAX over hosts, so
+per-host tuning and straggler-aware uniform consensus beat both (a) the
+framework default and (b) naively applying the fast-host optimum fleet-wide.
+Scenario: 16 hosts, 2 degraded (half cores / 0.3x storage bw) — the
+straggler-injection case the single-machine paper cannot express.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (DPTConfig, LoaderSimulator, MachineProfile,
+                        MultiHostDPT, SimulatorEvaluator, default_params)
+from repro.core.cluster import fleet_evaluators, make_fleet
+from repro.data.storage import coco_profile
+
+TITLE = "Fleet tuning under stragglers (per-host vs uniform vs default)"
+PAPER_REF = "beyond-paper (DESIGN.md §2)"
+
+BATCH = 64
+
+
+def run(quick: bool = False) -> List[Dict]:
+    machine = MachineProfile()
+    storage = coco_profile(160)
+    num_hosts = 4 if quick else 16
+    fleet = make_fleet(machine, storage, num_hosts=num_hosts,
+                       slow_hosts=(1, 3) if num_hosts >= 4 else (1,))
+    evs = fleet_evaluators(fleet, batch_size=BATCH)
+    cfg = DPTConfig(num_cpu_cores=12, num_devices=1,
+                    max_prefetch=4, num_batches=16 if quick else 32, epoch=1)
+    tuner = MultiHostDPT(evs, cfg)
+
+    per_host = tuner.run_per_host()
+    uniform = tuner.run_uniform()
+
+    # fleet default: every host runs PyTorch defaults
+    dw, dp = default_params(12)
+    t_default = max(ev(dw, dp, num_batches=cfg.num_batches,
+                       epoch=cfg.epoch).seconds for ev in evs)
+    # naive: fast-host optimum applied fleet-wide
+    fast = per_host.per_host[0]
+    t_naive = max(ev(fast.nworker, fast.nprefetch,
+                     num_batches=cfg.num_batches, epoch=cfg.epoch).seconds
+                  for ev in evs)
+
+    rows: List[Dict] = [
+        {"policy": "framework-default", "fleet_s": t_default,
+         "params": f"({dw},{dp}) everywhere",
+         "speedup_vs_default": 1.0},
+        {"policy": "fast-host-everywhere", "fleet_s": t_naive,
+         "params": f"({fast.nworker},{fast.nprefetch}) everywhere",
+         "speedup_vs_default": t_default / t_naive},
+        {"policy": "uniform-minimax", "fleet_s": uniform.fleet_time,
+         "params": f"{uniform.uniform_params} everywhere",
+         "speedup_vs_default": t_default / uniform.fleet_time},
+        {"policy": "per-host", "fleet_s": per_host.fleet_time,
+         "params": "per-host optima",
+         "speedup_vs_default": t_default / per_host.fleet_time},
+    ]
+    # show the straggler's own optimum vs a healthy host's
+    slow = per_host.per_host[1]
+    rows.append({"policy": "(host1=straggler optimum)",
+                 "fleet_s": slow.optimal_time,
+                 "params": f"({slow.nworker},{slow.nprefetch})",
+                 "speedup_vs_default": None})
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import fmt_table, save_rows
+    rows = run()
+    print(f"== {TITLE} ({PAPER_REF}) ==")
+    print(fmt_table(rows))
+    print(save_rows("multihost", rows))
+
+
+if __name__ == "__main__":
+    main()

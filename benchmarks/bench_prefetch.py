@@ -1,0 +1,56 @@
+"""Paper Fig 3 — transfer time of various worker counts while increasing
+the prefetch factor (CIFAR-10).
+
+The claim: curves are roughly flat in prefetch (workers dominate) but not
+monotone — the optimum prefetch is unpredictable and must be searched.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (LoaderSimulator, MachineProfile, SimulatorEvaluator)
+from repro.data.storage import cifar10_profile
+
+TITLE = "Prefetch sweep at fixed worker counts"
+PAPER_REF = "Fig 3"
+
+MACHINE = MachineProfile()
+BATCH = 32
+WORKERS = (2, 4, 6, 8, 10, 12)
+
+
+def run(quick: bool = False) -> List[Dict]:
+    sim = LoaderSimulator(cifar10_profile(), MACHINE)
+    ev = SimulatorEvaluator(sim, batch_size=BATCH)
+    nb = 32 if quick else 64
+    rows: List[Dict] = []
+    for w in WORKERS:
+        ts = {j: ev(w, j, num_batches=nb, epoch=1).seconds
+              for j in range(1, 9)}
+        best_j = min(ts, key=ts.get)
+        rows.append({
+            "worker": w, "best_prefetch": best_j, "best_s": ts[best_j],
+            "prefetch1_s": ts[1], "prefetch8_s": ts[8],
+            "flatness_pct": 100 * (max(ts.values()) - min(ts.values()))
+                            / min(ts.values()),
+        })
+    # cross-worker contrast: worker gains dwarf prefetch gains
+    t_w2 = min(rows[0][k] for k in ("best_s",))
+    t_w10 = [r for r in rows if r["worker"] == 10][0]["best_s"]
+    rows.append({"worker": "2->10", "best_prefetch": "-",
+                 "best_s": t_w10, "prefetch1_s": t_w2,
+                 "prefetch8_s": None,
+                 "flatness_pct": 100 * (t_w2 / t_w10 - 1)})
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import fmt_table, save_rows
+    rows = run()
+    print(f"== {TITLE} ({PAPER_REF}) ==")
+    print(fmt_table(rows))
+    print(save_rows("prefetch", rows))
+
+
+if __name__ == "__main__":
+    main()

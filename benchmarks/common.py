@@ -1,0 +1,67 @@
+"""Shared helpers for the benchmark harness.
+
+Every bench module exposes ``run(quick=False) -> list[dict]`` and a
+``TITLE`` / ``PAPER_REF`` pair; ``benchmarks.run`` drives them all, prints
+aligned tables + a machine-readable CSV line per row, and archives the rows
+under artifacts/bench/<name>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def save_rows(name: str, rows: List[Dict]) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path
+
+
+def fmt_table(rows: List[Dict], cols: List[str] | None = None) -> str:
+    if not rows:
+        return "(no rows)"
+    cols = cols or list(rows[0].keys())
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    head = "  ".join(c.ljust(widths[c]) for c in cols)
+    sep = "  ".join("-" * widths[c] for c in cols)
+    body = "\n".join(
+        "  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols)
+        for r in rows)
+    return f"{head}\n{sep}\n{body}"
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "N/A"
+    if isinstance(v, float):
+        if v != v or v in (float("inf"), float("-inf")):
+            return "N/A"
+        if abs(v) >= 1000 or (abs(v) < 0.01 and v != 0):
+            return f"{v:.3g}"
+        return f"{v:.3f}"
+    return str(v)
+
+
+def csv_lines(name: str, rows: List[Dict]) -> List[str]:
+    """name,key=value,... one line per row (greppable)."""
+    out = []
+    for r in rows:
+        kv = ",".join(f"{k}={_fmt(v)}" for k, v in r.items())
+        out.append(f"{name},{kv}")
+    return out
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,94 @@
+"""Regenerate the machine-derived tables in EXPERIMENTS.md from the dry-run
+artifacts (between the AUTOGEN markers; the §Perf narrative is hand-written).
+
+    PYTHONPATH=src python -m benchmarks.experiments_md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRYRUN = os.path.join(ROOT, "artifacts", "dryrun")
+BASELINE = os.path.join(ROOT, "artifacts", "dryrun_v0_paperfaithful")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def load(d, mesh):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        with open(p) as f:
+            a = json.load(f)
+        out[(a["arch"], a["shape"])] = a
+    return out
+
+
+def fmt(v, nd=3):
+    if v is None:
+        return "—"
+    return f"{v:.{nd}f}" if isinstance(v, float) else str(v)
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | chips | compile_s | peak GiB/dev | fits 16G | FLOPs/dev (body-once) | dominant |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for mesh in ("single", "multi"):
+        for (arch, shape), a in sorted(load(DRYRUN, mesh).items()):
+            if not a.get("ok"):
+                rows.append(f"| {arch} | {shape} | {mesh} | — | — | — | — | — | "
+                            f"FAIL: {a.get('error','?')[:40]} |")
+                continue
+            r = a["roofline"]
+            rows.append(
+                f"| {arch} | {shape} | {mesh} | {a['chips']} "
+                f"| {fmt(a.get('compile_s'),1)} "
+                f"| {a['memory']['peak_per_device']/2**30:.2f} "
+                f"| {'yes' if a['fits_hbm_16g'] else '**NO**'} "
+                f"| {a['cost']['flops']:.3g} | {r['dominant']} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    base = load(BASELINE, "single")
+    cur = load(DRYRUN, "single")
+    rows = ["| arch/shape | compute_s | memory_s | collective_s | dominant | "
+            "step_s | MODEL/HLO flops | roofline frac | v0 step_s | v0→now |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for key, a in sorted(cur.items()):
+        if not a.get("ok"):
+            continue
+        r = a["roofline"]
+        b = base.get(key)
+        b_step = b["roofline"]["step_s"] if (b and b.get("ok")) else None
+        gain = f"{b_step / r['step_s']:.2f}×" if b_step else "—"
+        rows.append(
+            f"| {key[0]}/{key[1]} | {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+            f"| {fmt(r['collective_s'])} | {r['dominant']} | {fmt(r['step_s'])} "
+            f"| {fmt(r['useful_flops_ratio'],3)} | {fmt(r['roofline_fraction'],4)} "
+            f"| {fmt(b_step)} | {gain} |")
+    return "\n".join(rows)
+
+
+def replace_block(text: str, name: str, content: str) -> str:
+    begin, end = f"<!-- AUTOGEN:{name} -->", f"<!-- /AUTOGEN:{name} -->"
+    block = f"{begin}\n{content}\n{end}"
+    if begin in text:
+        return re.sub(re.escape(begin) + r".*?" + re.escape(end), block, text,
+                      flags=re.S)
+    return text + "\n" + block + "\n"
+
+
+def main() -> None:
+    with open(EXP) as f:
+        text = f.read()
+    text = replace_block(text, "dryrun", dryrun_table())
+    text = replace_block(text, "roofline", roofline_table())
+    with open(EXP, "w") as f:
+        f.write(text)
+    print(f"updated {EXP}")
+
+
+if __name__ == "__main__":
+    main()

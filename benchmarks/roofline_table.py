@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape), single-pod mesh per the assignment: the three roofline
+terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness
+ratio, roofline fraction, and peak HBM per device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+TITLE = "Roofline terms per (arch x shape), single-pod 16x16"
+PAPER_REF = "assignment §Roofline"
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh: str = "single") -> List[dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(quick: bool = False, mesh: str = "single") -> List[Dict]:
+    rows: List[Dict] = []
+    for art in load_cells(mesh):
+        if not art.get("ok"):
+            rows.append({"cell": f"{art['arch']}/{art['shape']}",
+                         "error": art.get("error", "?")[:60]})
+            continue
+        r = art["roofline"]
+        rows.append({
+            "cell": f"{art['arch']}/{art['shape']}",
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "dominant": r["dominant"],
+            "step_s": round(r["step_s"], 4),
+            "roofline_frac": round(r["roofline_fraction"], 4),
+            "useful_flops": round(r["useful_flops_ratio"], 3),
+            "peak_GiB": round(art["memory"]["peak_per_device"] / 2**30, 2),
+            "fits16G": art["fits_hbm_16g"],
+        })
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import fmt_table, save_rows
+    rows = run()
+    print(f"== {TITLE} ({PAPER_REF}) ==")
+    print(fmt_table(rows))
+    print(save_rows("roofline_table", rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""DPT result cache (paper §5: "parameters deduced by DPT can be used for
+datasets with similar characteristics" on the same machine).
+
+Keyed by (machine fingerprint, dataset fingerprint, batch-size bucket,
+epoch class).  Dataset fingerprints bucket item size / decode cost in
+half-octave bins, so e.g. two ~100KB-JPEG folders share tuned parameters
+while 80x80 and 640x640 resizes do not.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+from typing import Optional, Tuple
+
+from repro.core.dpt import DPTResult
+
+
+def _batch_bucket(batch_size: int) -> int:
+    return int(round(math.log2(max(batch_size, 1))))
+
+
+class DPTCache:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._lock = threading.Lock()
+        self._store: dict = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self._store = json.load(f)
+
+    def _key(self, machine_fp: str, dataset_fp: str, batch_size: int,
+             epoch: int) -> str:
+        epoch_class = "cold" if epoch == 0 else "warm"
+        return f"{machine_fp}|{dataset_fp}|b{_batch_bucket(batch_size)}|{epoch_class}"
+
+    def get(self, machine_fp: str, dataset_fp: str, batch_size: int,
+            epoch: int = 0) -> Optional[Tuple[int, int]]:
+        with self._lock:
+            v = self._store.get(self._key(machine_fp, dataset_fp,
+                                          batch_size, epoch))
+        return (v["nworker"], v["nprefetch"]) if v else None
+
+    def put(self, machine_fp: str, dataset_fp: str, batch_size: int,
+            result: DPTResult, epoch: int = 0) -> None:
+        with self._lock:
+            self._store[self._key(machine_fp, dataset_fp, batch_size,
+                                  epoch)] = {
+                "nworker": result.nworker,
+                "nprefetch": result.nprefetch,
+                "optimal_time": result.optimal_time,
+            }
+            if self.path:
+                tmp = self.path + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump(self._store, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+
+    def __len__(self):
+        return len(self._store)

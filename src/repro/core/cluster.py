@@ -1,0 +1,65 @@
+"""Fleet simulation for MultiHostDPT: heterogeneous hosts (stragglers,
+degraded storage, fewer free cores) built from perturbed machine/storage
+profiles.  Used by benchmarks/bench_multihost.py and the FT tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core.evaluators import SimulatorEvaluator
+from repro.core.simulator import LoaderSimulator, MachineProfile
+from repro.data.storage import StorageProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpec:
+    name: str
+    machine: MachineProfile
+    storage: StorageProfile
+
+
+def degraded(machine: MachineProfile, *, cpu_scale: float = 1.0,
+             io_scale: float = 1.0, ram_scale: float = 1.0) -> MachineProfile:
+    return dataclasses.replace(
+        machine,
+        physical_cores=max(1, int(machine.physical_cores * cpu_scale)),
+        logical_cores=max(1, int(machine.logical_cores * cpu_scale)),
+        host_ram=machine.host_ram * ram_scale,
+    )
+
+
+def degraded_storage(storage: StorageProfile, *,
+                     bw_scale: float = 1.0,
+                     latency_scale: float = 1.0) -> StorageProfile:
+    return dataclasses.replace(
+        storage,
+        storage_bw=storage.storage_bw * bw_scale,
+        io_latency_s=storage.io_latency_s * latency_scale,
+    )
+
+
+def make_fleet(base_machine: MachineProfile, base_storage: StorageProfile,
+               *, num_hosts: int, slow_hosts: Sequence[int] = (),
+               slow_cpu_scale: float = 0.5,
+               slow_io_scale: float = 0.3) -> List[HostSpec]:
+    """num_hosts homogeneous hosts with ``slow_hosts`` degraded (the
+    straggler-injection scenario)."""
+    fleet = []
+    for h in range(num_hosts):
+        if h in slow_hosts:
+            m = degraded(base_machine, cpu_scale=slow_cpu_scale)
+            s = degraded_storage(base_storage, bw_scale=slow_io_scale,
+                                 latency_scale=1.0 / slow_io_scale)
+        else:
+            m, s = base_machine, base_storage
+        fleet.append(HostSpec(f"host{h}", m, s))
+    return fleet
+
+
+def fleet_evaluators(fleet: Sequence[HostSpec], *, batch_size: int,
+                     device_ram: Optional[float] = None
+                     ) -> List[SimulatorEvaluator]:
+    return [SimulatorEvaluator(LoaderSimulator(h.storage, h.machine),
+                               batch_size=batch_size, device_ram=device_ram)
+            for h in fleet]

@@ -1,0 +1,210 @@
+"""Dataloader Parameter Tuner (DPT) — the paper's Algorithm 1, faithfully,
+plus the multi-host fleet extension.
+
+Faithful part (``DPT.run``):
+    nWorker starts at G (accelerator count) and increases by G up to N
+    (CPU cores); for each, nPrefetch sweeps 1..P; each cell measures the
+    dataloader transfer time; memory overflow breaks the inner loop and
+    moves to the next worker count; the argmin is returned.
+
+The tuner is decoupled from *how* a cell is measured: an ``Evaluator``
+returns ``TransferStats`` (real wall-clock loader, or the virtual-time
+simulator — see core/evaluators.py).  That is what lets the same algorithm
+drive unit tests, paper-table benchmarks and the multi-host simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.monitor import MemoryOverflow
+from repro.data.loader import TransferStats
+
+Evaluator = Callable[..., TransferStats]  # (nworker, nprefetch, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class DPTConfig:
+    num_cpu_cores: Optional[int] = None      # N  (default: os.cpu_count())
+    num_devices: Optional[int] = None        # G  (default: local devices)
+    max_prefetch: int = 8                    # P
+    min_prefetch: int = 1
+    num_batches: int = 32                    # measurement budget per cell
+    epoch: int = 0                           # 0 = cold (1st), >=1 = warm
+
+    def resolve(self) -> Tuple[int, int]:
+        n = self.num_cpu_cores
+        if n is None:
+            n = os.cpu_count() or 1
+        g = self.num_devices
+        if g is None:
+            try:
+                import jax
+                g = jax.local_device_count()
+            except Exception:  # pragma: no cover
+                g = 1
+        return n, max(1, g)
+
+
+@dataclasses.dataclass
+class Trial:
+    nworker: int
+    nprefetch: int
+    seconds: float
+    overflowed: bool = False
+    peak_bytes: float = 0.0
+
+
+@dataclasses.dataclass
+class DPTResult:
+    nworker: int
+    nprefetch: int
+    optimal_time: float
+    trials: List[Trial]
+    default_time: Optional[float] = None
+
+    @property
+    def speedup_vs_default(self) -> Optional[float]:
+        if self.default_time is None or self.optimal_time == 0:
+            return None
+        return self.default_time / self.optimal_time
+
+    @property
+    def time_reduction_pct(self) -> Optional[float]:
+        if self.default_time is None or self.default_time == 0:
+            return None
+        return 100.0 * (self.optimal_time - self.default_time) / self.default_time
+
+
+def default_params(num_cpu_cores: Optional[int] = None) -> Tuple[int, int]:
+    """PyTorch's defaults the paper compares against: workers = cores/2,
+    prefetch_factor = 2."""
+    n = num_cpu_cores if num_cpu_cores is not None else (os.cpu_count() or 1)
+    return max(1, n // 2), 2
+
+
+class DPT:
+    def __init__(self, evaluator: Evaluator,
+                 config: DPTConfig = DPTConfig()):
+        self.evaluator = evaluator
+        self.config = config
+
+    def _measure(self, i: int, j: int) -> TransferStats:
+        return self.evaluator(i, j, num_batches=self.config.num_batches,
+                              epoch=self.config.epoch)
+
+    def run(self, *, measure_default: bool = True) -> DPTResult:
+        """Algorithm 1."""
+        cfg = self.config
+        N, G = cfg.resolve()
+        n_worker, n_prefetch = 0, 0
+        optimal_time = math.inf
+        trials: List[Trial] = []
+
+        i = 0
+        while i < N:                                   # line 4
+            i += G                                     # line 5
+            j = cfg.min_prefetch                       # line 6
+            while j <= cfg.max_prefetch:               # line 7
+                try:
+                    stats = self._measure(i, j)        # lines 8, 12
+                    overflowed = stats.overflowed
+                except MemoryOverflow:
+                    overflowed = True
+                    stats = None
+                if overflowed:                         # lines 9-10
+                    trials.append(Trial(i, j, math.inf, overflowed=True))
+                    break
+                trials.append(Trial(i, j, stats.seconds,
+                                    peak_bytes=stats.peak_loader_bytes))
+                if stats.seconds < optimal_time:       # lines 14-17
+                    optimal_time = stats.seconds
+                    n_worker, n_prefetch = i, j
+                j += 1                                 # line 19
+
+        default_time = None
+        if measure_default:
+            dw, dp = default_params(N)
+            try:
+                default_time = self._measure(dw, dp).seconds
+            except MemoryOverflow:
+                default_time = math.inf
+        return DPTResult(n_worker, n_prefetch, optimal_time, trials,
+                         default_time=default_time)
+
+    # ---- full grid (figures 2-4) --------------------------------------------
+    def grid(self, workers: Sequence[int],
+             prefetches: Sequence[int]) -> Dict[Tuple[int, int], float]:
+        out: Dict[Tuple[int, int], float] = {}
+        for i in workers:
+            for j in prefetches:
+                try:
+                    out[(i, j)] = self._measure(i, j).seconds
+                except MemoryOverflow:
+                    out[(i, j)] = math.inf
+        return out
+
+
+# --------------------------------------------------------------------------
+# multi-host fleet tuning (beyond paper; DESIGN.md §2 "Multi-pod semantics")
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetResult:
+    mode: str                             # "uniform" | "per_host"
+    per_host: List[DPTResult]
+    fleet_params: List[Tuple[int, int]]   # chosen (nworker, nprefetch)/host
+    fleet_time: float                     # max over hosts (lockstep step time)
+    uniform_params: Optional[Tuple[int, int]] = None
+
+
+class MultiHostDPT:
+    """Tunes a fleet where hosts may be heterogeneous (stragglers).
+
+    The fleet steps in lockstep, so the effective transfer time is the MAX
+    over hosts.  Two modes:
+
+    * ``per_host``: each host tunes independently (optimal when per-host
+      configs are allowed — independent minimization minimizes the max);
+    * ``uniform``: one (nWorker, nPrefetch) for every host (common fleet
+      constraint) chosen to minimize the max over hosts — a straggler-aware
+      consensus the single-machine paper has no analogue of.
+    """
+
+    def __init__(self, evaluators: Sequence[Evaluator],
+                 config: DPTConfig = DPTConfig()):
+        self.evaluators = list(evaluators)
+        self.config = config
+
+    def run_per_host(self) -> FleetResult:
+        results = [DPT(ev, self.config).run(measure_default=False)
+                   for ev in self.evaluators]
+        params = [(r.nworker, r.nprefetch) for r in results]
+        fleet_time = max(r.optimal_time for r in results)
+        return FleetResult("per_host", results, params, fleet_time)
+
+    def run_uniform(self) -> FleetResult:
+        results = [DPT(ev, self.config).run(measure_default=False)
+                   for ev in self.evaluators]
+        # candidate set: every host's trial grid, scored by fleet max
+        per_cell: Dict[Tuple[int, int], float] = {}
+        for r in results:
+            for t in r.trials:
+                key = (t.nworker, t.nprefetch)
+                cur = per_cell.get(key, 0.0)
+                per_cell[key] = max(cur, t.seconds)
+        # a cell is feasible only if every host measured it un-overflowed
+        counts: Dict[Tuple[int, int], int] = {}
+        for r in results:
+            for t in r.trials:
+                if not t.overflowed and math.isfinite(t.seconds):
+                    counts[(t.nworker, t.nprefetch)] = counts.get(
+                        (t.nworker, t.nprefetch), 0) + 1
+        feasible = {k: v for k, v in per_cell.items()
+                    if counts.get(k, 0) == len(results)}
+        if not feasible:
+            raise MemoryOverflow("no uniform cell feasible on all hosts")
+        best = min(feasible, key=feasible.get)
+        return FleetResult("uniform", results, [best] * len(results),
+                           feasible[best], uniform_params=best)

@@ -1,0 +1,179 @@
+"""Virtual-time loader simulator.
+
+This container has ONE physical core, so multi-core worker-scaling curves
+cannot be measured in wall clock.  The paper-table benchmarks therefore run
+DPT against this discrete(-ish) event model, which captures every mechanism
+the paper attributes its results to:
+
+* worker parallelism with CPU contention: decode throughput scales with
+  min(nWorker, available_logical_cores); the paper's "optimal = 10 of 12
+  logical cores because main + loader processes occupy two" is the
+  ``reserved_cores`` term;
+* shared storage bandwidth with per-stream limits and congestion beyond
+  ``io_streams`` concurrent readers (why large-item / cold-epoch optima sit
+  at moderate worker counts);
+* an OS page cache: epoch >= 2 reads hit RAM for the cached fraction; the
+  cache competes with loader memory (worker overhead + prefetch buffers),
+  which is why second-epoch optima drop for datasets larger than RAM;
+* prefetch-factor pipelining: overlap of a worker's IO and CPU phases
+  improves sharply from j=1 and saturates, with a small deterministic
+  jitter making the exact optimum unpredictable (paper Fig. 2b);
+* memory overflow: footprint beyond host RAM raises the same
+  ``MemoryOverflow`` the real loader raises (paper's N/A cells).
+
+The SAME DPT code drives this simulator and the real wall-clock loader
+(see core/evaluators.py); only the objective callback differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Optional
+
+from repro.core.monitor import MemoryOverflow, estimate_loader_footprint
+from repro.data.storage import StorageProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineProfile:
+    """Host resources (the paper's testbed by default: i7-8700K, 64 GB)."""
+    physical_cores: int = 6
+    logical_cores: int = 12
+    reserved_cores: int = 2          # main process + loader main process
+    num_devices: int = 1             # G in Algorithm 1
+    host_ram: float = 64e9
+    os_reserved: float = 4e9
+    io_streams: int = 6              # concurrent reads before bw congestion
+    worker_overhead_bytes: float = 1.2e9   # per-worker process footprint
+    hyperthread_eff: float = 0.5     # logical cores beyond physical scale
+    amdahl_serial: float = 0.06      # serial fraction of decode parallelism
+    thrash_exp: float = 1.35         # oversubscription (ctx-switch) penalty
+    io_congestion: float = 0.08      # bw loss per reader beyond io_streams
+    device_bw: float = 12e9          # host->device interconnect
+
+    @property
+    def effective_cores(self) -> float:
+        phys = self.physical_cores
+        extra = max(0, self.logical_cores - phys)
+        return phys + self.hyperthread_eff * extra
+
+    def _over_penalty(self, k: int) -> float:
+        """Context-switch thrash once (workers + reserved) exceed logical
+        cores — the paper's 'optimal = logical cores - 2' observation."""
+        over = (k + self.reserved_cores) / self.logical_cores
+        return 1.0 if over <= 1.0 else over ** self.thrash_exp
+
+    def cpu_speedup(self, k: int) -> float:
+        """Parallel decode speedup of k workers: Amdahl-damped linear gain,
+        thrash-penalized beyond the free logical cores."""
+        k = max(1, k)
+        amdahl = k / (1.0 + self.amdahl_serial * (k - 1))
+        return amdahl / self._over_penalty(k)
+
+    def io_worker_eff(self, k: int) -> float:
+        """Effective concurrent IO requesters (same thrash shape: an
+        oversubscribed host also issues requests late)."""
+        return max(1, k) / self._over_penalty(k)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    seconds: float
+    peak_bytes: float
+    warm_fraction: float
+    io_seconds: float
+    cpu_seconds: float
+    overflowed: bool = False
+
+
+def _jitter(*keys, amp: float = 0.03) -> float:
+    """Deterministic pseudo-noise in [1-amp, 1+amp]."""
+    blob = "|".join(str(k) for k in keys).encode()
+    h = int.from_bytes(hashlib.sha256(blob).digest()[:8], "big")
+    return 1.0 + amp * (2.0 * (h / 2**64) - 1.0)
+
+
+class LoaderSimulator:
+    def __init__(self, storage: StorageProfile, machine: MachineProfile,
+                 *, model_host_bytes: float = 2e9):
+        self.sp = storage
+        self.mp = machine
+        self.model_host_bytes = model_host_bytes
+
+    # ---- memory model -------------------------------------------------------
+    def batch_bytes(self, batch_size: int) -> float:
+        return batch_size * self.sp.decoded
+
+    def footprint(self, batch_size: int, nworker: int, nprefetch: int,
+                  device_prefetch: int = 2) -> float:
+        base = estimate_loader_footprint(
+            self.batch_bytes(batch_size), nworker, nprefetch, device_prefetch)
+        return base + max(1, nworker) * self.mp.worker_overhead_bytes
+
+    def device_bytes(self, batch_size: int, device_prefetch: int = 2) -> float:
+        return (1 + device_prefetch) * self.batch_bytes(batch_size)
+
+    # ---- timing model -------------------------------------------------------
+    def simulate(self, *, batch_size: int, num_batches: int, nworker: int,
+                 nprefetch: int, epoch: int = 0, device_prefetch: int = 2,
+                 device_ram: Optional[float] = None,
+                 check_overflow: bool = True) -> SimResult:
+        sp, mp = self.sp, self.mp
+        K = max(1, nworker)
+        j = max(1, nprefetch)
+
+        foot = self.footprint(batch_size, nworker, nprefetch, device_prefetch)
+        avail_ram = mp.host_ram - mp.os_reserved - self.model_host_bytes
+        if check_overflow and foot > avail_ram:
+            raise MemoryOverflow(
+                f"simulated loader footprint {foot/1e9:.1f}GB > "
+                f"available {avail_ram/1e9:.1f}GB")
+        if check_overflow and device_ram is not None:
+            if self.device_bytes(batch_size, device_prefetch) > device_ram:
+                raise MemoryOverflow("simulated device memory overflow")
+
+        # page cache: what's left after the loader's own memory
+        cache_cap = max(0.0, avail_ram - foot)
+        warm = 0.0 if epoch == 0 else min(1.0, cache_cap / sp.dataset_bytes)
+
+        items = num_batches * batch_size
+
+        # --- IO stage throughput (items/s) ---
+        # Seek-queueing latency grows with concurrent readers (fitted from
+        # paper Table 1b, see StorageProfile); aggregate bandwidth congests
+        # beyond io_streams readers; the bw ceiling always applies.
+        lat_k = sp.io_latency_s * (1.0 + sp.seek_congestion * K)
+        agg_bw = sp.storage_bw / (1.0 + mp.io_congestion
+                                  * max(0, K - mp.io_streams))
+        per_request = lat_k + sp.item_bytes * K / agg_bw
+        rate_cold = min(mp.io_worker_eff(K) / per_request,
+                        agg_bw / sp.item_bytes)
+        rate_warm = sp.ram_bw / sp.item_bytes
+        rate_io = 1.0 / ((1.0 - warm) / rate_cold + warm / rate_warm)
+
+        # --- CPU stage throughput (items/s) ---
+        cpu_item_s = (sp.decode_cpu_s_fixed
+                      + sp.decode_cpu_s_per_byte * sp.decoded)
+        rate_cpu = mp.cpu_speedup(K) / cpu_item_s
+
+        # --- pipeline composition: prefetch_factor controls IO/CPU overlap
+        # within each worker (j=1: serialized; j>=2: stages overlap, gains
+        # saturating) ---
+        t_io = 1.0 / rate_io
+        t_cpu = 1.0 / rate_cpu
+        overlap = 1.0 - 1.0 / (1.0 + 1.2 * (j - 0.5))
+        per_item = max(t_io, t_cpu) + (1.0 - overlap) * min(t_io, t_cpu)
+        per_item *= _jitter("cell", K, j, sp.item_bytes, batch_size)
+
+        # --- makespan + pipeline fill (first batch must fully arrive) ---
+        fill_item = per_request if (epoch == 0 or warm < 1.0) else cpu_item_s
+        total = items * per_item + batch_size * fill_item / max(1, min(K, j + 1))
+
+        # --- host->device transfer; hidden when device_prefetch >= 2 ---
+        xfer = num_batches * self.batch_bytes(batch_size) / mp.device_bw
+        hidden = min(1.0, 0.55 * device_prefetch)
+        total += xfer * (1.0 - hidden)
+
+        return SimResult(seconds=total, peak_bytes=foot, warm_fraction=warm,
+                         io_seconds=items * t_io, cpu_seconds=items * t_cpu)

@@ -1,0 +1,16 @@
+from repro.data.dataset import (  # noqa: F401
+    Dataset,
+    default_collate,
+    synthetic_image_dataset,
+    token_dataset,
+)
+from repro.data.loader import DataLoader, LoaderParams, TransferStats  # noqa: F401
+from repro.data.sampler import SamplerState, ShardedSampler  # noqa: F401
+from repro.data.storage import (  # noqa: F401
+    ArrayStorage,
+    FileStorage,
+    LatencyStorage,
+    StorageProfile,
+    cifar10_profile,
+    coco_profile,
+)

@@ -1,0 +1,162 @@
+"""The DataLoader: sampler + worker pool + device prefetch, parameterized by
+exactly the two knobs DPT tunes (nWorker, nPrefetch) plus the device-buffer
+depth.  ``measure_transfer_time`` is the paper's objective function
+("Measure Dataloader Transfer Time using i, j arguments", Algorithm 1 l.12).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.monitor import (MemoryBudget, MemoryMonitor, MemoryOverflow,
+                                estimate_loader_footprint)
+from repro.data.dataset import Dataset
+from repro.data.prefetcher import DevicePrefetcher
+from repro.data.sampler import SamplerState, ShardedSampler
+from repro.data.worker_pool import (ProcessWorkerPool, ThreadWorkerPool,
+                                    batch_nbytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoaderParams:
+    """The tunable surface.  (num_workers, prefetch_factor) are the paper's
+    (nWorker, nPrefetch); device_prefetch is the TPU-side double-buffer."""
+    num_workers: int = 0
+    prefetch_factor: int = 2
+    device_prefetch: int = 2
+    use_processes: bool = False
+
+    def replace(self, **kw) -> "LoaderParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class TransferStats:
+    seconds: float
+    batches: int
+    bytes: int
+    overflowed: bool = False
+    peak_loader_bytes: int = 0
+
+    @property
+    def bytes_per_second(self) -> float:
+        return self.bytes / self.seconds if self.seconds > 0 else 0.0
+
+
+class DataLoader:
+    def __init__(self, dataset: Dataset, global_batch: int, *,
+                 params: LoaderParams = LoaderParams(),
+                 shuffle: bool = True, seed: int = 0,
+                 host_index: int = 0, host_count: int = 1,
+                 memory_budget: Optional[MemoryBudget] = None,
+                 sharding=None,
+                 sampler_state: Optional[SamplerState] = None):
+        self.dataset = dataset
+        self.global_batch = global_batch
+        self.params = params
+        self.memory_budget = memory_budget
+        self.sharding = sharding
+        self.sampler = ShardedSampler(
+            len(dataset), global_batch, shuffle=shuffle, seed=seed,
+            host_index=host_index, host_count=host_count,
+            state=sampler_state)
+
+    # ---- checkpointable state ---------------------------------------------
+    def state_dict(self):
+        return {"sampler": self.sampler.state.to_dict(),
+                "params": dataclasses.asdict(self.params)}
+
+    def load_state_dict(self, d):
+        self.sampler.state = SamplerState.from_dict(d["sampler"])
+        self.params = LoaderParams(**d["params"])
+
+    def with_params(self, params: LoaderParams) -> "DataLoader":
+        self.params = params
+        return self
+
+    # ---- iteration ----------------------------------------------------------
+    def _pool(self, index_iter):
+        monitor = MemoryMonitor(self.memory_budget)
+        cls = ProcessWorkerPool if (self.params.use_processes
+                                    and self.params.num_workers > 0) \
+            else ThreadWorkerPool
+        pool = cls(self.dataset, index_iter,
+                   num_workers=self.params.num_workers,
+                   prefetch_factor=self.params.prefetch_factor,
+                   monitor=monitor)
+        return pool, monitor
+
+    def host_batches(self, *, epoch: Optional[int] = None,
+                     num_batches: Optional[int] = None) -> Iterator:
+        """Host-side numpy batches (one epoch, or the stateful stream)."""
+        idx_iter = self.sampler.epoch_iter(epoch) if epoch is not None \
+            else iter(self.sampler)
+        if num_batches is not None:
+            idx_iter = _take(idx_iter, num_batches)
+        pool, _monitor = self._pool(idx_iter)
+        return iter(pool)
+
+    def __iter__(self):
+        """Device-side batches (stateful stream, prefetched)."""
+        host = self.host_batches()
+        return iter(DevicePrefetcher(host, depth=self.params.device_prefetch,
+                                     sharding=self.sharding))
+
+    # ---- the DPT objective ---------------------------------------------------
+    def measure_transfer_time(self, num_batches: int, *,
+                              epoch: int = 0,
+                              to_device: bool = True) -> TransferStats:
+        """Wall-clock time to deliver ``num_batches`` (storage->host[->HBM]).
+
+        Raises MemoryOverflow through TransferStats.overflowed=True so
+        Algorithm 1's inner-loop break can act on it.
+        """
+        # static pre-check (the paper's N/A cells fail before running)
+        if self.memory_budget is not None:
+            probe = self.dataset.get_batch(
+                self.sampler.local_indices(epoch, 0)[:1])
+            est_batch = batch_nbytes(probe) * self.sampler.local_batch
+            est = estimate_loader_footprint(
+                est_batch, self.params.num_workers,
+                self.params.prefetch_factor, self.params.device_prefetch)
+            if est > self.memory_budget.loader_bytes * 4:
+                return TransferStats(float("inf"), 0, 0, overflowed=True)
+
+        idx_iter = _take(self.sampler.epoch_iter(epoch), num_batches)
+        pool, monitor = self._pool(idx_iter)
+        total_bytes = 0
+        n = 0
+
+        def _counted(it):
+            nonlocal total_bytes
+            for b in it:
+                total_bytes += batch_nbytes(b)
+                yield b
+
+        start = time.perf_counter()
+        try:
+            it = _counted(iter(pool))
+            if to_device:
+                it = iter(DevicePrefetcher(
+                    it, depth=self.params.device_prefetch,
+                    sharding=self.sharding))
+            for _batch in it:
+                n += 1
+        except MemoryOverflow:
+            pool.shutdown()
+            return TransferStats(float("inf"), n, total_bytes,
+                                 overflowed=True,
+                                 peak_loader_bytes=monitor.peak)
+        elapsed = time.perf_counter() - start
+        return TransferStats(elapsed, n, total_bytes,
+                             peak_loader_bytes=monitor.peak)
+
+
+def _take(it, n):
+    for i, x in enumerate(it):
+        if i >= n:
+            return
+        yield x

@@ -1,0 +1,91 @@
+"""Deterministic, checkpointable, host-sharded batch sampler.
+
+Multi-pod semantics: every host sees the same global permutation (seeded by
+(seed, epoch)) and takes a strided shard of each global batch, so the fleet
+consumes a consistent global batch without coordination.  The sampler state
+(epoch, offset) is part of the training checkpoint — restart resumes the
+data stream exactly (fault-tolerance requirement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SamplerState:
+    epoch: int = 0
+    batch_offset: int = 0
+
+    def to_dict(self):
+        return {"epoch": self.epoch, "batch_offset": self.batch_offset}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(epoch=int(d["epoch"]), batch_offset=int(d["batch_offset"]))
+
+    def advanced(self, n: int, batches_per_epoch: int) -> "SamplerState":
+        """State after consuming n more batches.  Checkpoints must record
+        the CONSUMER's position, not the producer's (workers + prefetch run
+        ahead of the train loop)."""
+        total = self.epoch * batches_per_epoch + self.batch_offset + n
+        return SamplerState(total // batches_per_epoch,
+                            total % batches_per_epoch)
+
+
+class ShardedSampler:
+    def __init__(self, num_items: int, global_batch: int, *,
+                 shuffle: bool = True, seed: int = 0, drop_last: bool = True,
+                 host_index: int = 0, host_count: int = 1,
+                 state: Optional[SamplerState] = None):
+        if global_batch % host_count:
+            raise ValueError(
+                f"global_batch {global_batch} not divisible by host_count "
+                f"{host_count}")
+        self.num_items = num_items
+        self.global_batch = global_batch
+        self.local_batch = global_batch // host_count
+        self.shuffle = shuffle
+        self.seed = seed
+        self.drop_last = drop_last
+        self.host_index = host_index
+        self.host_count = host_count
+        self.state = state or SamplerState()
+
+    def batches_per_epoch(self) -> int:
+        if self.drop_last:
+            return self.num_items // self.global_batch
+        return -(-self.num_items // self.global_batch)
+
+    def _epoch_perm(self, epoch: int) -> np.ndarray:
+        if not self.shuffle:
+            return np.arange(self.num_items)
+        rng = np.random.default_rng((self.seed, epoch))
+        return rng.permutation(self.num_items)
+
+    def local_indices(self, epoch: int, batch: int) -> np.ndarray:
+        """This host's slice of global batch ``batch`` in ``epoch``."""
+        perm = self._epoch_perm(epoch)
+        start = batch * self.global_batch
+        glob = perm[start:start + self.global_batch]
+        if len(glob) < self.global_batch and not self.drop_last:
+            glob = np.concatenate([glob, perm[:self.global_batch - len(glob)]])
+        return glob[self.host_index::self.host_count]
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        while True:
+            n = self.batches_per_epoch()
+            while self.state.batch_offset < n:
+                b = self.state.batch_offset
+                self.state.batch_offset += 1
+                yield self.local_indices(self.state.epoch, b)
+            self.state.epoch += 1
+            self.state.batch_offset = 0
+
+    def epoch_iter(self, epoch: Optional[int] = None) -> Iterator[np.ndarray]:
+        """One epoch, non-stateful (used by DPT trials)."""
+        e = self.state.epoch if epoch is None else epoch
+        for b in range(self.batches_per_epoch()):
+            yield self.local_indices(e, b)

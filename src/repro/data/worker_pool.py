@@ -1,0 +1,143 @@
+"""Worker pools: the parallel fetch+transform lanes that DPT's nWorker tunes.
+
+``ThreadWorkerPool`` is the default (DESIGN.md: numpy/IO transforms release
+the GIL, and TPU hosts run one Python process per host — threads are the
+idiomatic JAX-host analogue of PyTorch's forked dataloader workers).
+``ProcessWorkerPool`` is the fallback for GIL-heavy transforms.
+
+Backpressure implements PyTorch ``prefetch_factor`` semantics: at most
+``num_workers * prefetch_factor`` finished batches may be queued; workers
+block (stop consuming memory) when the consumer lags.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+from repro.core.monitor import MemoryMonitor, MemoryOverflow
+
+_SENTINEL = object()
+
+
+def batch_nbytes(batch) -> int:
+    if isinstance(batch, dict):
+        return int(sum(np.asarray(v).nbytes for v in batch.values()))
+    return int(np.asarray(batch).nbytes)
+
+
+class ThreadWorkerPool:
+    """Pulls index-batches from ``index_iter``, emits collated batches."""
+
+    def __init__(self, dataset, index_iter: Iterator[np.ndarray], *,
+                 num_workers: int, prefetch_factor: int = 2,
+                 monitor: Optional[MemoryMonitor] = None):
+        self.dataset = dataset
+        self.num_workers = max(0, num_workers)
+        self.prefetch_factor = max(1, prefetch_factor)
+        self.monitor = monitor or MemoryMonitor()
+        self._index_iter = iter(index_iter)
+        self._iter_lock = threading.Lock()
+        self._error: Optional[BaseException] = None
+        self._stop = threading.Event()
+
+        if self.num_workers == 0:
+            self._queue = None
+            self._threads = []
+            return
+        depth = self.num_workers * self.prefetch_factor
+        self._queue: queue.Queue = queue.Queue(maxsize=depth)
+        self._live = self.num_workers
+        self._live_lock = threading.Lock()
+        self._threads = [
+            threading.Thread(target=self._work, name=f"loader-worker-{i}",
+                             daemon=True)
+            for i in range(self.num_workers)]
+        for t in self._threads:
+            t.start()
+
+    # ---- worker body -------------------------------------------------------
+    def _next_indices(self):
+        with self._iter_lock:
+            return next(self._index_iter)
+
+    def _work(self):
+        try:
+            while not self._stop.is_set():
+                try:
+                    idx = self._next_indices()
+                except StopIteration:
+                    break
+                batch = self.dataset.get_batch(idx)
+                nbytes = batch_nbytes(batch)
+                self.monitor.reserve(nbytes)
+                self._queue.put((batch, nbytes))
+        except BaseException as e:  # noqa: BLE001 - surfaced to consumer
+            self._error = e
+        finally:
+            with self._live_lock:
+                self._live -= 1
+                if self._live == 0:
+                    self._queue.put(_SENTINEL)
+
+    # ---- consumer side -----------------------------------------------------
+    def __iter__(self):
+        if self.num_workers == 0:
+            for idx in self._index_iter:
+                yield self.dataset.get_batch(idx)
+            return
+        while True:
+            item = self._queue.get()
+            if item is _SENTINEL:
+                if self._error is not None:
+                    raise self._error
+                return
+            batch, nbytes = item
+            self.monitor.release(nbytes)
+            if self._error is not None:
+                self.shutdown()
+                raise self._error
+            yield batch
+
+    def shutdown(self):
+        self._stop.set()
+        if self._queue is not None:
+            try:
+                while True:
+                    item = self._queue.get_nowait()
+                    if item is not _SENTINEL:
+                        self.monitor.release(item[1])
+            except queue.Empty:
+                pass
+
+
+class ProcessWorkerPool:
+    """Process-based fallback (GIL-heavy transforms).  Uses a fork pool and
+    chunked imap; heavier per-batch overhead, same interface."""
+
+    def __init__(self, dataset, index_iter, *, num_workers: int,
+                 prefetch_factor: int = 2,
+                 monitor: Optional[MemoryMonitor] = None):
+        import multiprocessing as mp
+        self.dataset = dataset
+        self.monitor = monitor or MemoryMonitor()
+        self._indices = index_iter
+        self.num_workers = max(1, num_workers)
+        self.prefetch_factor = max(1, prefetch_factor)
+        self._pool = mp.get_context("fork").Pool(self.num_workers)
+
+    def __iter__(self):
+        try:
+            for batch in self._pool.imap(
+                    self.dataset.get_batch, self._indices,
+                    chunksize=1):
+                self.monitor.reserve(batch_nbytes(batch))
+                self.monitor.release(batch_nbytes(batch))
+                yield batch
+        finally:
+            self.shutdown()
+
+    def shutdown(self):
+        self._pool.terminate()

@@ -1,0 +1,229 @@
+"""Explicit (manual) data parallelism for the train step.
+
+Why: under plain pjit the microbatch accumulation loop re-pays every DP
+collective per microbatch — the v0 dry-run showed per-layer-per-microbatch
+f32 weight all-gathers (FSDP re-gather) and weight-grad all-reduces (480x
+per step on yi-34b; EXPERIMENTS.md §Perf).  Wrapping the loop in
+``shard_map`` over the batch axes makes the DP communication explicit:
+
+* FSDP params (dims sharded over the data axis) are all-gathered in **bf16**
+  at use (per layer inside the scan); the gather's transpose is a bf16
+  psum_scatter — the *minimal* per-microbatch communication;
+* every other leaf's grad is accumulated locally and psum'ed ONCE per step
+  (deferred DP sync), not once per microbatch;
+* the 'model' mesh axis stays in auto (GSPMD) mode, so the tensor-parallel
+  annotations inside the layers keep working unchanged.
+
+``sharding_rules.ShardingCtx.manual_region`` makes ``constrain`` ignore the
+manual axes while tracing inside the region.
+
+Divisibility contract: inside the region local shapes can't distinguish "dim
+was divided" from "dim was dropped (replicated)", so the gather plan is
+rule-based and ``validate_manual_divisibility`` asserts at build time that
+every manual-mapped param dim divides cleanly (true for all 10 assigned
+archs; a violating config falls back to the legacy pjit step).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding_rules import ShardingCtx, current_ctx
+
+MANUAL_CANDIDATES = ("pod", "data")     # batch-parallel mesh axes
+
+
+def manual_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in MANUAL_CANDIDATES if a in mesh.shape)
+
+
+def manual_size(mesh) -> int:
+    n = 1
+    for a in manual_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _is_axes_leaf(t):
+    return isinstance(t, tuple) and all(a is None or isinstance(a, str)
+                                        for a in t)
+
+
+def rule_manual_dims(ctx: ShardingCtx, axes, manual
+                     ) -> Dict[int, Tuple[str, ...]]:
+    """dim -> manual mesh axes that shard it per the rules (axis used once,
+    first dim wins — mirrors ``ShardingCtx.partition_spec`` ordering)."""
+    out: Dict[int, Tuple[str, ...]] = {}
+    used = set()
+    for i, name in enumerate(axes):
+        mesh_ax = ctx.mesh_axes_for(name, include_manual=True)
+        m = tuple(a for a in mesh_ax if a in manual and a not in used)
+        if m:
+            out[i] = m
+            used.update(m)
+    return out
+
+
+def validate_manual_divisibility(ctx: ShardingCtx, axes_tree, abstract_tree,
+                                 manual) -> bool:
+    """True iff every manual-mapped param dim divides cleanly on the GLOBAL
+    shapes (so rule-based gathers inside the region are unambiguous)."""
+    ok = [True]
+
+    def one(ax, ab):
+        for i, m in rule_manual_dims(ctx, ax, manual).items():
+            n = 1
+            for a in m:
+                n *= ctx.mesh.shape[a]
+            if ab.shape[i] % n:
+                ok[0] = False
+
+    jax.tree_util.tree_map(one, axes_tree, abstract_tree,
+                           is_leaf=_is_axes_leaf)
+    return ok[0]
+
+
+def manual_pspec(ctx: ShardingCtx, axes, manual, ndim: int) -> P:
+    """PartitionSpec restricted to manual axes (shard_map in/out specs)."""
+    dims = rule_manual_dims(ctx, axes, manual)
+    entries: list = []
+    for i in range(ndim):
+        m = dims.get(i, ())
+        entries.append(m[0] if len(m) == 1 else (tuple(m) or None))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_manual_specs(ctx: ShardingCtx, axes_tree, abstract_tree, manual):
+    return jax.tree_util.tree_map(
+        lambda ax, ab: manual_pspec(ctx, ax, manual, len(ab.shape)),
+        axes_tree, abstract_tree, is_leaf=_is_axes_leaf)
+
+
+def gather_leaf(x, dims: Dict[int, Tuple[str, ...]], *,
+                dtype: Optional[Any] = None,
+                auto_entries: Optional[Sequence] = None,
+                wrap_axes: Tuple[str, ...] = ()):
+    """all_gather a leaf's manual-sharded dims (optionally casting first, so
+    FSDP gathers move bf16 not f32 — half the wire bytes; the cast's
+    transpose restores an f32 shard cotangent).
+
+    The gather always runs inside a fully-manual inner shard_map over the
+    remaining auto axes: differentiating a convert feeding an all_gather
+    under a PARTIAL-manual mesh crashes the XLA SPMD partitioner ("Invalid
+    binary instruction opcode copy" — minimal repro in
+    tests/test_distributed.py); with every mesh axis manual around the
+    collective the mixed-mode transpose never forms.  ``auto_entries``
+    carries the leaf's own TP sharding into the wrap; ``wrap_axes`` supplies
+    a throwaway auto axis for leaves with none.  If the mesh has no auto
+    axis at all, gather f32 and cast after (the known-safe order)."""
+    if not dims:
+        return x if dtype is None else x.astype(dtype)
+
+    def ag(t):
+        for dim, axes in sorted(dims.items()):
+            for a in reversed(axes):
+                t = jax.lax.all_gather(t, a, axis=dim, tiled=True)
+        return t
+
+    auto_used = tuple(a for e in (auto_entries or ())
+                      for a in ((e,) if isinstance(e, str) else (e or ())))
+    if not auto_used and dtype is not None and not wrap_axes:
+        return ag(x).astype(dtype)          # no auto axis: safe order
+    if dtype is not None and x.dtype != dtype:
+        x = x.astype(dtype)
+    if not auto_used and not wrap_axes:
+        return ag(x)
+    names = set(auto_used) or {wrap_axes[0]}
+    spec = P(*auto_entries) if auto_entries else P()
+    return jax.shard_map(ag, in_specs=(spec,), out_specs=spec,
+                         axis_names=names, check_vma=False)(x)
+
+
+def _auto_entries(ctx, ax, shape, manual):
+    """Per-dim AUTO mesh axes actually sharding this leaf (rule + dim
+    divisibility on the body-visible shape — auto dims are global there)."""
+    entries = []
+    used: set = set()
+    any_used = False
+    for i, name in enumerate(ax):
+        axes = tuple(a for a in ctx.mesh_axes_for(name, include_manual=True)
+                     if a not in manual and a not in used)
+        kept = []
+        n = 1
+        for a in axes:
+            sz = ctx.mesh.shape[a]
+            if shape[i] % (n * sz) == 0:
+                kept.append(a)
+                n *= sz
+        used.update(kept)
+        any_used = any_used or bool(kept)
+        entries.append(kept[0] if len(kept) == 1 else (tuple(kept) or None))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return entries if any_used else None
+
+
+def _gather_tree(tree, axes_tree, ctx, manual, *, skip_layers_dim: bool,
+                 compute_dtype):
+    wrap_axes = tuple(a for a in ctx.mesh.shape if a not in manual)
+
+    def one(ax, x):
+        if skip_layers_dim and ax and ax[0] == "layers":
+            return x                      # per-layer hook handles these
+        dims = rule_manual_dims(ctx, ax, manual)
+        if not dims:
+            return x
+        dt = compute_dtype if x.ndim >= 2 else None   # 1D: keep f32
+        return gather_leaf(x, dims, dtype=dt,
+                           auto_entries=_auto_entries(ctx, ax, x.shape,
+                                                      manual),
+                           wrap_axes=wrap_axes)
+
+    return jax.tree_util.tree_map(one, axes_tree, tree, is_leaf=_is_axes_leaf)
+
+
+def gather_params(params, axes_tree, *, compute_dtype=jnp.bfloat16):
+    """Gather manual-sharded dims of every NON-stacked leaf (stacked leaves
+    — leading logical axis 'layers' — are gathered per layer inside the scan
+    by ``layer_hook``).  No-op outside a manual region."""
+    ctx = current_ctx()
+    if ctx is None or not ctx.manual:
+        return params
+    return _gather_tree(params, axes_tree, ctx, ctx.manual,
+                        skip_layers_dim=True, compute_dtype=compute_dtype)
+
+
+def layer_hook(axes_tree, *, compute_dtype=jnp.bfloat16):
+    """Per-layer FSDP gather for ``stack.run_stack``: gathers the scanned
+    per-layer param slice's manual-sharded dims (bf16 for 2D+ leaves).
+    ``axes_tree`` is the per-layer (unstacked) logical-axes tree."""
+    def hook(p_layer):
+        ctx = current_ctx()
+        if ctx is None or not ctx.manual:
+            return p_layer
+        return _gather_tree(p_layer, axes_tree, ctx, ctx.manual,
+                            skip_layers_dim=False,
+                            compute_dtype=compute_dtype)
+    return hook
+
+
+def deferred_psum(grads, axes_tree, ctx: ShardingCtx, manual, scale):
+    """One-per-step DP gradient sync.  Leaves with a manual-sharded dim were
+    already reduced over those axes by the FSDP gather's psum_scatter
+    transpose; they (and everything else) still need the psum over the
+    REMAINING manual axes (e.g. 'pod' when only 'data' shards them)."""
+    def one(ax, g):
+        dims = rule_manual_dims(ctx, ax, manual)
+        used = set(a for axes in dims.values() for a in axes)
+        rest = tuple(a for a in manual if a not in used)
+        if rest:
+            g = jax.lax.psum(g, rest)
+        return g * scale
+
+    return jax.tree_util.tree_map(one, axes_tree, grads,
+                                  is_leaf=_is_axes_leaf)

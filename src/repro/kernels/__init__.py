@@ -1,0 +1,2 @@
+from repro.kernels import ops  # noqa: F401
+from repro.kernels import ref  # noqa: F401

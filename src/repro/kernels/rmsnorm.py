@@ -1,0 +1,129 @@
+"""Fused RMSNorm Pallas TPU kernel (optionally fused residual add).
+
+One VMEM round-trip instead of three (square/mean, rsqrt-scale, residual):
+rows are tiled (block_rows x d) so the working set stays in VMEM; the
+reduction and scale run in fp32 on the VPU and the result is written back in
+the input dtype.  Oracle: ``ref.rmsnorm``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                               getattr(pltpu, "TPUCompilerParams", None))
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _COMPILER_PARAMS = None
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps: float, d: int):
+    x = x_ref[...].astype(jnp.float32)
+    # padded tail columns contribute zeros; divide by true d
+    var = jnp.sum(x * x, axis=-1, keepdims=True) / d
+    y = x * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _kernel_residual(x_ref, res_ref, scale_ref, o_ref, newres_ref, *,
+                     eps: float, d: int):
+    x = x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
+    newres_ref[...] = x.astype(newres_ref.dtype)
+    var = jnp.sum(x * x, axis=-1, keepdims=True) / d
+    y = x * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    """x: (..., d); scale: (d,).  Returns rmsnorm(x) * scale."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, max(rows, 1))
+    pad_rows = (-rows) % block_rows
+    pad_d = (-d) % 128
+    if pad_rows or pad_d:
+        x2 = jnp.pad(x2, ((0, pad_rows), (0, pad_d)))
+    scale_p = jnp.pad(scale, (0, pad_d)) if pad_d else scale
+    R, Dp = x2.shape
+    grid = (R // block_rows,)
+
+    params = {}
+    if _COMPILER_PARAMS is not None and not interpret:
+        params["compiler_params"] = _COMPILER_PARAMS(
+            dimension_semantics=("parallel",))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((Dp,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, Dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, Dp), x.dtype),
+        interpret=interpret,
+        **params,
+    )(x2, scale_p)
+    return out[:rows, :d].reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_residual(x, residual, scale, *, eps: float = 1e-6,
+                     block_rows: int = 256, interpret: bool = False):
+    """Fused (x + residual) -> new_residual, rmsnorm(new_residual) * scale.
+
+    Returns (normed, new_residual)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    r2 = residual.reshape(rows, d)
+    block_rows = min(block_rows, max(rows, 1))
+    pad_rows = (-rows) % block_rows
+    pad_d = (-d) % 128
+    if pad_rows or pad_d:
+        x2 = jnp.pad(x2, ((0, pad_rows), (0, pad_d)))
+        r2 = jnp.pad(r2, ((0, pad_rows), (0, pad_d)))
+    scale_p = jnp.pad(scale, (0, pad_d)) if pad_d else scale
+    R, Dp = x2.shape
+
+    params = {}
+    if _COMPILER_PARAMS is not None and not interpret:
+        params["compiler_params"] = _COMPILER_PARAMS(
+            dimension_semantics=("parallel",))
+
+    normed, newres = pl.pallas_call(
+        functools.partial(_kernel_residual, eps=eps, d=d),
+        grid=(R // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((Dp,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, Dp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, Dp), x.dtype),
+            jax.ShapeDtypeStruct((R, Dp), x.dtype),
+        ],
+        interpret=interpret,
+        **params,
+    )(x2, r2, scale_p)
+    return (normed[:rows, :d].reshape(orig_shape),
+            newres[:rows, :d].reshape(orig_shape))

@@ -1,0 +1,119 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (paper: arXiv 2405.21060, GPU Triton
+kernels): the sequence is split into chunks; within a chunk the dual
+(quadratic, MXU-friendly) form computes the causal-decay-masked C B^T x
+contribution as two small matmuls, and the recurrent inter-chunk state is
+carried in VMEM scratch across the innermost grid dimension (TPU grids are
+sequential, so the (P x N) state simply persists between chunk steps — the
+TPU analogue of the GPU kernel's cross-CTA state passing).
+
+Grid: (batch, heads, num_chunks); the state scratch is reset at chunk 0.
+Oracles: ``ref.ssd_chunked`` (same chunked math) and ``ref.ssd_naive``
+(sequential recurrence ground truth).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                               getattr(pltpu, "TPUCompilerParams", None))
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _COMPILER_PARAMS = None
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_scr):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (c, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (c,)
+    a = a_ref[0].astype(jnp.float32)           # scalar ()
+    bm = b_ref[0, 0].astype(jnp.float32)       # (c, n)
+    cm = c_ref[0, 0].astype(jnp.float32)       # (c, n)
+
+    da = dt * a                                # (c,)
+    cum = jnp.cumsum(da)                       # inclusive
+    total = cum[-1]
+    c_len = x.shape[0]
+
+    li = cum[:, None]
+    lj = cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 1)
+    L = jnp.where(jj <= ii, jnp.exp(li - lj), 0.0)          # (c, c)
+
+    xdt = x * dt[:, None]                                   # (c, p)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * L
+    y_intra = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                                  # (p, n)
+    c_exp = cm * jnp.exp(cum)[:, None]                      # (c, n)
+    y_inter = jax.lax.dot_general(c_exp, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    tail = jnp.exp(total - cum)                             # (c,)
+    new_state = jax.lax.dot_general(xdt, bm * tail[:, None],
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(total) + new_state
+
+    o_ref[0, 0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = False):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, g, n), h % g == 0.
+    Returns y: (b, s, h, p).  Sequence length must be a multiple of ``chunk``
+    (the wrapper in ops.py pads).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    group = h // g
+
+    xt = jnp.moveaxis(x, 2, 1)                 # (b, h, s, p)
+    dtt = jnp.moveaxis(dt, 2, 1)               # (b, h, s)
+    bt = jnp.moveaxis(B, 2, 1)                 # (b, g, s, n)
+    ct = jnp.moveaxis(C, 2, 1)
+
+    params = {}
+    if _COMPILER_PARAMS is not None and not interpret:
+        params["compiler_params"] = _COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda ib, ih, ic: (ib, ih, ic)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda ib, ih, ic: (ib, ih // group, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda ib, ih, ic: (ib, ih // group, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda ib, ih, ic: (ib, ih, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+        **params,
+    )(xt, dtt, A, bt, ct)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Topology: TPU v5e pods, 16x16 = 256 chips per pod; multi-pod = 2 pods (512
+chips) with a leading "pod" axis (DCI-connected; pure data parallelism
+crosses pods, model parallelism never does).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Smoke-scale mesh from whatever devices exist (tests: 1 or 8 CPU
+    devices)."""
+    n = jax.device_count()
+    assert n % model_axis == 0, (n, model_axis)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,107 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen2-0.5b ...``
+
+Wires together everything the framework provides: config registry (--arch
+selects any of the 10 assigned architectures, reduced or full), the
+DPT-autotuned data pipeline, the jit'd train step, checkpoint/restart and
+the straggler/retune hooks.  On a real fleet each host runs this entry
+point under the cluster launcher (GKE/xmanager); jax.distributed handles
+cross-host init — on this container it runs single-process.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--no-autotune", action="store_true")
+    ap.add_argument("--dpt-cache", default=None)
+    ap.add_argument("--num-items", type=int, default=2048)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "nothing", "full"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.data import DataLoader, LoaderParams, token_dataset
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_step import TrainStepConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+
+    if cfg.family in ("vlm", "encdec"):
+        # modality stubs: wrap the token dataset with stub frontends
+        from repro.data.dataset import Dataset, ArrayStorage
+        import numpy as np
+        rng = np.random.default_rng(args.seed)
+        items = [rng.integers(0, cfg.vocab_size,
+                              (args.seq_len + 1,)).astype(np.int32)
+                 for _ in range(args.num_items)]
+
+        def transform(arr):
+            out = {"tokens": arr[:-1], "targets": arr[1:],
+                   "loss_mask": np.ones(args.seq_len, np.float32)}
+            if cfg.num_patches:
+                out["patch_embeds"] = rng.normal(
+                    0, 1, (cfg.num_patches, cfg.patch_embed_dim)
+                ).astype(np.float32)
+            if cfg.encoder_layers:
+                out["frames"] = rng.normal(
+                    0, 1, (cfg.max_source_positions, cfg.d_model)
+                ).astype(np.float32)
+            return out
+
+        ds = Dataset(ArrayStorage(items), transform=transform)
+    else:
+        ds = token_dataset(args.num_items, args.seq_len, cfg.vocab_size,
+                           seed=args.seed)
+
+    loader = DataLoader(ds, args.global_batch,
+                        params=LoaderParams(num_workers=2),
+                        seed=args.seed,
+                        host_index=jax.process_index(),
+                        host_count=jax.process_count())
+
+    tc = TrainerConfig(
+        total_steps=args.steps,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        autotune=not args.no_autotune,
+        dpt_cache_path=args.dpt_cache,
+        seed=args.seed,
+        step_config=TrainStepConfig(
+            remat_policy=args.remat,
+            microbatches=args.microbatches,
+            compress_grads=args.compress_grads,
+            optimizer=AdamWConfig(peak_lr=args.lr,
+                                  total_steps=args.steps,
+                                  warmup_steps=max(2, args.steps // 20))),
+    )
+    trainer = Trainer(model, loader, tc)
+    result = trainer.run()
+    print(json.dumps(result, default=float))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,91 @@
+"""Parameter-spec based module system.
+
+Models declare their parameters as pytrees of ``ParamSpec`` (shape, dtype,
+logical axes, initializer).  From one spec tree we derive:
+
+* real parameters (``init_params`` — smoke tests / examples),
+* abstract parameters (``abstract_params`` — the multi-pod dry-run lowers
+  against ``ShapeDtypeStruct`` so nothing is ever allocated),
+* sharding trees (``repro.distributed.sharding_rules`` maps logical axes to
+  mesh axes).
+
+This keeps "what the parameter is" and "how it is sharded" in one place,
+which is what makes 40 (arch x shape) dry-run cells tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"                     # normal | zeros | ones | embed
+    scale: Optional[float] = None            # stddev override
+    fan_in_dims: Tuple[int, ...] = (0,)      # dims treated as fan-in for scale
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"ParamSpec rank mismatch: shape {self.shape} vs axes {self.axes}")
+
+    @property
+    def fan_in(self) -> int:
+        return int(np.prod([self.shape[d] for d in self.fan_in_dims])) or 1
+
+
+def spec(shape, axes, init="normal", scale=None, dtype=jnp.float32,
+         fan_in_dims=(0,)) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), dtype, init, scale, fan_in_dims)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(key, s: ParamSpec):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    std = s.scale if s.scale is not None else 1.0 / np.sqrt(s.fan_in)
+    if s.init == "embed":
+        std = s.scale if s.scale is not None else 1.0
+    return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+
+
+def init_params(specs, rng):
+    """Materialize real parameters from a spec tree (smoke scale only)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree — no allocation; used by the dry-run."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    """Tree of logical-axis tuples, parallel to the param tree."""
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stacked(s: ParamSpec, num_layers: int) -> ParamSpec:
+    """Stack a per-layer spec along a leading 'layers' (scan) axis."""
+    return ParamSpec((num_layers,) + s.shape, ("layers",) + s.axes, s.dtype,
+                     s.init, s.scale, tuple(d + 1 for d in s.fan_in_dims))
+
+
+def stack_specs(tree, num_layers: int):
+    return jax.tree_util.tree_map(lambda s: stacked(s, num_layers), tree,
+                                  is_leaf=is_spec)

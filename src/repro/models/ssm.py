@@ -1,0 +1,137 @@
+"""Mamba2 (SSD) mixer: projections + causal depthwise conv + chunked SSD
+scan, with a single-token recurrent path for decode.
+
+Shapes follow the Mamba2 paper: inner width din = expand*d_model, nh =
+din/head_dim SSD heads, state (nh, head_dim, N) per sequence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding_rules import constrain
+from repro.kernels import ops
+from repro.models.layers import cast
+from repro.models.module import spec
+
+
+def ssm_specs(cfg: ModelConfig):
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, nh = cfg.ssm_num_groups, cfg.ssm_state_dim, cfg.ssm_num_heads
+    w = cfg.ssm_conv_width
+    conv_dim = din + 2 * g * n
+    return {
+        "in_x": spec((d, din), ("embed", "ssm_inner")),
+        "in_z": spec((d, din), ("embed", "ssm_inner")),
+        "in_B": spec((d, g * n), ("embed", "ssm_state")),
+        "in_C": spec((d, g * n), ("embed", "ssm_state")),
+        "in_dt": spec((d, nh), ("embed", "ssm_heads")),
+        "dt_bias": spec((nh,), ("ssm_heads",), init="zeros"),
+        "A_log": spec((nh,), ("ssm_heads",), init="zeros"),
+        "D": spec((nh,), ("ssm_heads",), init="ones"),
+        "conv_w": spec((w, conv_dim), (None, "ssm_inner"), scale=0.5,
+                       fan_in_dims=(0,)),
+        "conv_b": spec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "gate_norm": spec((din,), ("ssm_inner",), init="ones"),
+        "out": spec((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv1d.  u: (B,S,C); w: (W,C); b: (C,)."""
+    W = w.shape[0]
+    out = u * cast(w[-1])
+    for i in range(1, W):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :u.shape[1]]
+        out = out + shifted * cast(w[-1 - i])
+    return out + cast(b)
+
+
+def ssm_cache_shapes(cfg: ModelConfig, batch: int):
+    """Per-layer decode state shapes (stacked over layers by the stack)."""
+    din = cfg.d_inner
+    g, n = cfg.ssm_num_groups, cfg.ssm_state_dim
+    conv_dim = din + 2 * g * n
+    return {
+        "conv": ((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.bfloat16),
+        "state": ((batch, cfg.ssm_num_heads, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def _project(p, cfg: ModelConfig, x):
+    g, n = cfg.ssm_num_groups, cfg.ssm_state_dim
+    xs = jnp.einsum("bsd,de->bse", cast(x), cast(p["in_x"]))
+    z = jnp.einsum("bsd,de->bse", cast(x), cast(p["in_z"]))
+    Bm = jnp.einsum("bsd,de->bse", cast(x), cast(p["in_B"]))
+    Cm = jnp.einsum("bsd,de->bse", cast(x), cast(p["in_C"]))
+    dt = jnp.einsum("bsd,dh->bsh", cast(x), cast(p["in_dt"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return xs, z, Bm, Cm, dt
+
+
+def ssm(p, cfg: ModelConfig, x, *, return_state: bool = False):
+    """Full-sequence SSD.  x: (B,S,D) -> (B,S,D)."""
+    B, S, _ = x.shape
+    g, n, nh, hd = (cfg.ssm_num_groups, cfg.ssm_state_dim, cfg.ssm_num_heads,
+                    cfg.ssm_head_dim)
+    xs, z, Bm, Cm, dt = _project(p, cfg, x)
+    u_raw = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    u = jax.nn.silu(_causal_conv(u_raw, p["conv_w"], p["conv_b"]))
+    u = constrain(u, "batch", "seq", "ssm_inner_act")
+    xs, Bm, Cm = jnp.split(u, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+
+    xh = xs.reshape(B, S, nh, hd)
+    Bh = Bm.reshape(B, S, g, n)
+    Ch = Cm.reshape(B, S, g, n)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if return_state:
+        y, state = ops.ssd_prefill(xh, dt, A, Bh, Ch, chunk=cfg.ssm_chunk)
+    else:
+        y = ops.ssd(xh, dt, A, Bh, Ch, chunk=cfg.ssm_chunk)
+        state = None
+    y = y + xh * cast(p["D"])[None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    y = ops.rmsnorm(y, p["gate_norm"], eps=cfg.norm_eps)
+    y = constrain(y, "batch", "seq", "ssm_inner_act")
+    out = jnp.einsum("bse,ed->bsd", cast(y), cast(p["out"]))
+    out = constrain(out, "batch", "seq", "embed_act")
+    if return_state:
+        w = cfg.ssm_conv_width
+        conv_tail = u_raw[:, -(w - 1):].astype(jnp.bfloat16)
+        return out, {"conv": conv_tail, "state": state}
+    return out
+
+
+def ssm_decode(p, cfg: ModelConfig, x, cache):
+    """Single-token recurrence.  x: (B,1,D); cache from ssm_cache_shapes."""
+    B = x.shape[0]
+    g, n, nh, hd = (cfg.ssm_num_groups, cfg.ssm_state_dim, cfg.ssm_num_heads,
+                    cfg.ssm_head_dim)
+    xs, z, Bm, Cm, dt = _project(p, cfg, x)
+    u_new = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]       # (B, conv_dim)
+
+    conv_hist = cache["conv"]                                   # (B, W-1, C)
+    u_win = jnp.concatenate([conv_hist.astype(u_new.dtype),
+                             u_new[:, None]], axis=1)           # (B, W, C)
+    w = cast(p["conv_w"])                                       # (W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", u_win, w) + cast(p["conv_b"])
+    u = jax.nn.silu(conv_out)
+    new_conv = u_win[:, 1:].astype(cache["conv"].dtype)
+
+    xs1, Bm1, Cm1 = jnp.split(u, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    xh = xs1.reshape(B, nh, hd)
+    Bh = Bm1.reshape(B, g, n)
+    Ch = Cm1.reshape(B, g, n)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, new_state = ops.ssd_step(cache["state"], xh, dt[:, 0], A, Bh, Ch)
+    y = y + xh * cast(p["D"])[None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    y = ops.rmsnorm(y, p["gate_norm"], eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", cast(y), cast(p["out"]))
+    out = constrain(out, "batch", "seq", "embed_act")
+    return out, {"conv": new_conv, "state": new_state}

@@ -1,0 +1,121 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(assignment constants).
+
+Inputs are per-device (the analyzed module is the SPMD partition):
+
+    compute_s    = flops_per_device / PEAK_FLOPS
+    memory_s     = traffic_bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified: a
+5-iteration scanned matmul reports 1 iteration of flops), which undercounts
+scan-over-layers models by ~num_layers.  So flops/traffic/collective bytes
+are re-derived from the optimized HLO with loop trip-count weighting
+(roofline/hlo_parser.py); cost_analysis values are kept in the artifact as
+the body-once lower bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline.hlo_parser import HloAnalysis, analyze_module
+
+# --- hardware constants (TPU v5e per assignment) ----------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (assignment: ~50 GB/s/link)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float              # trip-weighted HLO dot flops
+    traffic_bytes_per_device: float      # post-fusion HBM traffic model
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, float]
+    collective_counts: Dict[str, int]
+    cost_flops_body_once: float          # raw cost_analysis (lower bound)
+    cost_bytes_body_once: float
+    hbm_per_device: float                # resident: args+temps+outputs
+    model_flops: float                   # analytic global FLOPs per step
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap lower bound on step time: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops x chips): <1 flags remat/redundant
+        compute; >1 flags padding of the analytic model (e.g. embeddings)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_s / step_s: 1.0 = compute-bound at the hardware peak."""
+        return self.compute_s / self.step_s if self.step_s else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, step_s=self.step_s,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS per step: 6*N_active*D train / 2*N_active*D
+    prefill / 2*N_active per generated token for decode."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch
+
+
+def build_report(*, arch: str, shape, mesh_name: str, chips: int,
+                 cost: Dict[str, float], mem, hlo_text: str,
+                 cfg) -> RooflineReport:
+    parsed: HloAnalysis = analyze_module(hlo_text)
+    cost_flops = float(cost.get("flops", 0.0))
+    cost_bytes = float(cost.get("bytes accessed", 0.0))
+    # dot-flops miss elementwise work; cost_analysis misses loop trips —
+    # take the max as the best per-device estimate.
+    flops = max(parsed.dot_flops, cost_flops)
+    traffic = max(parsed.traffic_bytes, cost_bytes)
+    hbm = float(mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + mem.output_size_in_bytes)
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops,
+        traffic_bytes_per_device=traffic,
+        collective_bytes_per_device=parsed.total_collective_bytes,
+        collective_breakdown=parsed.collective_bytes,
+        collective_counts=parsed.collective_counts,
+        cost_flops_body_once=cost_flops,
+        cost_bytes_body_once=cost_bytes,
+        hbm_per_device=hbm,
+        model_flops=model_flops_for(cfg, shape),
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=traffic / HBM_BW,
+        collective_s=parsed.total_collective_bytes / ICI_BW,
+    )

@@ -1,0 +1,169 @@
+"""Batched serving engine: prefill + jit'd decode loop with donated KV cache,
+plus a request-batching frontend.
+
+The decode step is the exact function the decode_* dry-run cells lower —
+one new token against a seq_len-sized cache — so what we roofline is what
+we serve.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray           # (B, <=max_new_tokens) generated ids
+    prefill_s: float
+    decode_s: float
+    steps: int
+
+    @property
+    def tokens_per_second(self) -> float:
+        n = self.tokens.shape[0] * self.steps
+        return n / self.decode_s if self.decode_s > 0 else 0.0
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_batch: int, max_len: int,
+                 temperature: float = 0.0, eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+
+        self._prefill = jax.jit(self.model.prefill)
+
+        def _decode(params, cache, tokens, positions):
+            logits, cache = self.model.decode_step(params, cache, tokens,
+                                                   positions)
+            return logits, cache
+
+        # donate the cache: decode updates it in place on device
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    def _sample(self, logits, rng):
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(rng, logits / self.temperature) \
+            .astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 *, seed: int = 0, extra_inputs: Optional[dict] = None
+                 ) -> GenerateResult:
+        """prompts: (B, S) int32, right-aligned (no padding support needed
+        for the fixed-shape engine: all prompts same length)."""
+        B, S = prompts.shape
+        assert B <= self.max_batch, (B, self.max_batch)
+        assert S + max_new_tokens <= self.max_len
+
+        cache = self.model.init_cache(B, self.max_len)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch, cache)
+        logits = jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        rng = jax.random.PRNGKey(seed)
+        tok = self._sample(logits, rng)
+        out = [np.asarray(tok)]
+        positions = jnp.full((B,), S, jnp.int32)
+        done = np.zeros(B, bool)
+
+        t1 = time.perf_counter()
+        steps = 0
+        for i in range(max_new_tokens - 1):
+            rng, sub = jax.random.split(rng)
+            logits, cache = self._decode(self.params, cache, tok[:, None],
+                                         positions)
+            tok = self._sample(logits, sub)
+            positions = positions + 1
+            steps += 1
+            host_tok = np.asarray(tok)
+            out.append(host_tok)
+            if self.eos_id is not None:
+                done |= host_tok == self.eos_id
+                if done.all():
+                    break
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t1
+        return GenerateResult(np.stack(out, axis=1), t_prefill, t_decode,
+                              steps + 1)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int
+    result: "queue.Queue" = dataclasses.field(
+        default_factory=lambda: queue.Queue(maxsize=1))
+
+
+class BatchingFrontend:
+    """Collects requests into batches (size- or timeout-triggered) and runs
+    them through the engine — the 'serve a small model with batched
+    requests' driver."""
+
+    def __init__(self, engine: ServeEngine, *, max_wait_s: float = 0.01):
+        self.engine = engine
+        self.max_wait_s = max_wait_s
+        self._queue: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self.batches_served = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
+        req = Request(np.asarray(prompt, np.int32), max_new_tokens)
+        self._queue.put(req)
+        return req
+
+    def _drain_batch(self) -> List[Request]:
+        reqs: List[Request] = []
+        try:
+            reqs.append(self._queue.get(timeout=0.1))
+        except queue.Empty:
+            return reqs
+        deadline = time.perf_counter() + self.max_wait_s
+        while (len(reqs) < self.engine.max_batch
+               and time.perf_counter() < deadline):
+            try:
+                reqs.append(self._queue.get_nowait())
+            except queue.Empty:
+                time.sleep(0.001)
+        return reqs
+
+    def _run(self):
+        while not self._stop.is_set():
+            reqs = self._drain_batch()
+            if not reqs:
+                continue
+            # group by (prompt_len, max_new) to keep shapes static
+            by_shape = {}
+            for r in reqs:
+                by_shape.setdefault(
+                    (len(r.prompt), r.max_new_tokens), []).append(r)
+            for (_plen, max_new), group in by_shape.items():
+                prompts = np.stack([r.prompt for r in group])
+                res = self.engine.generate(prompts, max_new)
+                self.batches_served += 1
+                for i, r in enumerate(group):
+                    r.result.put(res.tokens[i])
+
+    def shutdown(self):
+        self._stop.set()
+        self._thread.join(timeout=5)

@@ -1,0 +1,182 @@
+"""Trainer: the end-to-end loop that makes DPT a first-class framework
+feature rather than an offline script.
+
+Startup:  restore latest checkpoint (step + sampler offset + loader params)
+          -> DPT-tune the loader (or reuse the cached result for this
+          machine/dataset fingerprint) -> jit the train step.
+Steady:   device-prefetched batches -> train step; per-step wall time feeds
+          the StragglerDetector; every ``checkpoint_every`` steps an async
+          checkpoint (params, opt state, sampler state, loader params).
+Drift:    if this host becomes a straggler (or loader throughput degrades
+          vs the tuned baseline), re-run DPT with a small budget — the
+          online re-tuning the paper's conclusion gestures at for clouds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.cache import DPTCache
+from repro.core.dpt import DPT, DPTConfig
+from repro.core.evaluators import LoaderEvaluator
+from repro.data.loader import DataLoader, LoaderParams
+from repro.data.prefetcher import DevicePrefetcher
+from repro.distributed.fault_tolerance import StragglerDetector
+from repro.train.train_step import (TrainState, TrainStepConfig,
+                                    init_train_state, make_train_step)
+from repro.utils.fingerprint import machine_fingerprint
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    log_every: int = 10
+    seed: int = 0
+    # DPT integration
+    autotune: bool = True
+    autotune_budget_batches: int = 8
+    autotune_max_prefetch: int = 4
+    retune_if_slowdown: float = 1.6    # loader throughput drift trigger
+    dpt_cache_path: Optional[str] = None
+    step_config: TrainStepConfig = dataclasses.field(
+        default_factory=TrainStepConfig)
+
+
+class Trainer:
+    def __init__(self, model, loader: DataLoader, cfg: TrainerConfig,
+                 *, host_name: str = "host0"):
+        self.model = model
+        self.loader = loader
+        self.cfg = cfg
+        self.host_name = host_name
+        self.checkpointer = Checkpointer(cfg.checkpoint_dir) \
+            if cfg.checkpoint_dir else None
+        self.straggler = StragglerDetector()
+        self.step_fn = jax.jit(make_train_step(model, cfg.step_config))
+        self.state: Optional[TrainState] = None
+        self.start_step = 0
+        self.tuned_transfer_s: Optional[float] = None
+        self.history: List[Dict[str, Any]] = []
+
+    # ---- DPT integration ----------------------------------------------------
+    def tune_loader(self, *, force: bool = False) -> LoaderParams:
+        cache = DPTCache(self.cfg.dpt_cache_path)
+        mfp = machine_fingerprint()
+        dfp = self.loader.dataset.fingerprint()
+        cached = None if force else cache.get(mfp, dfp,
+                                              self.loader.global_batch)
+        if cached is not None:
+            params = self.loader.params.replace(num_workers=cached[0],
+                                                prefetch_factor=cached[1])
+            self.loader.with_params(params)
+            return params
+        ev = LoaderEvaluator(self.loader, to_device=True)
+        dpt = DPT(ev, DPTConfig(
+            max_prefetch=self.cfg.autotune_max_prefetch,
+            num_batches=self.cfg.autotune_budget_batches))
+        result = dpt.run(measure_default=False)
+        cache.put(mfp, dfp, self.loader.global_batch, result)
+        params = self.loader.params.replace(
+            num_workers=result.nworker, prefetch_factor=result.nprefetch)
+        self.loader.with_params(params)
+        self.tuned_transfer_s = (result.optimal_time
+                                 / max(1, self.cfg.autotune_budget_batches))
+        return params
+
+    # ---- checkpoint/restart ---------------------------------------------------
+    def _maybe_restore(self) -> None:
+        if self.checkpointer is None or self.checkpointer.latest_step() is None:
+            self.state = init_train_state(
+                self.model, jax.random.PRNGKey(self.cfg.seed),
+                self.cfg.step_config)
+            return
+        template = init_train_state(
+            self.model, jax.random.PRNGKey(self.cfg.seed),
+            self.cfg.step_config)
+        self.state, aux = self.checkpointer.restore(template)
+        self.start_step = int(aux["step"])
+        if "loader" in aux:
+            self.loader.load_state_dict(aux["loader"])
+
+    def _consumed_state(self, step: int):
+        """Sampler state reflecting batches the TRAINER consumed (one per
+        step) — the producer runs ahead by worker queues + device prefetch,
+        so loader.sampler.state would skip batches on restart."""
+        import dataclasses as _dc
+        bpe = self.loader.sampler.batches_per_epoch()
+        return self._stream_base.advanced(step - self._stream_base_step, bpe)
+
+    def _rebuild_stream(self, step: int):
+        """(Re)create the batch iterator from the consumed position."""
+        self.loader.sampler.state = self._consumed_state(step) \
+            if hasattr(self, "_stream_base") else self.loader.sampler.state
+        import copy
+        self._stream_base = copy.deepcopy(self.loader.sampler.state)
+        self._stream_base_step = step
+        return iter(self.loader)
+
+    def _save(self, step: int, block: bool = False) -> None:
+        if self.checkpointer is None:
+            return
+        sd = self.loader.state_dict()
+        sd["sampler"] = self._consumed_state(step).to_dict()
+        self.checkpointer.save(step, self.state, aux={"loader": sd},
+                               block=block)
+
+    # ---- main loop -----------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        self._maybe_restore()
+        if cfg.autotune:
+            self.tune_loader()
+
+        step = self.start_step
+        batches = self._rebuild_stream(step)
+        slow_strikes = 0
+        t_wall = time.perf_counter()
+        last_metrics: Dict[str, Any] = {}
+        while step < cfg.total_steps:
+            t0 = time.perf_counter()
+            try:
+                batch = next(batches)
+            except StopIteration:
+                batches = self._rebuild_stream(step)
+                batch = next(batches)
+            t_data = time.perf_counter() - t0
+            self.state, metrics = self.step_fn(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.straggler.record(self.host_name, dt)
+            step += 1
+
+            # loader-drift retune (paper §5: cloud environments drift)
+            if (cfg.autotune and self.tuned_transfer_s
+                    and t_data > cfg.retune_if_slowdown * self.tuned_transfer_s):
+                slow_strikes += 1
+                if slow_strikes >= 8:
+                    slow_strikes = 0
+                    self.tune_loader(force=True)
+                    batches = self._rebuild_stream(step)
+            else:
+                slow_strikes = max(0, slow_strikes - 1)
+
+            if step % cfg.log_every == 0 or step == cfg.total_steps:
+                rec = {"step": step,
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "lr": float(metrics["lr"]),
+                       "step_s": dt, "data_s": t_data}
+                self.history.append(rec)
+                last_metrics = rec
+            if self.checkpointer and step % cfg.checkpoint_every == 0:
+                self._save(step)
+        self._save(cfg.total_steps, block=True)
+        wall = time.perf_counter() - t_wall
+        return {"final_step": step, "wall_s": wall, **last_metrics}

@@ -1,0 +1,7 @@
+from repro.utils.tree import (  # noqa: F401
+    tree_bytes,
+    tree_count,
+    tree_map_with_path_str,
+    flatten_with_names,
+)
+from repro.utils.fingerprint import dataset_fingerprint, machine_fingerprint  # noqa: F401

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src layout import path (tests also run without `pip install -e .`)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Correctness suite: fp32 compute for deterministic comparisons.  Must be
+# set before any repro.models import.  (The dry-run/benchmarks use bf16.)
+os.environ.setdefault("REPRO_COMPUTE_DTYPE", "float32")

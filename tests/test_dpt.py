@@ -1,0 +1,187 @@
+"""DPT Algorithm 1 semantics + beyond-paper search strategies."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DPT, DPTConfig, LoaderSimulator, MachineProfile,
+                        MemoryOverflow, MultiHostDPT, SimulatorEvaluator,
+                        default_params)
+from repro.core.cache import DPTCache
+from repro.core.cluster import fleet_evaluators, make_fleet
+from repro.core.search import (coordinate_hillclimb, cost_model_warmstart,
+                               goodput_tune, successive_halving,
+                               tuned_with_warmstart)
+from repro.data.loader import TransferStats
+from repro.data.storage import StorageProfile, cifar10_profile
+
+
+class TableEvaluator:
+    """Deterministic synthetic objective with optional overflow cells."""
+
+    def __init__(self, fn, overflow=None):
+        self.fn = fn
+        self.overflow = overflow or (lambda i, j: False)
+        self.calls = []
+
+    def __call__(self, i, j, *, num_batches=16, epoch=0):
+        self.calls.append((i, j))
+        if self.overflow(i, j):
+            raise MemoryOverflow(f"cell ({i},{j})")
+        return TransferStats(self.fn(i, j), num_batches, 0)
+
+
+def test_algorithm1_visits_worker_multiples_of_G():
+    ev = TableEvaluator(lambda i, j: abs(i - 8) + 0.1 * abs(j - 3))
+    cfg = DPTConfig(num_cpu_cores=12, num_devices=4, max_prefetch=4,
+                    num_batches=4)
+    res = DPT(ev, cfg).run(measure_default=False)
+    workers = {i for i, _ in ev.calls}
+    assert workers == {4, 8, 12}          # G, 2G, 3G (i > N stops)
+    assert res.nworker == 8 and res.nprefetch == 3
+
+
+def test_algorithm1_finds_grid_argmin():
+    fn = lambda i, j: (i - 6) ** 2 + (j - 2) ** 2 + 1.0
+    ev = TableEvaluator(fn)
+    cfg = DPTConfig(num_cpu_cores=12, num_devices=1, max_prefetch=6,
+                    num_batches=4)
+    res = DPT(ev, cfg).run(measure_default=False)
+    assert (res.nworker, res.nprefetch) == (6, 2)
+    assert res.optimal_time == 1.0
+
+
+def test_memory_overflow_breaks_inner_loop():
+    """Paper Algorithm 1 lines 9-10: overflow -> break to next worker count."""
+    ev = TableEvaluator(lambda i, j: 10.0 - i + 0.1 * j,
+                        overflow=lambda i, j: j >= 3)
+    cfg = DPTConfig(num_cpu_cores=4, num_devices=1, max_prefetch=8,
+                    num_batches=4)
+    res = DPT(ev, cfg).run(measure_default=False)
+    # for every worker count, j stops at 3 (first overflow)
+    for i in range(1, 5):
+        js = [j for (w, j) in ev.calls if w == i]
+        assert js == [1, 2, 3]
+    assert res.nprefetch <= 2
+
+
+def test_default_params_match_pytorch_convention():
+    assert default_params(12) == (6, 2)
+
+
+def test_speedup_and_reduction_sign():
+    ev = TableEvaluator(lambda i, j: 2.0 if (i, j) != (4, 2) else 1.0)
+    cfg = DPTConfig(num_cpu_cores=4, num_devices=4, max_prefetch=2,
+                    num_batches=4)
+    res = DPT(ev, cfg).run(measure_default=True)
+    assert res.speedup_vs_default >= 1.0
+    assert res.time_reduction_pct <= 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 16), st.integers(1, 6))
+def test_algorithm1_never_beats_exhaustive_property(g, n, p):
+    """Property: Algorithm 1's optimum equals the exhaustive grid minimum
+    over its own search space."""
+    fn = lambda i, j: ((i * 7 + j * 13) % 11) + 1.0
+    ev = TableEvaluator(fn)
+    cfg = DPTConfig(num_cpu_cores=n, num_devices=g, max_prefetch=p,
+                    num_batches=2)
+    res = DPT(ev, cfg).run(measure_default=False)
+    # mirror Algorithm 1's loop exactly (it evaluates once even when G > N)
+    i_vals, i = [], 0
+    while i < n:
+        i += g
+        i_vals.append(i)
+    cells = [(i, j) for i in i_vals for j in range(1, p + 1)]
+    assert res.optimal_time == min(fn(i, j) for i, j in cells)
+
+
+# --------------------------------------------------------------------------
+# search strategies agree with the grid on the calibrated simulator
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sim_ev():
+    sim = LoaderSimulator(cifar10_profile(), MachineProfile())
+    return SimulatorEvaluator(sim, batch_size=32)
+
+
+CFG = DPTConfig(num_cpu_cores=12, num_devices=1, max_prefetch=8,
+                num_batches=64)
+
+
+def test_successive_halving_matches_grid(sim_ev):
+    grid = DPT(sim_ev, CFG).run(measure_default=False)
+    sh = successive_halving(sim_ev, config=CFG)
+    assert sh.optimal_time <= grid.optimal_time * 1.05
+
+
+def test_warmstart_hillclimb_matches_grid_with_fewer_calls(sim_ev):
+    grid = DPT(sim_ev, CFG).run(measure_default=False)
+    ev2 = SimulatorEvaluator(LoaderSimulator(cifar10_profile(),
+                                             MachineProfile()), batch_size=32)
+    hc = tuned_with_warmstart(ev2, cifar10_profile(), MachineProfile(),
+                              batch_size=32, config=CFG)
+    assert hc.optimal_time <= grid.optimal_time * 1.02
+    assert ev2.calls < len(grid.trials) / 4      # >=4x fewer measurements
+
+
+def test_goodput_uses_fewer_workers_when_model_is_slow(sim_ev):
+    fast = DPT(sim_ev, CFG).run(measure_default=False)
+    slow_model = goodput_tune(sim_ev, step_time_s=1.0, num_batches=64,
+                              config=CFG)
+    assert slow_model.nworker <= fast.nworker
+
+
+def test_cost_model_prediction_close_to_measured_optimum(sim_ev):
+    pred = cost_model_warmstart(cifar10_profile(), MachineProfile(),
+                                batch_size=32, config=CFG)
+    grid = DPT(sim_ev, CFG).run(measure_default=False)
+    assert abs(pred.nworker - grid.nworker) <= 2
+
+
+# --------------------------------------------------------------------------
+# multi-host
+# --------------------------------------------------------------------------
+def test_multihost_uniform_handles_straggler():
+    fleet = make_fleet(MachineProfile(), cifar10_profile(), num_hosts=4,
+                       slow_hosts=[1])
+    evs = fleet_evaluators(fleet, batch_size=32)
+    mh = MultiHostDPT(evs, CFG)
+    per_host = mh.run_per_host()
+    uniform = mh.run_uniform()
+    # fleet time is dictated by the straggler either way
+    assert uniform.fleet_time >= per_host.per_host[0].optimal_time
+    # uniform must be feasible on every host and not much worse than per-host
+    assert uniform.fleet_time <= per_host.fleet_time * 1.05
+
+
+def test_multihost_per_host_matches_independent_tuning():
+    fleet = make_fleet(MachineProfile(), cifar10_profile(), num_hosts=3)
+    evs = fleet_evaluators(fleet, batch_size=32)
+    res = MultiHostDPT(evs, CFG).run_per_host()
+    assert len(set(res.fleet_params)) == 1   # homogeneous hosts agree
+
+
+# --------------------------------------------------------------------------
+# result cache (paper §5 reuse claim)
+# --------------------------------------------------------------------------
+def test_cache_reuses_similar_datasets(tmp_path):
+    cache = DPTCache(str(tmp_path / "dpt.json"))
+    ev = TableEvaluator(lambda i, j: (i - 6) ** 2 + j)
+    cfg = DPTConfig(num_cpu_cores=8, num_devices=1, max_prefetch=3,
+                    num_batches=2)
+    res = DPT(ev, cfg).run(measure_default=False)
+    from repro.utils.fingerprint import dataset_fingerprint
+    fp_a = dataset_fingerprint(item_bytes=100_000, decode_cost=1e-8,
+                               num_items=50_000)
+    fp_similar = dataset_fingerprint(item_bytes=110_000, decode_cost=1e-8,
+                                     num_items=52_000)
+    fp_different = dataset_fingerprint(item_bytes=4_000_000, decode_cost=1e-8,
+                                       num_items=50_000)
+    cache.put("machine", fp_a, 32, res)
+    assert cache.get("machine", fp_similar, 32) == (res.nworker, res.nprefetch)
+    assert cache.get("machine", fp_different, 32) is None
+    # persisted
+    cache2 = DPTCache(str(tmp_path / "dpt.json"))
+    assert cache2.get("machine", fp_a, 32) == (res.nworker, res.nprefetch)

@@ -1,0 +1,197 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracles,
+swept over shapes/dtypes, plus hypothesis property tests on the oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+from repro.kernels.rmsnorm import rmsnorm_residual
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) \
+        .astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,T,H,K,D,causal,window",
+    [
+        (1, 32, 32, 4, 4, 16, True, 0),      # MHA causal
+        (2, 64, 64, 4, 2, 32, True, 0),      # GQA causal
+        (2, 48, 48, 6, 2, 16, False, 0),     # non-causal (encoder)
+        (1, 64, 64, 4, 1, 16, True, 20),     # sliding window, MQA
+        (2, 40, 40, 4, 4, 24, True, 0),      # non-pow2 seq + head_dim pad
+        (1, 128, 128, 8, 8, 64, True, 48),   # bigger window
+    ])
+def test_flash_matches_oracle(B, S, T, H, K, D, causal, window, dtype):
+    q = _rand(0, (B, S, H, D), dtype)
+    k = _rand(1, (B, T, K, D), dtype)
+    v = _rand(2, (B, T, K, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=16, block_k=16, interpret=True)
+    expect = ref.mha(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_block_shape_invariance():
+    q = _rand(0, (2, 64, 4, 32), jnp.float32)
+    k = _rand(1, (2, 64, 2, 32), jnp.float32)
+    v = _rand(2, (2, 64, 2, 32), jnp.float32)
+    outs = [flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                            interpret=True)
+            for bq, bk in [(8, 8), (16, 32), (64, 64), (32, 8)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_oracle_matches_full():
+    q = _rand(0, (2, 100, 4, 16), jnp.float32)
+    k = _rand(1, (2, 100, 2, 16), jnp.float32)
+    v = _rand(2, (2, 100, 2, 16), jnp.float32)
+    for window, sink in [(0, 0), (24, 0), (24, 4)]:
+        full = ref.mha(q, k, v, causal=True, window=window, num_sink=sink)
+        chunk = ref.mha_chunked(q, k, v, causal=True, window=window,
+                                num_sink=sink, block_q=32)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(chunk),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 24), st.integers(1, 4),
+       st.integers(0, 1), st.booleans())
+def test_attention_causality_property(b, s, k, g_extra, causal):
+    """Property: output at position i never depends on tokens > i (causal)."""
+    h = k * (1 + g_extra)
+    q = _rand(3, (b, s, h, 8), jnp.float32)
+    kk = _rand(4, (b, s, k, 8), jnp.float32)
+    v = _rand(5, (b, s, k, 8), jnp.float32)
+    out = ref.mha(q, kk, v, causal=causal)
+    if causal and s > 1:
+        # perturb the last token; all earlier outputs must be unchanged
+        kk2 = kk.at[:, -1].add(10.0)
+        v2 = v.at[:, -1].add(10.0)
+        out2 = ref.mha(q, kk2, v2, causal=True)
+        np.testing.assert_allclose(np.asarray(out[:, :-1]),
+                                   np.asarray(out2[:, :-1]),
+                                   atol=1e-5, rtol=1e-5)
+    # rows are convex combos of V: bounded by V extrema
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 128), (3, 7, 100), (1, 1, 1, 256),
+                                   (5, 333)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_oracle(shape, dtype):
+    x = _rand(0, shape, dtype)
+    scale = _rand(1, shape[-1:], jnp.float32)
+    out = rmsnorm_kernel(x, scale, interpret=True)
+    expect = ref.rmsnorm(x, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_rmsnorm_residual_fusion():
+    x = _rand(0, (4, 37, 96), jnp.float32)
+    res = _rand(1, (4, 37, 96), jnp.float32)
+    scale = _rand(2, (96,), jnp.float32)
+    normed, new_res = rmsnorm_residual(x, res, scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(new_res), np.asarray(x + res),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(normed),
+                               np.asarray(ref.rmsnorm(x + res, scale)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 300))
+def test_rmsnorm_scale_property(rows, d):
+    """rmsnorm(a*x) == rmsnorm(x) for positive scalar a (scale-invariant —
+    up to the eps regularizer, so keep |x| well above sqrt(eps))."""
+    x = jnp.abs(_rand(0, (rows, d), jnp.float32)) + 0.5
+    s = jnp.ones((d,))
+    a = 3.7
+    np.testing.assert_allclose(np.asarray(ref.rmsnorm(a * x, s)),
+                               np.asarray(ref.rmsnorm(x, s)),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# SSD scan
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,s,h,p,g,n,chunk",
+    [
+        (1, 32, 2, 8, 1, 4, 8),
+        (2, 64, 4, 16, 2, 8, 16),
+        (2, 64, 4, 16, 4, 8, 32),     # groups == heads
+        (1, 96, 6, 8, 2, 16, 24),     # non-pow2 chunk
+    ])
+def test_ssd_kernel_matches_naive(b, s, h, p, g, n, chunk):
+    x = _rand(0, (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(_rand(1, (b, s, h), jnp.float32))
+    A = -jnp.exp(_rand(2, (h,), jnp.float32) * 0.5)
+    B = _rand(3, (b, s, g, n), jnp.float32)
+    C = _rand(4, (b, s, g, n), jnp.float32)
+    expect, _ = ref.ssd_naive(x, dt, A, B, C)
+    kern = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    chunked, _ = ref.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(expect),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(expect),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_decode_step_matches_scan():
+    b, s, h, p, g, n = 2, 16, 2, 8, 1, 4
+    x = _rand(0, (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(_rand(1, (b, s, h), jnp.float32))
+    A = -jnp.exp(_rand(2, (h,), jnp.float32) * 0.5)
+    B = _rand(3, (b, s, g, n), jnp.float32)
+    C = _rand(4, (b, s, g, n), jnp.float32)
+    y_full, final_state = ref.ssd_naive(x, dt, A, B, C)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = ref.ssd_step(state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(final_state),
+                               atol=1e-4, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 48), st.integers(1, 3))
+def test_ssd_chunk_invariance_property(s, b):
+    """Property: chunked SSD is chunk-size invariant (same math)."""
+    h, p, g, n = 2, 4, 1, 4
+    s = (s // 8) * 8
+    x = _rand(0, (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(_rand(1, (b, s, h), jnp.float32))
+    A = -jnp.exp(_rand(2, (h,), jnp.float32) * 0.5)
+    B = _rand(3, (b, s, g, n), jnp.float32)
+    C = _rand(4, (b, s, g, n), jnp.float32)
+    y8, st8 = ref.ssd_chunked(x, dt, A, B, C, chunk=8)
+    y4, st4 = ref.ssd_chunked(x, dt, A, B, C, chunk=4)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y4),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st8), np.asarray(st4),
+                               atol=1e-4, rtol=1e-3)
