@@ -26,6 +26,7 @@ BENCHES = [
     ("multihost", "benchmarks.bench_multihost", "beyond-paper"),
     ("goodput", "benchmarks.bench_goodput", "beyond-paper"),
     ("search_cost", "benchmarks.bench_search_cost", "beyond-paper"),
+    ("online_drift", "benchmarks.bench_online_drift", "beyond-paper"),
     ("roofline_table", "benchmarks.roofline_table", "§Roofline"),
 ]
 

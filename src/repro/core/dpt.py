@@ -3,14 +3,20 @@ plus the multi-host fleet extension.
 
 Faithful part (``DPT.run``):
     nWorker starts at G (accelerator count) and increases by G up to N
-    (CPU cores); for each, nPrefetch sweeps 1..P; each cell measures the
-    dataloader transfer time; memory overflow breaks the inner loop and
-    moves to the next worker count; the argmin is returned.
+    (CPU cores, final rung clamped to N); for each, nPrefetch sweeps 1..P;
+    each cell measures the dataloader transfer time; memory overflow breaks
+    the inner loop and moves to the next worker count; the argmin is
+    returned.
 
 The tuner is decoupled from *how* a cell is measured: an ``Evaluator``
 returns ``TransferStats`` (real wall-clock loader, or the virtual-time
 simulator — see core/evaluators.py).  That is what lets the same algorithm
 drive unit tests, paper-table benchmarks and the multi-host simulation.
+
+The search loop itself now lives in the unified strategy layer
+(``repro.tuning``): ``DPT.run`` delegates to the registered ``"grid"``
+strategy, and this module keeps the shared dataclasses (DPTConfig,
+Trial, DPTResult) plus the fleet tuner built on top.
 """
 from __future__ import annotations
 
@@ -73,9 +79,11 @@ class DPTResult:
 
     @property
     def time_reduction_pct(self) -> Optional[float]:
+        """Percent of the default-parameter time saved by the optimum
+        (positive = improvement)."""
         if self.default_time is None or self.default_time == 0:
             return None
-        return 100.0 * (self.optimal_time - self.default_time) / self.default_time
+        return 100.0 * (self.default_time - self.optimal_time) / self.default_time
 
 
 def default_params(num_cpu_cores: Optional[int] = None) -> Tuple[int, int]:
@@ -96,43 +104,11 @@ class DPT:
                               epoch=self.config.epoch)
 
     def run(self, *, measure_default: bool = True) -> DPTResult:
-        """Algorithm 1."""
-        cfg = self.config
-        N, G = cfg.resolve()
-        n_worker, n_prefetch = 0, 0
-        optimal_time = math.inf
-        trials: List[Trial] = []
-
-        i = 0
-        while i < N:                                   # line 4
-            i += G                                     # line 5
-            j = cfg.min_prefetch                       # line 6
-            while j <= cfg.max_prefetch:               # line 7
-                try:
-                    stats = self._measure(i, j)        # lines 8, 12
-                    overflowed = stats.overflowed
-                except MemoryOverflow:
-                    overflowed = True
-                    stats = None
-                if overflowed:                         # lines 9-10
-                    trials.append(Trial(i, j, math.inf, overflowed=True))
-                    break
-                trials.append(Trial(i, j, stats.seconds,
-                                    peak_bytes=stats.peak_loader_bytes))
-                if stats.seconds < optimal_time:       # lines 14-17
-                    optimal_time = stats.seconds
-                    n_worker, n_prefetch = i, j
-                j += 1                                 # line 19
-
-        default_time = None
-        if measure_default:
-            dw, dp = default_params(N)
-            try:
-                default_time = self._measure(dw, dp).seconds
-            except MemoryOverflow:
-                default_time = math.inf
-        return DPTResult(n_worker, n_prefetch, optimal_time, trials,
-                         default_time=default_time)
+        """Algorithm 1 (served by the unified ``"grid"`` strategy; see
+        ``repro.tuning.strategies.GridSearch`` for the line mapping)."""
+        from repro.tuning import tune
+        return tune(evaluator=self.evaluator, strategy="grid",
+                    config=self.config, measure_default=measure_default)
 
     # ---- full grid (figures 2-4) --------------------------------------------
     def grid(self, workers: Sequence[int],

@@ -1,173 +1,56 @@
-"""Beyond-paper search strategies.
+"""Beyond-paper search strategies — compatibility shims.
 
-The paper's grid search is exhaustive: O(N/G * P) measured cells, each a
-full timed run.  On a 1000-node fleet that cost is paid per machine class;
-these strategies cut it by 5-20x while landing on the same optimum on every
-profile we test:
+The implementations moved to the unified strategy layer in
+``repro.tuning`` (one ``TuningStrategy`` protocol + registry, shared
+Trial bookkeeping and MemoryOverflow semantics); these functions keep the
+original signatures and delegate, so existing call sites and the
+benchmarks are unchanged:
 
-* ``successive_halving``  — measure all cells with a tiny batch budget,
-  keep the best 1/eta, multiply the budget, repeat (Hyperband-style rung
-  schedule; noisy-but-cheap early rungs are enough to discard most cells).
-* ``cost_model_warmstart`` + ``coordinate_hillclimb`` — napkin-math the
-  optimum from the machine/storage profile (zero measurements), then
-  coordinate-descend (+/-G workers, +/-1 prefetch) with real measurements
-  until no neighbor improves.  Typical cost: < 12 measurements vs 96 for
-  the paper's grid on the testbed profile.
-
-Both honour the same MemoryOverflow semantics as Algorithm 1.
+* ``successive_halving``   -> ``tune(strategy="successive_halving", ...)``
+* ``coordinate_hillclimb`` -> ``tune(strategy="hillclimb", ...)``
+* ``tuned_with_warmstart`` -> ``tune(strategy="warmstart_hillclimb", ...)``
+* ``goodput_tune``         -> ``tune(strategy="goodput", ...)``
+* ``cost_model_warmstart`` — zero-measurement analytic seed (re-exported
+  from ``repro.tuning.strategies``).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Tuple
 
-from repro.core.dpt import DPTConfig, DPTResult, Evaluator, Trial
-from repro.core.monitor import MemoryOverflow
-from repro.core.simulator import LoaderSimulator, MachineProfile
+from repro.core.dpt import DPTConfig, DPTResult
+from repro.core.simulator import MachineProfile
 from repro.data.storage import StorageProfile
+from repro.tuning.base import tune
+from repro.tuning.strategies import (  # noqa: F401  (compat re-exports)
+    CostModelPrediction,
+    cost_model_warmstart,
+)
 
 
-def _measure(ev: Evaluator, i: int, j: int, num_batches: int,
-             epoch: int) -> float:
-    try:
-        s = ev(i, j, num_batches=num_batches, epoch=epoch)
-        return math.inf if s.overflowed else s.seconds
-    except MemoryOverflow:
-        return math.inf
-
-
-def successive_halving(evaluator: Evaluator, *, config: DPTConfig = DPTConfig(),
+def successive_halving(evaluator, *, config: DPTConfig = DPTConfig(),
                        eta: int = 3, min_batches: int = 4) -> DPTResult:
-    N, G = config.resolve()
-    cells: List[Tuple[int, int]] = [
-        (i, j) for i in range(G, N + 1, G)
-        for j in range(config.min_prefetch, config.max_prefetch + 1)]
-    budget = min_batches
-    trials: List[Trial] = []
-    scores: Dict[Tuple[int, int], float] = {}
-    while True:
-        scores = {}
-        for (i, j) in cells:
-            t = _measure(evaluator, i, j, budget, config.epoch)
-            scores[(i, j)] = t
-            trials.append(Trial(i, j, t, overflowed=not math.isfinite(t)))
-        alive = [c for c in cells if math.isfinite(scores[c])]
-        if not alive:
-            raise MemoryOverflow("all cells overflow")
-        alive.sort(key=lambda c: scores[c])
-        if len(alive) <= 2 or budget >= config.num_batches:
-            best = alive[0]
-            return DPTResult(best[0], best[1], scores[best], trials)
-        cells = alive[:max(2, len(alive) // eta)]
-        budget = min(budget * eta, config.num_batches)
+    return tune(evaluator=evaluator, strategy="successive_halving",
+                config=config, eta=eta, min_batches=min_batches)
 
 
-@dataclasses.dataclass
-class CostModelPrediction:
-    nworker: int
-    nprefetch: int
-    predicted_seconds: float
-
-
-def cost_model_warmstart(storage: StorageProfile, machine: MachineProfile,
-                         *, batch_size: int, config: DPTConfig = DPTConfig(),
-                         ) -> CostModelPrediction:
-    """Zero-measurement analytic optimum from the simulator's own cost model
-    (the napkin math, mechanized).  Used to seed the hillclimb on a new
-    machine/dataset pair before any wall-clock run."""
-    sim = LoaderSimulator(storage, machine)
-    N, G = config.resolve()
-    best = None
-    for i in range(G, N + 1, G):
-        for j in range(config.min_prefetch, config.max_prefetch + 1):
-            try:
-                r = sim.simulate(batch_size=batch_size, num_batches=32,
-                                 nworker=i, nprefetch=j, epoch=config.epoch)
-            except MemoryOverflow:
-                break
-            if best is None or r.seconds < best[2]:
-                best = (i, j, r.seconds)
-    if best is None:
-        raise MemoryOverflow("cost model: every cell overflows")
-    return CostModelPrediction(*best)
-
-
-def coordinate_hillclimb(evaluator: Evaluator, *, start: Tuple[int, int],
+def coordinate_hillclimb(evaluator, *, start: Tuple[int, int],
                          config: DPTConfig = DPTConfig(),
                          max_steps: int = 24) -> DPTResult:
-    N, G = config.resolve()
-    lo_j, hi_j = config.min_prefetch, config.max_prefetch
-
-    def clamp(i, j):
-        i = max(G, min(N, (i // G) * G if i % G else i))
-        return i, max(lo_j, min(hi_j, j))
-
-    cur = clamp(*start)
-    trials: List[Trial] = []
-    seen: Dict[Tuple[int, int], float] = {}
-
-    def score(cell):
-        if cell not in seen:
-            seen[cell] = _measure(evaluator, cell[0], cell[1],
-                                  config.num_batches, config.epoch)
-            trials.append(Trial(cell[0], cell[1], seen[cell],
-                                overflowed=not math.isfinite(seen[cell])))
-        return seen[cell]
-
-    best_t = score(cur)
-    for _ in range(max_steps):
-        i, j = cur
-        neighbors = [clamp(i + G, j), clamp(i - G, j),
-                     clamp(i, j + 1), clamp(i, j - 1)]
-        cand = min(neighbors, key=score)
-        if score(cand) + 1e-12 < best_t:
-            cur, best_t = cand, score(cand)
-        else:
-            break
-    if not math.isfinite(best_t):
-        raise MemoryOverflow("hillclimb found no feasible cell")
-    return DPTResult(cur[0], cur[1], best_t, trials)
+    return tune(evaluator=evaluator, strategy="hillclimb", config=config,
+                start=start, max_steps=max_steps)
 
 
-def tuned_with_warmstart(evaluator: Evaluator, storage: StorageProfile,
+def tuned_with_warmstart(evaluator, storage: StorageProfile,
                          machine: MachineProfile, *, batch_size: int,
                          config: DPTConfig = DPTConfig()) -> DPTResult:
-    pred = cost_model_warmstart(storage, machine, batch_size=batch_size,
-                                config=config)
-    return coordinate_hillclimb(evaluator,
-                                start=(pred.nworker, pred.nprefetch),
-                                config=config)
+    return tune(evaluator=evaluator, strategy="warmstart_hillclimb",
+                config=config, storage=storage, machine=machine,
+                batch_size=batch_size)
 
 
-# --------------------------------------------------------------------------
-# goodput mode: tune to the accelerator's consumption rate, not to max
-# --------------------------------------------------------------------------
-def goodput_tune(evaluator: Evaluator, *, step_time_s: float,
-                 num_batches: int, config: DPTConfig = DPTConfig(),
+def goodput_tune(evaluator, *, step_time_s: float, num_batches: int,
+                 config: DPTConfig = DPTConfig(),
                  margin: float = 0.1) -> DPTResult:
-    """Minimal-resource tuning: the loader only needs to outpace the model.
-
-    Finds the smallest (nworker, nprefetch) whose per-batch transfer time is
-    <= step_time * (1 - margin); falls back to the global optimum if no cell
-    meets the target.  Frees host cores on fleet nodes where the model step
-    (not the loader) is the bottleneck — the paper's objective (max loader
-    speed) over-provisions there.
-    """
-    N, G = config.resolve()
-    target = step_time_s * (1.0 - margin) * num_batches
-    trials: List[Trial] = []
-    best_any: Optional[Tuple[int, int, float]] = None
-    for i in range(G, N + 1, G):
-        for j in range(config.min_prefetch, config.max_prefetch + 1):
-            t = _measure(evaluator, i, j, num_batches, config.epoch)
-            trials.append(Trial(i, j, t, overflowed=not math.isfinite(t)))
-            if not math.isfinite(t):
-                break
-            if best_any is None or t < best_any[2]:
-                best_any = (i, j, t)
-            if t <= target:
-                return DPTResult(i, j, t, trials)
-    if best_any is None:
-        raise MemoryOverflow("goodput: every cell overflows")
-    return DPTResult(best_any[0], best_any[1], best_any[2], trials)
+    return tune(evaluator=evaluator, strategy="goodput", config=config,
+                step_time_s=step_time_s, num_batches=num_batches,
+                margin=margin)

@@ -4,7 +4,12 @@ from repro.data.dataset import (  # noqa: F401
     synthetic_image_dataset,
     token_dataset,
 )
-from repro.data.loader import DataLoader, LoaderParams, TransferStats  # noqa: F401
+from repro.data.loader import (  # noqa: F401
+    DataLoader,
+    LoaderParams,
+    LoaderStream,
+    TransferStats,
+)
 from repro.data.sampler import SamplerState, ShardedSampler  # noqa: F401
 from repro.data.storage import (  # noqa: F401
     ArrayStorage,

@@ -2,10 +2,18 @@
 exactly the two knobs DPT tunes (nWorker, nPrefetch) plus the device-buffer
 depth.  ``measure_transfer_time`` is the paper's objective function
 ("Measure Dataloader Transfer Time using i, j arguments", Algorithm 1 l.12).
+
+Hot-swap: ``DataLoader.apply_params`` reconfigures a *running* stream.
+``LoaderStream`` drains the current worker pool at a batch boundary (every
+batch the pool already pulled is delivered; the stateful ShardedSampler is
+never rewound) and restarts with the new (nWorker, nPrefetch) — zero
+batches lost or duplicated.  This is what lets the OnlineTuner
+(repro.tuning.online) retune mid-training instead of only as a preamble.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Iterator, Optional
 
@@ -46,6 +54,65 @@ class TransferStats:
         return self.bytes / self.seconds if self.seconds > 0 else 0.0
 
 
+class LoaderStream:
+    """A live, hot-swappable batch stream over the loader's stateful sampler.
+
+    ``apply_params`` retunes the stream in place: the current worker pool
+    stops pulling new index-batches (``request_drain``), everything it
+    already pulled is delivered in turn, then a fresh pool starts with the
+    new (num_workers, prefetch_factor) from exactly the sampler position
+    where the old pool stopped.  The swap is requested from any thread and
+    performed by whoever consumes the stream; ``swaps`` counts completed
+    swaps.  ``device_prefetch`` depth is fixed at stream creation (the
+    device-side double buffer cannot resize mid-flight).
+    """
+
+    def __init__(self, loader: "DataLoader", *, to_device: bool = True):
+        self.loader = loader
+        self.to_device = to_device
+        self.swaps = 0
+        self._pending: Optional[LoaderParams] = None
+        self._lock = threading.Lock()
+        host = self._host_stream()
+        if to_device:
+            self._iter = iter(DevicePrefetcher(
+                host, depth=loader.params.device_prefetch,
+                sharding=loader.sharding))
+        else:
+            self._iter = host
+
+    def apply_params(self, params: LoaderParams) -> None:
+        """Request a hot swap; takes effect at the next batch boundary."""
+        with self._lock:
+            self._pending = params
+
+    def _host_stream(self):
+        while True:
+            pool, _monitor = self.loader._pool(iter(self.loader.sampler))
+            draining = False
+            for batch in pool:
+                if not draining and self._pending is not None:
+                    pool.request_drain()
+                    draining = True
+                yield batch
+            # pool ended: either drained (swap) or spuriously empty sampler
+            pool.shutdown()
+            with self._lock:
+                params, self._pending = self._pending, None
+            if params is not None:
+                # re-assert the pending params at the boundary: trial
+                # measurements may have mutated loader.params via
+                # with_params between the request and this drain
+                self.loader.params = params
+                self.swaps += 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return next(self._iter)
+
+
 class DataLoader:
     def __init__(self, dataset: Dataset, global_batch: int, *,
                  params: LoaderParams = LoaderParams(),
@@ -59,6 +126,7 @@ class DataLoader:
         self.params = params
         self.memory_budget = memory_budget
         self.sharding = sharding
+        self._live_stream: Optional[LoaderStream] = None
         self.sampler = ShardedSampler(
             len(dataset), global_batch, shuffle=shuffle, seed=seed,
             host_index=host_index, host_count=host_count,
@@ -74,8 +142,25 @@ class DataLoader:
         self.params = LoaderParams(**d["params"])
 
     def with_params(self, params: LoaderParams) -> "DataLoader":
+        """Set params for *future* pools (trial measurements, restarts).
+        Does not touch a live stream — use ``apply_params`` for that."""
         self.params = params
         return self
+
+    def apply_params(self, params: LoaderParams) -> LoaderParams:
+        """Hot-swap tuned parameters in.
+
+        ``self.params`` is set immediately (any future pool — a new
+        stream, a trial measurement default — uses the new values even if
+        the current stream was abandoned mid-iteration), and the latest
+        live ``stream()`` is asked to swap at its next batch boundary
+        (pool drained, sampler position preserved, no batch lost or
+        duplicated).
+        """
+        self.params = params
+        if self._live_stream is not None:
+            self._live_stream.apply_params(params)
+        return params
 
     # ---- iteration ----------------------------------------------------------
     def _pool(self, index_iter):
@@ -99,11 +184,14 @@ class DataLoader:
         pool, _monitor = self._pool(idx_iter)
         return iter(pool)
 
+    def stream(self, *, to_device: bool = True) -> LoaderStream:
+        """The live, hot-swappable stream (see LoaderStream)."""
+        self._live_stream = LoaderStream(self, to_device=to_device)
+        return self._live_stream
+
     def __iter__(self):
-        """Device-side batches (stateful stream, prefetched)."""
-        host = self.host_batches()
-        return iter(DevicePrefetcher(host, depth=self.params.device_prefetch,
-                                     sharding=self.sharding))
+        """Device-side batches (stateful stream, prefetched, swappable)."""
+        return iter(self.stream())
 
     # ---- the DPT objective ---------------------------------------------------
     def measure_transfer_time(self, num_batches: int, *,

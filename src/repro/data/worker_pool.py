@@ -8,6 +8,13 @@ idiomatic JAX-host analogue of PyTorch's forked dataloader workers).
 Backpressure implements PyTorch ``prefetch_factor`` semantics: at most
 ``num_workers * prefetch_factor`` finished batches may be queued; workers
 block (stop consuming memory) when the consumer lags.
+
+Both pools support ``request_drain()``: stop pulling new index-batches but
+deliver everything already pulled, then end the consumer's iteration.
+Because indices are only pulled under a lock and every pulled index-batch
+is eventually enqueued, a drain loses nothing and duplicates nothing —
+this is what lets a live DataLoader hot-swap (nWorker, nPrefetch) at a
+batch boundary (see data/loader.py LoaderStream).
 """
 from __future__ import annotations
 
@@ -28,6 +35,31 @@ def batch_nbytes(batch) -> int:
     return int(np.asarray(batch).nbytes)
 
 
+class _DrainableIter:
+    """Iterator wrapper that can be told to stop yielding at a boundary.
+
+    ``drain()`` makes the next ``__next__`` raise StopIteration; items
+    already handed out are unaffected.  Thread-safe by virtue of callers
+    serializing ``__next__`` (the pools pull under a lock / from a single
+    thread) and ``drain`` being a single Event set.
+    """
+
+    def __init__(self, it: Iterator):
+        self._it = iter(it)
+        self._stop = threading.Event()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration
+        return next(self._it)
+
+    def drain(self) -> None:
+        self._stop.set()
+
+
 class ThreadWorkerPool:
     """Pulls index-batches from ``index_iter``, emits collated batches."""
 
@@ -38,7 +70,7 @@ class ThreadWorkerPool:
         self.num_workers = max(0, num_workers)
         self.prefetch_factor = max(1, prefetch_factor)
         self.monitor = monitor or MemoryMonitor()
-        self._index_iter = iter(index_iter)
+        self._index_iter = _DrainableIter(index_iter)
         self._iter_lock = threading.Lock()
         self._error: Optional[BaseException] = None
         self._stop = threading.Event()
@@ -83,9 +115,14 @@ class ThreadWorkerPool:
                     self._queue.put(_SENTINEL)
 
     # ---- consumer side -----------------------------------------------------
+    def request_drain(self) -> None:
+        """Stop pulling new index-batches; already-pulled batches still
+        deliver, then iteration ends (the hot-swap batch boundary)."""
+        self._index_iter.drain()
+
     def __iter__(self):
         if self.num_workers == 0:
-            for idx in self._index_iter:
+            for idx in self._index_iter:   # _DrainableIter ends on drain
                 yield self.dataset.get_batch(idx)
             return
         while True:
@@ -123,10 +160,13 @@ class ProcessWorkerPool:
         import multiprocessing as mp
         self.dataset = dataset
         self.monitor = monitor or MemoryMonitor()
-        self._indices = index_iter
+        self._indices = _DrainableIter(index_iter)
         self.num_workers = max(1, num_workers)
         self.prefetch_factor = max(1, prefetch_factor)
         self._pool = mp.get_context("fork").Pool(self.num_workers)
+
+    def request_drain(self) -> None:
+        self._indices.drain()
 
     def __iter__(self):
         try:

@@ -113,14 +113,86 @@ class Request:
         default_factory=lambda: queue.Queue(maxsize=1))
 
 
+class BatchMixMonitor:
+    """Detects drift in the mix of served batch shapes and fires a retune.
+
+    Serving goodput depends on the request mix: a shift from short-prompt
+    to long-prompt traffic (or a new modality) changes how much host-side
+    preprocessing each batch needs, which invalidates a tuned loader
+    config.  The frontend records one shape key per batch served; when the
+    bucketed distribution over the last ``window`` batches diverges from
+    the previous window by more than ``threshold`` (half the L1 distance,
+    in [0, 1]), ``on_drift`` fires with the new mix distribution.  Typical
+    wiring to the online tuner::
+
+        BatchMixMonitor(
+            on_drift=lambda mix: tuner.force_retune(reason="batch-mix"))
+
+    so the feature loader re-searches with a small budget and hot-swaps
+    (see repro.tuning.online).  Callback errors are contained by the
+    serving thread (reported to stderr), never fatal to serving.
+    """
+
+    def __init__(self, *, window: int = 32, threshold: float = 0.35,
+                 cooldown: int = 64, on_drift=None):
+        self.window = window
+        self.threshold = threshold
+        self.cooldown = cooldown
+        self.on_drift = on_drift
+        self._recent: List = []
+        self._baseline: Optional[dict] = None
+        self._since_fire = 0
+        self.drifts = 0
+
+    @staticmethod
+    def _dist(keys) -> dict:
+        d: dict = {}
+        for k in keys:
+            d[k] = d.get(k, 0) + 1
+        n = max(1, len(keys))
+        return {k: v / n for k, v in d.items()}
+
+    @staticmethod
+    def divergence(a: dict, b: dict) -> float:
+        """Half the L1 distance between two mix distributions (0..1)."""
+        keys = set(a) | set(b)
+        return 0.5 * sum(abs(a.get(k, 0.0) - b.get(k, 0.0)) for k in keys)
+
+    def record(self, shape_key) -> bool:
+        """One call per batch served; returns True when drift fired."""
+        self._recent.append(shape_key)
+        self._since_fire += 1
+        if len(self._recent) < self.window:
+            return False
+        current = self._dist(self._recent[-self.window:])
+        if self._baseline is None:
+            self._baseline = current
+            self._recent = self._recent[-self.window:]
+            return False
+        self._recent = self._recent[-self.window:]
+        if self._since_fire < self.cooldown:
+            return False
+        if self.divergence(self._baseline, current) <= self.threshold:
+            return False
+        self._baseline = current
+        self._since_fire = 0
+        self.drifts += 1
+        if self.on_drift is not None:
+            self.on_drift(current)
+        return True
+
+
 class BatchingFrontend:
     """Collects requests into batches (size- or timeout-triggered) and runs
     them through the engine — the 'serve a small model with batched
-    requests' driver."""
+    requests' driver.  An optional BatchMixMonitor watches the served
+    shape mix and triggers loader retuning when traffic drifts."""
 
-    def __init__(self, engine: ServeEngine, *, max_wait_s: float = 0.01):
+    def __init__(self, engine: ServeEngine, *, max_wait_s: float = 0.01,
+                 mix_monitor: Optional[BatchMixMonitor] = None):
         self.engine = engine
         self.max_wait_s = max_wait_s
+        self.mix_monitor = mix_monitor
         self._queue: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -157,10 +229,16 @@ class BatchingFrontend:
             for r in reqs:
                 by_shape.setdefault(
                     (len(r.prompt), r.max_new_tokens), []).append(r)
-            for (_plen, max_new), group in by_shape.items():
+            for (plen, max_new), group in by_shape.items():
                 prompts = np.stack([r.prompt for r in group])
                 res = self.engine.generate(prompts, max_new)
                 self.batches_served += 1
+                if self.mix_monitor is not None:
+                    try:
+                        self.mix_monitor.record((plen, max_new))
+                    except Exception:  # noqa: BLE001 - retune must not
+                        import traceback  # kill the serving thread
+                        traceback.print_exc()
                 for i, r in enumerate(group):
                     r.result.put(res.tokens[i])
 

@@ -7,28 +7,30 @@ Startup:  restore latest checkpoint (step + sampler offset + loader params)
 Steady:   device-prefetched batches -> train step; per-step wall time feeds
           the StragglerDetector; every ``checkpoint_every`` steps an async
           checkpoint (params, opt state, sampler state, loader params).
-Drift:    if this host becomes a straggler (or loader throughput degrades
-          vs the tuned baseline), re-run DPT with a small budget — the
-          online re-tuning the paper's conclusion gestures at for clouds.
+Drift:    an OnlineTuner (repro.tuning.online) watches the per-step
+          data-wait vs compute-time goodput signal; when the loader
+          becomes the bottleneck it runs a bounded re-search and
+          hot-swaps the winner into the live stream (no rebuild, no lost
+          batches) — the online re-tuning the paper's conclusion gestures
+          at for clouds.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.cache import DPTCache
-from repro.core.dpt import DPT, DPTConfig
+from repro.core.dpt import DPTConfig
 from repro.core.evaluators import LoaderEvaluator
 from repro.data.loader import DataLoader, LoaderParams
-from repro.data.prefetcher import DevicePrefetcher
 from repro.distributed.fault_tolerance import StragglerDetector
 from repro.train.train_step import (TrainState, TrainStepConfig,
                                     init_train_state, make_train_step)
+from repro.tuning import OnlineTuner, OnlineTunerConfig, tune
 from repro.utils.fingerprint import machine_fingerprint
 
 
@@ -39,11 +41,14 @@ class TrainerConfig:
     checkpoint_dir: Optional[str] = None
     log_every: int = 10
     seed: int = 0
-    # DPT integration
+    # DPT integration (startup tune + online retune, see repro.tuning)
     autotune: bool = True
+    autotune_strategy: str = "grid"
     autotune_budget_batches: int = 8
     autotune_max_prefetch: int = 4
-    retune_if_slowdown: float = 1.6    # loader throughput drift trigger
+    retune_stall_fraction: float = 0.5   # data-wait/compute drift trigger
+    retune_window: int = 8
+    retune_cooldown_steps: int = 16
     dpt_cache_path: Optional[str] = None
     step_config: TrainStepConfig = dataclasses.field(
         default_factory=TrainStepConfig)
@@ -62,11 +67,13 @@ class Trainer:
         self.step_fn = jax.jit(make_train_step(model, cfg.step_config))
         self.state: Optional[TrainState] = None
         self.start_step = 0
-        self.tuned_transfer_s: Optional[float] = None
+        self.online_tuner: Optional[OnlineTuner] = None
         self.history: List[Dict[str, Any]] = []
 
     # ---- DPT integration ----------------------------------------------------
     def tune_loader(self, *, force: bool = False) -> LoaderParams:
+        """Startup tune through the unified ``tune(...)`` front door (or
+        reuse the cached result for this machine/dataset fingerprint)."""
         cache = DPTCache(self.cfg.dpt_cache_path)
         mfp = machine_fingerprint()
         dfp = self.loader.dataset.fingerprint()
@@ -78,17 +85,43 @@ class Trainer:
             self.loader.with_params(params)
             return params
         ev = LoaderEvaluator(self.loader, to_device=True)
-        dpt = DPT(ev, DPTConfig(
+        search_cfg = DPTConfig(
             max_prefetch=self.cfg.autotune_max_prefetch,
-            num_batches=self.cfg.autotune_budget_batches))
-        result = dpt.run(measure_default=False)
+            num_batches=self.cfg.autotune_budget_batches)
+        strategy = self.cfg.autotune_strategy
+        if strategy == "grid":
+            kwargs = {"measure_default": False}
+        elif strategy == "successive_halving":
+            kwargs = {}
+        elif strategy == "hillclimb":
+            _, G = search_cfg.resolve()
+            kwargs = {"start": (max(G, self.loader.params.num_workers),
+                                self.loader.params.prefetch_factor)}
+        else:
+            # goodput needs a measured step time, warmstart needs profiles —
+            # neither exists before the first step
+            raise ValueError(
+                f"autotune_strategy {strategy!r} cannot run at startup; "
+                "use 'grid', 'successive_halving' or 'hillclimb'")
+        result = tune(evaluator=ev, strategy=strategy,
+                      config=search_cfg, **kwargs)
         cache.put(mfp, dfp, self.loader.global_batch, result)
         params = self.loader.params.replace(
             num_workers=result.nworker, prefetch_factor=result.nprefetch)
         self.loader.with_params(params)
-        self.tuned_transfer_s = (result.optimal_time
-                                 / max(1, self.cfg.autotune_budget_batches))
         return params
+
+    def _make_online_tuner(self) -> OnlineTuner:
+        return OnlineTuner(
+            self.loader,
+            evaluator=LoaderEvaluator(self.loader, to_device=True),
+            cache=DPTCache(self.cfg.dpt_cache_path),
+            config=OnlineTunerConfig(
+                stall_fraction=self.cfg.retune_stall_fraction,
+                window=self.cfg.retune_window,
+                cooldown_steps=self.cfg.retune_cooldown_steps,
+                retune_budget_batches=self.cfg.autotune_budget_batches,
+                max_prefetch=self.cfg.autotune_max_prefetch))
 
     # ---- checkpoint/restart ---------------------------------------------------
     def _maybe_restore(self) -> None:
@@ -136,10 +169,10 @@ class Trainer:
         self._maybe_restore()
         if cfg.autotune:
             self.tune_loader()
+            self.online_tuner = self._make_online_tuner()
 
         step = self.start_step
         batches = self._rebuild_stream(step)
-        slow_strikes = 0
         t_wall = time.perf_counter()
         last_metrics: Dict[str, Any] = {}
         while step < cfg.total_steps:
@@ -156,16 +189,11 @@ class Trainer:
             self.straggler.record(self.host_name, dt)
             step += 1
 
-            # loader-drift retune (paper §5: cloud environments drift)
-            if (cfg.autotune and self.tuned_transfer_s
-                    and t_data > cfg.retune_if_slowdown * self.tuned_transfer_s):
-                slow_strikes += 1
-                if slow_strikes >= 8:
-                    slow_strikes = 0
-                    self.tune_loader(force=True)
-                    batches = self._rebuild_stream(step)
-            else:
-                slow_strikes = max(0, slow_strikes - 1)
+            # loader-drift retune (paper §5: cloud environments drift).
+            # A triggered retune hot-swaps the live stream in place — no
+            # rebuild, no lost batches, sampler position preserved.
+            if self.online_tuner is not None:
+                self.online_tuner.observe(data_s=t_data, step_s=dt)
 
             if step % cfg.log_every == 0 or step == cfg.total_steps:
                 rec = {"step": step,

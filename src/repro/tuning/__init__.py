@@ -1,0 +1,33 @@
+"""repro.tuning — the unified tuning layer.
+
+``tune(evaluator=..., strategy=..., config=...)`` is the single front door
+to every search policy (see ``base.py``); ``OnlineTuner`` turns tuning into
+a continuous background activity against a live, hot-swappable DataLoader
+(see ``online.py``).  Strategy implementations live in ``strategies.py``
+and self-register; third-party strategies register the same way::
+
+    from repro.tuning import register_strategy
+
+    @register_strategy("my_policy")
+    class MyPolicy:
+        def tune(self, recorder, **kwargs): ...
+"""
+from repro.tuning.base import (  # noqa: F401
+    TrialRecorder,
+    TuningStrategy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+    tune,
+    worker_rungs,
+)
+from repro.tuning.strategies import (  # noqa: F401
+    CostModelPrediction,
+    GoodputTune,
+    GridSearch,
+    HillClimb,
+    SuccessiveHalving,
+    WarmstartHillClimb,
+    cost_model_warmstart,
+)
+from repro.tuning.online import OnlineTuner, OnlineTunerConfig  # noqa: F401

@@ -1,0 +1,160 @@
+"""Unified tuning layer: one protocol, one registry, one front door.
+
+Before this layer, the repo had four tuning entry points with four
+signatures (``DPT.run``, ``search.successive_halving``,
+``search.tuned_with_warmstart``, ``search.goodput_tune``), each carrying
+its own Trial bookkeeping and MemoryOverflow handling.  Now every tuner is
+a :class:`TuningStrategy` registered by name, measured through a shared
+:class:`TrialRecorder`, and reachable through::
+
+    from repro.tuning import tune
+    result = tune(evaluator=ev, strategy="grid", config=DPTConfig(...))
+
+The legacy entry points still exist and delegate here, so nothing that
+imported them moves — but new call sites (OnlineTuner, the trainer, the
+benchmarks) only need the one function.
+
+How Algorithm 1 maps on:  the paper's grid sweep is the ``"grid"``
+strategy (see ``strategies.GridSearch`` — the loop is a line-for-line port
+of Algorithm 1 with the final worker rung clamped to N); the evaluator it
+measures cells with is unchanged (``core/evaluators.py``); the
+``DPTConfig``/``DPTResult``/``Trial`` dataclasses stay in ``core/dpt.py``
+because they predate the layer and everything imports them from there.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Protocol, Type, Union, runtime_checkable
+
+from repro.core.dpt import DPTConfig, DPTResult, Evaluator, Trial
+from repro.core.monitor import MemoryOverflow
+
+
+class TrialRecorder:
+    """Shared measurement bookkeeping for every strategy.
+
+    Wraps an evaluator and records one :class:`Trial` per real measurement,
+    normalizing the two ways a cell can overflow (the evaluator raising
+    ``MemoryOverflow``, or returning ``TransferStats(overflowed=True)``)
+    into a single ``math.inf`` score — the semantics Algorithm 1's
+    lines 9-10 act on.
+    """
+
+    def __init__(self, evaluator: Evaluator, config: DPTConfig):
+        self.evaluator = evaluator
+        self.config = config
+        self.trials: List[Trial] = []
+
+    def seconds(self, nworker: int, nprefetch: int, *,
+                num_batches: Optional[int] = None,
+                record: bool = True) -> float:
+        """Measure one cell; ``math.inf`` on overflow.
+
+        ``record=False`` measures without logging a Trial (used for the
+        paper's default-parameter reference run, which is not part of the
+        sweep).
+        """
+        nb = self.config.num_batches if num_batches is None else num_batches
+        try:
+            stats = self.evaluator(nworker, nprefetch, num_batches=nb,
+                                   epoch=self.config.epoch)
+        except MemoryOverflow:
+            if record:
+                self.trials.append(Trial(nworker, nprefetch, math.inf,
+                                         overflowed=True))
+            return math.inf
+        if stats.overflowed:
+            if record:
+                self.trials.append(Trial(nworker, nprefetch, math.inf,
+                                         overflowed=True))
+            return math.inf
+        if record:
+            self.trials.append(Trial(nworker, nprefetch, stats.seconds,
+                                     peak_bytes=stats.peak_loader_bytes))
+        return stats.seconds
+
+    def result(self, nworker: int, nprefetch: int, optimal_time: float,
+               *, default_time: Optional[float] = None) -> DPTResult:
+        return DPTResult(nworker, nprefetch, optimal_time, self.trials,
+                         default_time=default_time)
+
+
+def worker_rungs(num_cpu_cores: int, num_devices: int) -> List[int]:
+    """Algorithm 1's worker sweep: G, 2G, ... clamped to end exactly at N.
+
+    The paper's ``while i < N: i += G`` overshoots when N is not divisible
+    by G (it would measure more workers than the host has cores); the final
+    rung is clamped to N instead.
+    """
+    rungs: List[int] = []
+    i = 0
+    while i < num_cpu_cores:
+        i = min(i + num_devices, num_cpu_cores)
+        rungs.append(i)
+    return rungs
+
+
+@runtime_checkable
+class TuningStrategy(Protocol):
+    """A search policy over the (nWorker, nPrefetch) plane.
+
+    Strategies are stateless: all measurement state lives in the
+    TrialRecorder they are handed, so one strategy instance can serve many
+    searches and strategies can be chained on a shared recorder (the
+    warmstart+hillclimb combo does exactly that).
+    """
+
+    name: str
+
+    def tune(self, recorder: TrialRecorder, **kwargs) -> DPTResult:
+        ...
+
+
+_REGISTRY: Dict[str, Type] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: ``@register_strategy("grid")``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_strategy(name: str) -> TuningStrategy:
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown tuning strategy {name!r}; "
+            f"available: {available_strategies()}")
+    return _REGISTRY[name]()
+
+
+def available_strategies() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)
+
+
+def _ensure_builtins() -> None:
+    # strategies.py registers on import; lazy so base has no import cycle
+    from repro.tuning import strategies  # noqa: F401
+
+
+def tune(*, evaluator: Evaluator,
+         strategy: Union[str, TuningStrategy] = "grid",
+         config: DPTConfig = DPTConfig(), **kwargs) -> DPTResult:
+    """The single tuning front door.
+
+    ``strategy`` is a registry name (``"grid"``, ``"successive_halving"``,
+    ``"hillclimb"``, ``"warmstart_hillclimb"``, ``"goodput"``) or a
+    TuningStrategy instance; strategy-specific knobs (``start=``,
+    ``step_time_s=``, ...) pass through ``**kwargs``.  Every strategy
+    honours the same MemoryOverflow semantics and returns a ``DPTResult``
+    whose ``trials`` list the real measurements performed.
+    """
+    strat = get_strategy(strategy) if isinstance(strategy, str) else strategy
+    recorder = TrialRecorder(evaluator, config)
+    return strat.tune(recorder, **kwargs)

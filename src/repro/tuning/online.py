@@ -1,0 +1,206 @@
+"""Online retuning: tuning as a continuous background activity.
+
+The paper tunes once, offline, before training starts.  Production hosts
+drift: storage throughput sags under co-tenant load, CPU gets stolen, the
+batch mix changes.  :class:`OnlineTuner` closes the loop:
+
+  observe   — the trainer (or serving engine) feeds it one (data-wait,
+              step-time) pair per step: the goodput signal.  The loader is
+              healthy while its transfer time hides behind the model step;
+              it is hurting goodput when the step stalls waiting for data.
+  detect    — when the mean data-wait over a sliding window exceeds
+              ``stall_fraction`` of the mean compute time (with warmup and
+              a cooldown between retunes), drift is declared.
+  re-search — a bounded strategy from the unified ``tune(...)`` layer runs
+              against the live loader (trial cells measure on short
+              side-channel epochs; the live stream keeps flowing).
+  apply     — the winner is hot-swapped into the running DataLoader via
+              ``apply_params`` (pool drained at a batch boundary, sampler
+              state preserved, zero batches lost) and persisted in
+              :class:`DPTCache` under the machine/dataset fingerprint so
+              the next process on this host starts warm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+from repro.core.cache import DPTCache
+from repro.core.dpt import DPTConfig, DPTResult
+from repro.core.monitor import MemoryOverflow
+from repro.data.loader import DataLoader, LoaderParams
+from repro.tuning.base import tune
+from repro.utils.fingerprint import machine_fingerprint
+
+
+@dataclasses.dataclass
+class OnlineTunerConfig:
+    stall_fraction: float = 0.35     # data-wait / compute-time drift trigger
+    window: int = 8                  # steps in the drift window
+    warmup_steps: int = 4            # observations before drift can fire
+    cooldown_steps: int = 16         # min steps between retunes
+    # Measurement budget per trial cell.  Must comfortably exceed the max
+    # worker count under consideration: with budget <= nworker every config
+    # finishes in one parallel wave and all cells measure identically
+    # (pipeline fill, not steady-state rate).  ~3x max workers is a good
+    # floor for wall-clock evaluators.
+    retune_budget_batches: int = 8
+    max_prefetch: int = 4
+    strategy: str = "hillclimb"      # bounded re-search policy
+    max_search_steps: int = 12       # hillclimb step bound
+    min_improvement: float = 0.05    # swap only if >=5% faster than current
+    max_backoff: int = 8             # cooldown multiplier cap on no-win
+    num_cpu_cores: Optional[int] = None   # override DPTConfig.resolve()
+    num_devices: Optional[int] = None
+
+
+class OnlineTuner:
+    """Watches goodput and retunes a live DataLoader when it drifts."""
+
+    def __init__(self, loader: DataLoader, *,
+                 config: OnlineTunerConfig = OnlineTunerConfig(),
+                 evaluator=None, cache: Optional[DPTCache] = None,
+                 machine_fp: Optional[str] = None,
+                 dataset_fp: Optional[str] = None):
+        self.loader = loader
+        self.cfg = config
+        if evaluator is None:
+            from repro.core.evaluators import LoaderEvaluator
+            evaluator = LoaderEvaluator(loader, to_device=True)
+        self.evaluator = evaluator
+        self.cache = cache
+        self.machine_fp = machine_fp or machine_fingerprint()
+        self.dataset_fp = dataset_fp or loader.dataset.fingerprint()
+        self._data_s: deque = deque(maxlen=config.window)
+        self._compute_s: deque = deque(maxlen=config.window)
+        self._steps = 0
+        self._last_retune_step = -config.cooldown_steps
+        self._backoff = 1            # doubles when a re-search finds no win
+        self.retunes = 0
+        self.history: List[Dict[str, Any]] = []
+
+    # ---- the per-step goodput signal ---------------------------------------
+    def observe(self, *, data_s: float, step_s: float
+                ) -> Optional[LoaderParams]:
+        """Feed one step's data-wait and total step wall time.
+
+        Returns the newly applied LoaderParams when this observation
+        triggered a retune + hot-swap, else None.
+        """
+        self._steps += 1
+        self._data_s.append(max(0.0, data_s))
+        self._compute_s.append(max(1e-9, step_s - data_s))
+        if self._steps < self.cfg.warmup_steps:
+            return None
+        cooldown = self.cfg.cooldown_steps * self._backoff
+        if self._steps - self._last_retune_step < cooldown:
+            return None
+        if len(self._data_s) < self._data_s.maxlen:
+            return None
+        if not self.drifted:
+            return None
+        return self.force_retune(reason="goodput-drift")
+
+    @property
+    def stall_ratio(self) -> float:
+        """Mean data-wait over mean compute time in the current window."""
+        if not self._compute_s:
+            return 0.0
+        return (sum(self._data_s) / len(self._data_s)) \
+            / (sum(self._compute_s) / len(self._compute_s))
+
+    @property
+    def drifted(self) -> bool:
+        return self.stall_ratio > self.cfg.stall_fraction
+
+    # ---- bounded re-search + hot swap --------------------------------------
+    def _search(self) -> Optional[DPTResult]:
+        cfg = DPTConfig(num_cpu_cores=self.cfg.num_cpu_cores,
+                        num_devices=self.cfg.num_devices,
+                        max_prefetch=self.cfg.max_prefetch,
+                        num_batches=self.cfg.retune_budget_batches)
+        kwargs: Dict[str, Any] = {}
+        if self.cfg.strategy == "hillclimb":
+            _, G = cfg.resolve()
+            kwargs = {"start": (max(G, self.loader.params.num_workers),
+                                self.loader.params.prefetch_factor),
+                      "max_steps": self.cfg.max_search_steps}
+        elif self.cfg.strategy == "grid":
+            kwargs = {"measure_default": False}
+        try:
+            return tune(evaluator=self.evaluator, strategy=self.cfg.strategy,
+                        config=cfg, **kwargs)
+        except MemoryOverflow:
+            return None
+
+    def force_retune(self, *, reason: str = "forced"
+                     ) -> Optional[LoaderParams]:
+        """Run the bounded re-search now and hot-swap the winner in.
+
+        Also the entry point for external drift signals (e.g. the serving
+        frontend's batch-mix monitor).
+        """
+        orig = self.loader.params
+        t0 = time.perf_counter()
+        try:
+            result = self._search()
+        finally:
+            # trial measurements mutate loader.params via with_params;
+            # restore even on unexpected evaluator errors so a live stream
+            # never rebuilds on trial params
+            self.loader.with_params(orig)
+        self._last_retune_step = self._steps
+        self._data_s.clear()
+        self._compute_s.clear()
+        if result is None or not math.isfinite(result.optimal_time):
+            self._backoff = min(self.cfg.max_backoff, self._backoff * 2)
+            return None
+        # anti-churn: only swap when the winner beats the CURRENT config's
+        # own measured time by min_improvement.  The reference cell is the
+        # hillclimb's first trial (its start — the current config snapped
+        # onto the search lattice); for other strategies, the trial at the
+        # current cell if the sweep covered it.  A no-win search doubles
+        # the cooldown — if the loader is simply the bottleneck at its
+        # optimum, re-search cannot help and should get rarer.
+        if self.cfg.strategy == "hillclimb" and result.trials:
+            ref = result.trials[0]
+        else:
+            ref = next((t for t in result.trials
+                        if (t.nworker, t.nprefetch)
+                        == (orig.num_workers, orig.prefetch_factor)), None)
+        current = ref.seconds if ref is not None else None
+        same = (result.nworker, result.nprefetch) \
+            == (orig.num_workers, orig.prefetch_factor)
+        if ref is not None:
+            same = same or (result.nworker, result.nprefetch) \
+                == (ref.nworker, ref.nprefetch)
+        if same or (current is not None and result.optimal_time
+                    > (1.0 - self.cfg.min_improvement) * current):
+            self._backoff = min(self.cfg.max_backoff, self._backoff * 2)
+            self.history.append({
+                "step": self._steps, "reason": reason, "outcome": "kept",
+                "params": (orig.num_workers, orig.prefetch_factor),
+                "optimal_time": result.optimal_time,
+                "measurements": len(result.trials),
+                "search_s": time.perf_counter() - t0,
+            })
+            return None
+        self._backoff = 1
+        params = orig.replace(num_workers=result.nworker,
+                              prefetch_factor=result.nprefetch)
+        self.loader.apply_params(params)
+        if self.cache is not None:
+            self.cache.put(self.machine_fp, self.dataset_fp,
+                           self.loader.global_batch, result)
+        self.retunes += 1
+        self.history.append({
+            "step": self._steps, "reason": reason, "outcome": "applied",
+            "params": (result.nworker, result.nprefetch),
+            "optimal_time": result.optimal_time,
+            "measurements": len(result.trials),
+            "search_s": time.perf_counter() - t0,
+        })
+        return params

@@ -5,7 +5,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.monitor import MemoryBudget, MemoryMonitor, MemoryOverflow
 from repro.data import (DataLoader, Dataset, LatencyStorage, LoaderParams,

@@ -5,7 +5,7 @@ import sys
 import textwrap
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.distributed.fault_tolerance import (FailureInjector,
                                                HeartbeatRegistry,

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import (DPT, DPTConfig, LoaderSimulator, MachineProfile,
                         MemoryOverflow, MultiHostDPT, SimulatorEvaluator,
@@ -70,12 +70,23 @@ def test_default_params_match_pytorch_convention():
 
 
 def test_speedup_and_reduction_sign():
+    """An improvement over the defaults is a POSITIVE time reduction."""
     ev = TableEvaluator(lambda i, j: 2.0 if (i, j) != (4, 2) else 1.0)
     cfg = DPTConfig(num_cpu_cores=4, num_devices=4, max_prefetch=2,
                     num_batches=4)
     res = DPT(ev, cfg).run(measure_default=True)
-    assert res.speedup_vs_default >= 1.0
-    assert res.time_reduction_pct <= 0.0
+    assert res.speedup_vs_default == 2.0
+    assert res.time_reduction_pct == pytest.approx(50.0)
+
+
+def test_worker_sweep_clamps_final_rung_to_cores():
+    """N not divisible by G must not measure more workers than cores."""
+    ev = TableEvaluator(lambda i, j: float(i + j))
+    cfg = DPTConfig(num_cpu_cores=10, num_devices=4, max_prefetch=2,
+                    num_batches=4)
+    DPT(ev, cfg).run(measure_default=False)
+    workers = {i for i, _ in ev.calls}
+    assert workers == {4, 8, 10}          # last rung clamped, not 12
 
 
 @settings(max_examples=15, deadline=None)
@@ -88,10 +99,10 @@ def test_algorithm1_never_beats_exhaustive_property(g, n, p):
     cfg = DPTConfig(num_cpu_cores=n, num_devices=g, max_prefetch=p,
                     num_batches=2)
     res = DPT(ev, cfg).run(measure_default=False)
-    # mirror Algorithm 1's loop exactly (it evaluates once even when G > N)
+    # mirror Algorithm 1's loop exactly (final rung clamped to N)
     i_vals, i = [], 0
     while i < n:
-        i += g
+        i = min(i + g, n)
         i_vals.append(i)
     cells = [(i, j) for i in i_vals for j in range(1, p + 1)]
     assert res.optimal_time == min(fn(i, j) for i, j in cells)
@@ -161,6 +172,40 @@ def test_multihost_per_host_matches_independent_tuning():
     evs = fleet_evaluators(fleet, batch_size=32)
     res = MultiHostDPT(evs, CFG).run_per_host()
     assert len(set(res.fleet_params)) == 1   # homogeneous hosts agree
+
+
+# ---- run_uniform edge cases ----------------------------------------------
+_EDGE_CFG = DPTConfig(num_cpu_cores=2, num_devices=1, max_prefetch=2,
+                      num_batches=2)
+
+
+def test_multihost_uniform_single_feasible_cell():
+    """When only one cell survives on every host, uniform must pick it."""
+    only = (1, 1)
+    evs = [TableEvaluator(lambda i, j: float(i + j),
+                          overflow=lambda i, j: (i, j) != only)
+           for _ in range(3)]
+    res = MultiHostDPT(evs, _EDGE_CFG).run_uniform()
+    assert res.uniform_params == only
+    assert res.fleet_params == [only] * 3
+
+
+def test_multihost_uniform_no_common_feasible_cell_raises():
+    """Host A only feasible at i=1, host B only at i=2 -> no uniform cell."""
+    ev_a = TableEvaluator(lambda i, j: 1.0, overflow=lambda i, j: i > 1)
+    ev_b = TableEvaluator(lambda i, j: 1.0, overflow=lambda i, j: i == 1)
+    with pytest.raises(MemoryOverflow):
+        MultiHostDPT([ev_a, ev_b], _EDGE_CFG).run_uniform()
+
+
+def test_multihost_uniform_straggler_picks_max_minimizing_cell():
+    """The uniform choice minimizes the fleet MAX, not any host's own
+    optimum: host A loves (1,1) but the straggler B is terrible there."""
+    ev_a = TableEvaluator(lambda i, j: 1.0 if (i, j) == (1, 1) else 2.0)
+    ev_b = TableEvaluator(lambda i, j: 10.0 if (i, j) == (1, 1) else 2.0)
+    res = MultiHostDPT([ev_a, ev_b], _EDGE_CFG).run_uniform()
+    assert res.uniform_params != (1, 1)
+    assert res.fleet_time == 2.0
 
 
 # --------------------------------------------------------------------------

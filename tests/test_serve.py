@@ -91,3 +91,28 @@ def test_temperature_sampling_varies():
     a = eng.generate(prompts, 12, seed=0)
     b = eng.generate(prompts, 12, seed=1)
     assert not np.array_equal(a.tokens, b.tokens)
+
+
+# --------------------------------------------------------------------------
+# batch-mix drift monitor (no model needed)
+# --------------------------------------------------------------------------
+def test_batch_mix_monitor_fires_on_mix_change():
+    from repro.serve.engine import BatchMixMonitor
+    fired = []
+    mon = BatchMixMonitor(window=8, threshold=0.4, cooldown=32,
+                          on_drift=fired.append)
+    for _ in range(16):
+        mon.record((16, 4))         # steady short-prompt traffic
+    assert not fired
+    for _ in range(16):
+        mon.record((512, 64))       # traffic shifts to long prompts
+    assert mon.drifts == 1          # fired once, then cooldown holds
+    assert fired and (512, 64) in fired[0]
+
+
+def test_batch_mix_monitor_stable_mix_never_fires():
+    from repro.serve.engine import BatchMixMonitor
+    mon = BatchMixMonitor(window=8, threshold=0.4, cooldown=0)
+    for i in range(64):
+        mon.record((16, 4) if i % 2 else (32, 8))
+    assert mon.drifts == 0
