@@ -28,7 +28,10 @@ class LoaderEvaluator:
     def __call__(self, nworker: int, nprefetch: int, *, num_batches: int = 16,
                  epoch: int = 0) -> TransferStats:
         self.calls += 1
-        self.loader.with_params(LoaderParams(
+        # replace() keeps the loader's delivery knobs (fast_path, zero_copy,
+        # ordered, use_processes, ...) so trials measure the same machinery
+        # the live stream runs
+        self.loader.with_params(self.loader.params.replace(
             num_workers=nworker, prefetch_factor=nprefetch,
             device_prefetch=self.device_prefetch))
         return self.loader.measure_transfer_time(

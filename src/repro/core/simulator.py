@@ -142,18 +142,24 @@ class LoaderSimulator:
         # --- IO stage throughput (items/s) ---
         # Seek-queueing latency grows with concurrent readers (fitted from
         # paper Table 1b, see StorageProfile); aggregate bandwidth congests
-        # beyond io_streams readers; the bw ceiling always applies.
+        # beyond io_streams readers; the bw ceiling always applies.  Batched
+        # reads coalesce contiguous items into runs (StorageProfile
+        # .coalesced_run_len, 1.0 = legacy per-item requests), amortizing
+        # the base latency over the run — bandwidth is charged in full.
+        run = max(1.0, sp.coalesced_run_len)
         lat_k = sp.io_latency_s * (1.0 + sp.seek_congestion * K)
         agg_bw = sp.storage_bw / (1.0 + mp.io_congestion
                                   * max(0, K - mp.io_streams))
-        per_request = lat_k + sp.item_bytes * K / agg_bw
+        per_request = lat_k / run + sp.item_bytes * K / agg_bw
         rate_cold = min(mp.io_worker_eff(K) / per_request,
                         agg_bw / sp.item_bytes)
         rate_warm = sp.ram_bw / sp.item_bytes
         rate_io = 1.0 / ((1.0 - warm) / rate_cold + warm / rate_warm)
 
         # --- CPU stage throughput (items/s) ---
-        cpu_item_s = (sp.decode_cpu_s_fixed
+        # The vectorized batch transform amortizes the per-item fixed decode
+        # cost (StorageProfile.vectorized_decode_fixed_s; None = per-sample)
+        cpu_item_s = (sp.effective_decode_fixed_s
                       + sp.decode_cpu_s_per_byte * sp.decoded)
         rate_cpu = mp.cpu_speedup(K) / cpu_item_s
 

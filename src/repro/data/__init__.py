@@ -1,6 +1,8 @@
+from repro.data.arena import ArenaBatch, SlabArena, SlabSlot  # noqa: F401
 from repro.data.dataset import (  # noqa: F401
     Dataset,
     default_collate,
+    image_batch_transform,
     synthetic_image_dataset,
     token_dataset,
 )
@@ -17,5 +19,6 @@ from repro.data.storage import (  # noqa: F401
     LatencyStorage,
     StorageProfile,
     cifar10_profile,
+    coalesce_runs,
     coco_profile,
 )

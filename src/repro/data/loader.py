@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.monitor import (MemoryBudget, MemoryMonitor, MemoryOverflow,
                                 estimate_loader_footprint)
+from repro.data.arena import SlabArena
 from repro.data.dataset import Dataset
 from repro.data.prefetcher import DevicePrefetcher
 from repro.data.sampler import SamplerState, ShardedSampler
@@ -31,14 +32,34 @@ from repro.data.worker_pool import (ProcessWorkerPool, ThreadWorkerPool,
 @dataclasses.dataclass(frozen=True)
 class LoaderParams:
     """The tunable surface.  (num_workers, prefetch_factor) are the paper's
-    (nWorker, nPrefetch); device_prefetch is the TPU-side double-buffer."""
+    (nWorker, nPrefetch); device_prefetch is the TPU-side double-buffer.
+
+    Fast-path knobs (DESIGN.md §3): ``fast_path`` enables batched storage
+    reads + the vectorized transform when the dataset supports them (falls
+    back silently otherwise); ``zero_copy`` additionally collates into a
+    recycled slab arena — batches are then valid only until the next batch
+    is requested (copy fields you keep); ``ordered`` turns on the
+    order-preserving reordering buffer so delivery matches sampler order at
+    any worker count; ``transfer_threads``/``donate_transfer`` configure the
+    device prefetcher's HBM copy lanes.
+    """
     num_workers: int = 0
     prefetch_factor: int = 2
     device_prefetch: int = 2
     use_processes: bool = False
+    fast_path: bool = True
+    zero_copy: bool = False
+    ordered: bool = True
+    transfer_threads: int = 1
+    donate_transfer: bool = False
 
     def replace(self, **kw) -> "LoaderParams":
         return dataclasses.replace(self, **kw)
+
+    def arena_capacity(self) -> int:
+        """Slab-ring size: every queueable batch + the device buffers."""
+        return max(2, self.num_workers * self.prefetch_factor
+                   + self.device_prefetch)
 
 
 @dataclasses.dataclass
@@ -73,13 +94,26 @@ class LoaderStream:
         self.swaps = 0
         self._pending: Optional[LoaderParams] = None
         self._lock = threading.Lock()
-        host = self._host_stream()
+        self._prefetcher: Optional[DevicePrefetcher] = None
+        self._host_gen = self._host_stream()
         if to_device:
-            self._iter = iter(DevicePrefetcher(
-                host, depth=loader.params.device_prefetch,
-                sharding=loader.sharding))
+            self._prefetcher = DevicePrefetcher(
+                self._host_gen, depth=loader.params.device_prefetch,
+                sharding=loader.sharding,
+                transfer_threads=loader.params.transfer_threads,
+                donate=loader.params.donate_transfer)
+            self._iter = iter(self._prefetcher)
         else:
-            self._iter = host
+            self._iter = self._host_gen
+
+    def close(self) -> None:
+        """Tear the stream down deterministically: stop the prefetcher,
+        close the host generator (its finally shuts the pool down), and
+        return every in-flight arena slot to the loader's arena — so an
+        abandoned stream can never strand slots a future stream needs."""
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+        self._host_gen.close()
 
     def apply_params(self, params: LoaderParams) -> None:
         """Request a hot swap; takes effect at the next batch boundary."""
@@ -88,15 +122,20 @@ class LoaderStream:
 
     def _host_stream(self):
         while True:
-            pool, _monitor = self.loader._pool(iter(self.loader.sampler))
+            pool, _monitor = self.loader._pool(iter(self.loader.sampler),
+                                               for_stream=True)
             draining = False
-            for batch in pool:
-                if not draining and self._pending is not None:
-                    pool.request_drain()
-                    draining = True
-                yield batch
-            # pool ended: either drained (swap) or spuriously empty sampler
-            pool.shutdown()
+            try:
+                for batch in pool:
+                    if not draining and self._pending is not None:
+                        pool.request_drain()
+                        draining = True
+                    yield batch
+            finally:
+                # normal end (drain swap / empty sampler) or the stream
+                # being closed/abandoned: either way every in-flight slot
+                # must return to the arena
+                pool.shutdown()
             with self._lock:
                 params, self._pending = self._pending, None
             if params is not None:
@@ -127,6 +166,7 @@ class DataLoader:
         self.memory_budget = memory_budget
         self.sharding = sharding
         self._live_stream: Optional[LoaderStream] = None
+        self._stream_arena: Optional[SlabArena] = None
         self.sampler = ShardedSampler(
             len(dataset), global_batch, shuffle=shuffle, seed=seed,
             host_index=host_index, host_count=host_count,
@@ -163,7 +203,30 @@ class DataLoader:
         return params
 
     # ---- iteration ----------------------------------------------------------
-    def _pool(self, index_iter):
+    def _arena(self, *, for_stream: bool) -> Optional[SlabArena]:
+        """The slab arena for a new pool, when zero-copy engages.
+
+        The live stream's arena is owned by the loader and persists across
+        hot swaps (a drain delivers every in-flight slot and the consumer's
+        releases return them here, so the new pool starts with warm slabs);
+        side-channel pools (trial measurements racing the live stream,
+        one-epoch ``host_batches``) get their own throwaway arena so they
+        never contend with the stream for slots.
+        """
+        p = self.params
+        use_processes = p.use_processes and p.num_workers > 0
+        if not (p.fast_path and p.zero_copy and not use_processes
+                and self.dataset.supports_fast_path):
+            return None
+        if not for_stream:
+            return SlabArena(p.arena_capacity())
+        if self._stream_arena is None:
+            self._stream_arena = SlabArena(p.arena_capacity())
+        else:
+            self._stream_arena.resize(p.arena_capacity())
+        return self._stream_arena
+
+    def _pool(self, index_iter, *, for_stream: bool = False):
         monitor = MemoryMonitor(self.memory_budget)
         cls = ProcessWorkerPool if (self.params.use_processes
                                     and self.params.num_workers > 0) \
@@ -171,7 +234,10 @@ class DataLoader:
         pool = cls(self.dataset, index_iter,
                    num_workers=self.params.num_workers,
                    prefetch_factor=self.params.prefetch_factor,
-                   monitor=monitor)
+                   monitor=monitor,
+                   ordered=self.params.ordered,
+                   fast=self.params.fast_path,
+                   arena=self._arena(for_stream=for_stream))
         return pool, monitor
 
     def host_batches(self, *, epoch: Optional[int] = None,
@@ -185,7 +251,11 @@ class DataLoader:
         return iter(pool)
 
     def stream(self, *, to_device: bool = True) -> LoaderStream:
-        """The live, hot-swappable stream (see LoaderStream)."""
+        """The live, hot-swappable stream (see LoaderStream).  A previous
+        live stream is closed first: its worker pool would otherwise keep
+        holding slots of the shared stream arena forever."""
+        if self._live_stream is not None:
+            self._live_stream.close()
         self._live_stream = LoaderStream(self, to_device=to_device)
         return self._live_stream
 
@@ -230,7 +300,9 @@ class DataLoader:
             if to_device:
                 it = iter(DevicePrefetcher(
                     it, depth=self.params.device_prefetch,
-                    sharding=self.sharding))
+                    sharding=self.sharding,
+                    transfer_threads=self.params.transfer_threads,
+                    donate=self.params.donate_transfer))
             for _batch in it:
                 n += 1
         except MemoryOverflow:

@@ -4,55 +4,168 @@ The TPU analogue of the paper's pinned-memory + ``.cuda()`` copy: batches
 are ``jax.device_put`` onto the global ``NamedSharding`` (each host provides
 its local shard) ``depth`` steps ahead of the training loop, so the HBM DMA
 runs concurrently with the previous step's compute.
+
+Fast-path extensions (DESIGN.md §3):
+
+* ``donate=True`` passes ``jax.device_put(..., donate=True)`` so
+  device-resident inputs hand their buffers to the result instead of
+  copying (host numpy inputs are copied regardless — donation matters when
+  an upstream stage already produced ``jax.Array``s, e.g. re-sharding);
+* ``transfer_threads=2`` overlaps two host->HBM copies: a submitter thread
+  feeds a tiny executor in batch order and queues the futures, so delivery
+  order is preserved while transfers for consecutive batches run
+  concurrently with each other and with compute;
+* arena-backed batches (``ArenaBatch``) are ``detach``ed before an async
+  transfer and released the moment their device copy completes, returning
+  the slab to the ring as early as possible.
 """
 from __future__ import annotations
 
 import queue
 import threading
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Iterator, Optional
 
 import jax
 import numpy as np
 
+from repro.data.arena import ArenaBatch
+
 _SENTINEL = object()
 
 
-def put_global_batch(batch, sharding=None):
+def _leaf_aliases(dev, host: np.ndarray) -> bool:
+    """Does device array ``dev`` share its buffer with host array ``host``?
+    Only answerable (and only possible) on the CPU backend; anything that
+    can't report a buffer pointer genuinely copied."""
+    try:
+        return dev.unsafe_buffer_pointer() == \
+            host.__array_interface__["data"][0]
+    except Exception:  # pragma: no cover - non-CPU / sharded arrays
+        return False
+
+
+def put_global_batch(batch, sharding=None, *, donate: bool = False,
+                     may_alias=None):
     """Host batch (numpy dict) -> device array(s).
 
     With a NamedSharding whose mesh spans multiple processes, each host
     contributes its local shard via ``make_array_from_process_local_data``;
     single-process meshes (and sharding=None) fall back to device_put.
+
+    ``may_alias=False`` forces a real copy: on the CPU backend device_put
+    zero-copies numpy buffers when it can, which is exactly wrong for a
+    recycled arena slab (the "device" array would mutate when the slab is
+    reused) — the prefetcher passes False for arena-backed batches.
     """
     if sharding is None:
-        return jax.device_put(batch)
+        try:
+            return jax.device_put(batch, donate=donate, may_alias=may_alias)
+        except TypeError:  # pragma: no cover - older jax signature
+            return jax.device_put(batch)
 
     def _put(x):
         x = np.asarray(x)
         if jax.process_count() > 1:  # pragma: no cover - multi-host only
             return jax.make_array_from_process_local_data(sharding, x)
-        return jax.device_put(x, sharding)
+        try:
+            return jax.device_put(x, sharding, donate=donate,
+                                  may_alias=may_alias)
+        except TypeError:  # pragma: no cover - older jax signature
+            return jax.device_put(x, sharding)
 
     return jax.tree_util.tree_map(_put, batch)
 
 
 class DevicePrefetcher:
-    def __init__(self, host_iter: Iterator, *, depth: int = 2, sharding=None):
+    def __init__(self, host_iter: Iterator, *, depth: int = 2, sharding=None,
+                 transfer_threads: int = 1, donate: bool = False):
         self.depth = max(1, depth)
         self.sharding = sharding
+        self.donate = donate
+        self.transfer_threads = max(1, transfer_threads)
         self._queue: queue.Queue = queue.Queue(maxsize=self.depth)
         self._error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._executor = (ThreadPoolExecutor(
+            max_workers=self.transfer_threads,
+            thread_name_prefix="device-transfer")
+            if self.transfer_threads > 1 else None)
         self._thread = threading.Thread(target=self._run, args=(host_iter,),
                                         daemon=True)
         self._thread.start()
 
+    def close(self) -> None:
+        """Stop prefetching and unblock the producer thread (which may be
+        parked on the full output queue).  Safe to call more than once."""
+        self._stop.set()
+        while self._thread.is_alive():
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                self._thread.join(timeout=0.05)
+
+    def _transfer(self, batch):
+        # ArenaBatch is a dict subclass, which jax's pytree registry treats
+        # as a leaf — hand device_put a plain dict over the same arrays, and
+        # forbid buffer aliasing so the recycled slab can't mutate the
+        # transferred array (CPU backend zero-copies plain numpy otherwise)
+        arena_backed = isinstance(batch, ArenaBatch)
+        payload = dict(batch) if arena_backed else batch
+        try:
+            dev = put_global_batch(payload, self.sharding, donate=self.donate,
+                                   may_alias=False if arena_backed else None)
+            if arena_backed:
+                # device_put is asynchronous: the host->device copy may
+                # still be reading the slab.  Block (in this transfer
+                # thread, not the consumer) until the copy lands.
+                jax.block_until_ready(dev)
+                dev = self._ensure_private(dev, payload)
+            return dev
+        finally:
+            if arena_backed:
+                batch.release()    # even on a failed transfer: never leak
+
+    def _ensure_private(self, dev, host):
+        """Guarantee no transferred leaf still aliases its source slab.
+
+        Observed on jax 0.4.37 (CPU backend): concurrent ``device_put``
+        dispatches can ignore ``may_alias=False`` and return a zero-copy
+        view of the input — fatal for a slab that is about to be recycled.
+        Leaves that did get private buffers pass through untouched; an
+        aliased leaf is re-put from an explicit host copy (which jax may
+        alias freely: nothing ever mutates it).
+        """
+        fixed = {}
+        for k, d in dev.items():
+            h = np.asarray(host[k])
+            if _leaf_aliases(d, h):
+                d = put_global_batch(np.array(h), self.sharding,
+                                     donate=self.donate)
+            fixed[k] = d
+        return fixed
+
     def _run(self, host_iter):
         try:
             for batch in host_iter:
-                self._queue.put(put_global_batch(batch, self.sharding))
+                if self._stop.is_set():
+                    break
+                # take ownership *before* advancing host_iter (the pool
+                # would otherwise recycle the slab under an in-flight copy)
+                if isinstance(batch, ArenaBatch):
+                    batch.detach()
+                if self._executor is None:
+                    # synchronous put: the slab is free once _transfer
+                    # returns, before the pool's auto-release even runs
+                    self._queue.put(self._transfer(batch))
+                else:
+                    self._queue.put(self._executor.submit(
+                        self._transfer, batch))
         except BaseException as e:  # noqa: BLE001
             self._error = e
         finally:
+            if self._executor is not None:
+                self._executor.shutdown(wait=True)
             self._queue.put(_SENTINEL)
 
     def __iter__(self):
@@ -62,4 +175,6 @@ class DevicePrefetcher:
                 if self._error is not None:
                     raise self._error
                 return
+            if isinstance(item, Future):
+                item = item.result()
             yield item

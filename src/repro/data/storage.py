@@ -12,6 +12,14 @@ same tuner runs against:
   discrete-event simulator for the paper-table benchmarks (this container
   has one CPU core, so multi-core scaling curves are simulated; see
   DESIGN.md §2 "Assumptions changed").
+
+Every backend also exposes a vectorized ``read_batch(indices)`` — the
+storage half of the zero-copy fast path (DESIGN.md §3).  The default loops
+``read``; real backends do better: ``ArrayStorage`` gathers the whole batch
+in one fancy-index pass over a dense array, ``FileStorage`` memory-maps
+items, and ``LatencyStorage`` charges one base latency per *coalesced
+contiguous run* of misses instead of one per item (what a real storage
+stack's readahead/scatter-gather does for batched requests).
 """
 from __future__ import annotations
 
@@ -19,7 +27,7 @@ import dataclasses
 import os
 import threading
 import time
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -35,6 +43,15 @@ class StorageProfile:
     from the paper's own COCO numbers (405s cold / 8.7s warm epochs at 80x80
     imply ~8 ms base request latency growing ~0.3x per concurrent reader —
     random small reads on consumer storage serialize at the disk).
+
+    Fast-path coalescing fields (DESIGN.md §3): ``coalesced_run_len`` is the
+    mean number of items served per storage request when the loader issues
+    batched ``read_batch`` calls (1.0 = per-item requests, the legacy
+    behavior — also what a fully shuffled access pattern degrades to);
+    ``vectorized_decode_fixed_s`` is the amortized per-item fixed decode
+    cost under the vectorized batch transform (None = per-sample
+    ``decode_cpu_s_fixed``).  Defaults are neutral, so existing simulated
+    grids and their optima are bit-for-bit unchanged.
     """
     num_items: int
     item_bytes: float                 # mean encoded item size
@@ -46,6 +63,8 @@ class StorageProfile:
     ram_bw: float = 10.0e9            # page-cache read B/s
     decode_cpu_s_per_byte: float = 4e-9  # decode CPU s per *decoded* byte
     decode_cpu_s_fixed: float = 150e-6   # per-item fixed CPU cost
+    coalesced_run_len: float = 1.0       # items per request under read_batch
+    vectorized_decode_fixed_s: Optional[float] = None
 
     @property
     def decoded(self) -> float:
@@ -54,6 +73,43 @@ class StorageProfile:
     @property
     def dataset_bytes(self) -> float:
         return self.num_items * self.item_bytes
+
+    @property
+    def effective_decode_fixed_s(self) -> float:
+        if self.vectorized_decode_fixed_s is None:
+            return self.decode_cpu_s_fixed
+        return self.vectorized_decode_fixed_s
+
+    def with_fast_path(self, *, run_len: float = 8.0,
+                       decode_fixed_s: Optional[float] = None
+                       ) -> "StorageProfile":
+        """This profile as seen by the batched fast path: requests coalesce
+        into runs of ``run_len`` items and the per-item fixed decode cost
+        amortizes to ``decode_fixed_s`` (default: 1/8 of per-sample)."""
+        if decode_fixed_s is None:
+            decode_fixed_s = self.decode_cpu_s_fixed / 8.0
+        return dataclasses.replace(
+            self, coalesced_run_len=max(1.0, run_len),
+            vectorized_decode_fixed_s=decode_fixed_s)
+
+
+def coalesce_runs(indices: Sequence[int]) -> List[Tuple[int, int]]:
+    """Group sorted(indices) into maximal contiguous runs [(start, length)].
+
+    This is the request pattern a batched read issues: one storage request
+    per run (readahead serves the rest of the run from the same seek).
+    """
+    if len(indices) == 0:
+        return []
+    idx = sorted(int(i) for i in indices)
+    runs = [(idx[0], 1)]
+    for i in idx[1:]:
+        start, length = runs[-1]
+        if i == start + length:
+            runs[-1] = (start, length + 1)
+        else:
+            runs.append((i, 1))
+    return runs
 
 
 class Storage:
@@ -64,6 +120,12 @@ class Storage:
 
     def read(self, idx: int) -> np.ndarray:
         raise NotImplementedError
+
+    def read_batch(self, indices) -> Union[np.ndarray, List[np.ndarray]]:
+        """Vectorized gather.  May return a stacked ``(B, ...)`` array when
+        items are uniform, or a list of per-item arrays.  The default loops
+        ``read``; backends override with genuinely batched IO."""
+        return [self.read(int(i)) for i in indices]
 
     def item_nbytes(self, idx: int) -> int:
         raise NotImplementedError
@@ -77,8 +139,20 @@ class Storage:
 
 
 class ArrayStorage(Storage):
+    """In-memory items.  Uniform-shape items are densified into one
+    ``(N, ...)`` array at construction, so ``read_batch`` is a single
+    fancy-index gather (one C call) instead of B Python reads."""
+
     def __init__(self, items):
         self._items = list(items)
+        self._dense: Optional[np.ndarray] = None
+        if self._items:
+            first = np.asarray(self._items[0])
+            if all(isinstance(a, np.ndarray) and a.shape == first.shape
+                   and a.dtype == first.dtype for a in self._items):
+                self._dense = np.stack(self._items)
+                # items become views of the dense array: no duplication
+                self._items = list(self._dense)
 
     def __len__(self):
         return len(self._items)
@@ -86,17 +160,34 @@ class ArrayStorage(Storage):
     def read(self, idx):
         return self._items[idx]
 
+    def read_batch(self, indices):
+        if self._dense is not None:
+            return self._dense[np.asarray(indices, dtype=np.intp)]
+        return [self._items[int(i)] for i in indices]
+
     def item_nbytes(self, idx):
         return self._items[idx].nbytes
 
 
 class FileStorage(Storage):
-    """One .npy file per item under ``root``."""
+    """One .npy file per item under ``root``.
+
+    Per-item sizes are stat'ed once at construction (DPT's static memory
+    pre-check reads them repeatedly); ``read_batch`` goes through cached
+    ``np.load(mmap_mode='r')`` handles so repeat epochs hit the page cache
+    without re-parsing headers.
+    """
+
+    _MAX_MMAPS = 4096   # cap cached file handles
 
     def __init__(self, root: str):
         self.root = root
         self._files = sorted(
             f for f in os.listdir(root) if f.endswith(".npy"))
+        self._paths = [os.path.join(root, f) for f in self._files]
+        self._sizes = [os.path.getsize(p) for p in self._paths]
+        self._mmaps: dict = {}
+        self._mmap_lock = threading.Lock()
 
     @classmethod
     def create(cls, root: str, items) -> "FileStorage":
@@ -109,10 +200,35 @@ class FileStorage(Storage):
         return len(self._files)
 
     def read(self, idx):
-        return np.load(os.path.join(self.root, self._files[idx]))
+        return np.load(self._paths[idx])
+
+    def _mmap(self, idx: int) -> np.ndarray:
+        with self._mmap_lock:
+            m = self._mmaps.get(idx)
+            if m is None:
+                if len(self._mmaps) >= self._MAX_MMAPS:
+                    self._mmaps.clear()
+                m = self._mmaps[idx] = np.load(self._paths[idx],
+                                               mmap_mode="r")
+            return m
+
+    def read_batch(self, indices):
+        return [np.asarray(self._mmap(int(i))) for i in indices]
 
     def item_nbytes(self, idx):
-        return os.path.getsize(os.path.join(self.root, self._files[idx]))
+        return self._sizes[idx]
+
+    # mmap handles and their lock don't cross process boundaries — a forked
+    # ProcessWorkerPool pickles the dataset per task (see _mp_get_batch)
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state["_mmaps"] = {}
+        state["_mmap_lock"] = None
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._mmap_lock = threading.Lock()
 
 
 class LatencyStorage(Storage):
@@ -122,6 +238,13 @@ class LatencyStorage(Storage):
     gains — this is how the loader's parallel machinery is exercised for
     real on a 1-core container.  An optional page cache makes repeat reads
     cheap (the paper's 1st-vs-2nd-epoch effect).
+
+    ``read_batch`` models what a batched request actually costs: cache
+    misses are sorted and coalesced into contiguous runs, each run pays ONE
+    base latency plus its total bytes over the bandwidth (``coalesce_runs``)
+    — a fully contiguous batch of B items costs 1 seek instead of B.
+    Counters: ``reads``/``cache_hits`` are per item, ``batched_reads`` per
+    ``read_batch`` call, ``coalesced_requests`` per run actually issued.
     """
 
     def __init__(self, inner: Storage, *, latency_s: float = 1e-3,
@@ -137,12 +260,22 @@ class LatencyStorage(Storage):
         self._sem = threading.Semaphore(concurrent_streams)
         self.reads = 0
         self.cache_hits = 0
+        self.batched_reads = 0
+        self.coalesced_requests = 0
 
     def __len__(self):
         return len(self.inner)
 
     def item_nbytes(self, idx):
         return self.inner.item_nbytes(idx)
+
+    def _maybe_cache(self, idx: int, nbytes: int, data) -> None:
+        if self.cache_bytes:
+            with self._lock:
+                if (idx not in self._cache
+                        and self._cache_used + nbytes <= self.cache_bytes):
+                    self._cache[idx] = data
+                    self._cache_used += nbytes
 
     def read(self, idx):
         with self._lock:
@@ -156,12 +289,33 @@ class LatencyStorage(Storage):
         with self._sem:  # bounded concurrent streams share the bus
             time.sleep(self.latency_s + nbytes / self.bandwidth)
         data = self.inner.read(idx)
-        if self.cache_bytes:
-            with self._lock:
-                if self._cache_used + nbytes <= self.cache_bytes:
-                    self._cache[idx] = data
-                    self._cache_used += nbytes
+        self._maybe_cache(idx, nbytes, data)
         return data
+
+    def read_batch(self, indices):
+        indices = [int(i) for i in indices]
+        with self._lock:
+            self.reads += len(indices)
+            self.batched_reads += 1
+            hits = {i for i in indices if i in self._cache}
+            self.cache_hits += len(hits)
+        misses = [i for i in indices if i not in hits]
+        runs = coalesce_runs(misses)
+        for start, length in runs:
+            run_bytes = sum(self.inner.item_nbytes(start + k)
+                            for k in range(length))
+            with self._sem:  # one request per coalesced run
+                time.sleep(self.latency_s + run_bytes / self.bandwidth)
+        with self._lock:
+            self.coalesced_requests += len(runs)
+        miss_data = {}
+        if misses:
+            fetched = self.inner.read_batch(misses)
+            for i, data in zip(misses, fetched):
+                miss_data[i] = data
+                self._maybe_cache(i, self.inner.item_nbytes(i), data)
+        return [self._cache[i] if i in hits else miss_data[i]
+                for i in indices]
 
 
 # --- canonical dataset profiles used by the paper-table benchmarks --------

@@ -7,7 +7,22 @@ idiomatic JAX-host analogue of PyTorch's forked dataloader workers).
 
 Backpressure implements PyTorch ``prefetch_factor`` semantics: at most
 ``num_workers * prefetch_factor`` finished batches may be queued; workers
-block (stop consuming memory) when the consumer lags.
+block (stop consuming memory) when the consumer lags.  ``ProcessWorkerPool``
+bounds its in-flight task window to the same depth (a semaphore throttles
+the pool's task pump), so process mode has real backpressure too.
+
+Delivery is **order-preserving** by default (``ordered=True``): every
+index-batch gets a sequence number when it is pulled from the sampler, and
+a small reordering buffer on the consumer side yields batches in exactly
+sampler order at any worker count — what lets hot-swap accounting assert
+exact batch sequences.  ``ordered=False`` restores completion-order
+delivery (slightly lower head-of-line latency).
+
+Zero-copy fast path (DESIGN.md §3): given a ``SlabArena``, workers acquire
+a recycled slot, collate straight into its slabs, and pass the *slot token*
+through the queue — ``nbytes`` comes from the slot (computed once at spec
+time), and the consumer's advance recycles the slot.  Hot-swap drain
+delivers every in-flight slot before the pool retires, so nothing leaks.
 
 Both pools support ``request_drain()``: stop pulling new index-batches but
 deliver everything already pulled, then end the consumer's iteration.
@@ -25,11 +40,19 @@ from typing import Callable, Iterator, Optional
 import numpy as np
 
 from repro.core.monitor import MemoryMonitor, MemoryOverflow
+from repro.data.arena import ArenaBatch, SlabArena, maybe_release
 
 _SENTINEL = object()
 
 
+def _mp_get_batch(dataset, fast, idx):
+    """Module-level task fn so the fork pool pickles only (dataset, fast)."""
+    return dataset.get_batch(idx, fast=fast)
+
+
 def batch_nbytes(batch) -> int:
+    if isinstance(batch, ArenaBatch):
+        return batch.nbytes          # computed once at slot reservation
     if isinstance(batch, dict):
         return int(sum(np.asarray(v).nbytes for v in batch.values()))
     return int(np.asarray(batch).nbytes)
@@ -59,19 +82,32 @@ class _DrainableIter:
     def drain(self) -> None:
         self._stop.set()
 
+    @property
+    def drained(self) -> bool:
+        return self._stop.is_set()
+
 
 class ThreadWorkerPool:
     """Pulls index-batches from ``index_iter``, emits collated batches."""
 
     def __init__(self, dataset, index_iter: Iterator[np.ndarray], *,
                  num_workers: int, prefetch_factor: int = 2,
-                 monitor: Optional[MemoryMonitor] = None):
+                 monitor: Optional[MemoryMonitor] = None,
+                 ordered: bool = True, fast: bool = True,
+                 arena: Optional[SlabArena] = None):
         self.dataset = dataset
         self.num_workers = max(0, num_workers)
         self.prefetch_factor = max(1, prefetch_factor)
         self.monitor = monitor or MemoryMonitor()
+        self.ordered = ordered
+        self.fast = fast
+        self.arena = arena if (fast and getattr(
+            dataset, "supports_fast_path", False)) else None
         self._index_iter = _DrainableIter(index_iter)
         self._iter_lock = threading.Lock()
+        self._seq = 0
+        self._delivered = 0
+        self._window_cond = threading.Condition()
         self._error: Optional[BaseException] = None
         self._stop = threading.Event()
 
@@ -80,6 +116,12 @@ class ThreadWorkerPool:
             self._threads = []
             return
         depth = self.num_workers * self.prefetch_factor
+        # Ordered mode: the consumer parks out-of-order arrivals in a
+        # reordering buffer, which frees queue slots — without a cap on the
+        # *sequence window*, workers behind one straggler could pull and
+        # collate the whole epoch (unbounded memory).  A worker may not pull
+        # sequence S until S - delivered < window.
+        self._window = depth + self.num_workers
         self._queue: queue.Queue = queue.Queue(maxsize=depth)
         self._live = self.num_workers
         self._live_lock = threading.Lock()
@@ -90,24 +132,95 @@ class ThreadWorkerPool:
         for t in self._threads:
             t.start()
 
-    # ---- worker body -------------------------------------------------------
-    def _next_indices(self):
-        with self._iter_lock:
-            return next(self._index_iter)
+    # ---- batch production --------------------------------------------------
+    def _await_window(self):
+        """Ordered-mode backpressure: block while the pulled-but-undelivered
+        sequence span is at the window bound (wakes on delivery, drain, or
+        stop)."""
+        with self._window_cond:
+            while (self._seq - self._delivered >= self._window
+                   and not self._stop.is_set()
+                   and not self._index_iter.drained):
+                self._window_cond.wait(0.05)
 
+    def _mark_delivered(self):
+        with self._window_cond:
+            self._delivered += 1
+            self._window_cond.notify_all()
+
+    def _next_indices(self):
+        if self.ordered:
+            self._await_window()
+        with self._iter_lock:
+            idx = next(self._index_iter)
+            seq = self._seq
+            self._seq += 1
+            return seq, idx
+
+    def _acquire_slot(self):
+        """Reserve an arena slot (None: no arena / spec unknown / stopped).
+
+        Workers call this BEFORE pulling a sequence number.  Ordering
+        matters for liveness: the ordered consumer pins later-sequence
+        batches in its reordering buffer until the head sequence arrives,
+        so a worker that pulled a sequence and only then waited for a slot
+        could starve behind its own successors.  Acquire-first guarantees
+        every pulled-but-undelivered batch already owns its buffer and can
+        always complete.
+        """
+        if self.arena is None:
+            return None
+        return self.arena.acquire(stop=self._stop)
+
+    def _collate(self, idx, slot):
+        """One collated batch (+ its nbytes), into ``slot`` if given."""
+        if slot is not None:
+            batch = self.dataset.get_batch(idx, out=slot.arrays,
+                                           fast=self.fast)
+            if batch is not slot.arrays:    # slab didn't fit (ragged tail)
+                slot.release()
+                return batch, batch_nbytes(batch)
+            return ArenaBatch(slot), slot.nbytes
+        batch = self.dataset.get_batch(idx, fast=self.fast)
+        if self.arena is not None:
+            adopted = self.arena.adopt(batch)   # establishes the spec
+            if adopted is not None:
+                return ArenaBatch(adopted), adopted.nbytes
+        return batch, batch_nbytes(batch)
+
+    # ---- worker body -------------------------------------------------------
     def _work(self):
         try:
             while not self._stop.is_set():
-                try:
-                    idx = self._next_indices()
-                except StopIteration:
+                slot = self._acquire_slot()
+                if slot is None and self.arena is not None \
+                        and self._stop.is_set():
                     break
-                batch = self.dataset.get_batch(idx)
-                nbytes = batch_nbytes(batch)
-                self.monitor.reserve(nbytes)
-                self._queue.put((batch, nbytes))
+                try:
+                    seq, idx = self._next_indices()
+                except StopIteration:
+                    if slot is not None:
+                        slot.release()
+                    break
+                try:
+                    batch, nbytes = self._collate(idx, slot)
+                except BaseException:
+                    if slot is not None:    # not yet wrapped: recycle it
+                        slot.release()
+                    raise
+                try:
+                    self.monitor.reserve(nbytes)
+                    self._queue.put((seq, batch, nbytes))
+                except BaseException:
+                    maybe_release(batch, owned_only=False)
+                    raise
         except BaseException as e:  # noqa: BLE001 - surfaced to consumer
             self._error = e
+            # A died worker leaves a hole in the sequence: the ordered
+            # consumer would park every later batch forever while healthy
+            # workers keep producing.  An error is pool-fatal — stop the
+            # siblings so the sentinel (and the raise) arrives promptly.
+            self._stop.set()
         finally:
             with self._live_lock:
                 self._live -= 1
@@ -120,64 +233,158 @@ class ThreadWorkerPool:
         deliver, then iteration ends (the hot-swap batch boundary)."""
         self._index_iter.drain()
 
+    def _iter_inline(self):
+        prev = None
+        try:
+            for idx in self._index_iter:   # _DrainableIter ends on drain
+                slot = self._acquire_slot()
+                if slot is None and self.arena is not None \
+                        and self._stop.is_set():
+                    return
+                batch, _ = self._collate(idx, slot)
+                maybe_release(prev)        # consumer advanced past it
+                prev = batch               # set BEFORE yield: teardown at
+                yield batch                # the yield still recycles it
+        finally:
+            maybe_release(prev)
+
     def __iter__(self):
         if self.num_workers == 0:
-            for idx in self._index_iter:   # _DrainableIter ends on drain
-                yield self.dataset.get_batch(idx)
+            yield from self._iter_inline()
             return
-        while True:
-            item = self._queue.get()
-            if item is _SENTINEL:
+        reorder: dict = {}
+        next_seq = 0
+        prev = None
+        try:
+            while True:
+                if self.ordered and next_seq in reorder:
+                    batch, nbytes = reorder.pop(next_seq)
+                else:
+                    item = self._queue.get()
+                    if item is _SENTINEL:
+                        if self._error is not None:
+                            raise self._error
+                        # drain any stragglers the buffer still holds
+                        for seq in sorted(reorder):
+                            batch, nbytes = reorder.pop(seq)
+                            self.monitor.release(nbytes)
+                            maybe_release(prev)
+                            prev = batch
+                            yield batch
+                        return
+                    seq, batch, nbytes = item
+                    if self.ordered and seq != next_seq:
+                        reorder[seq] = (batch, nbytes)
+                        continue
+                self.monitor.release(nbytes)
+                next_seq += 1
+                self._mark_delivered()
                 if self._error is not None:
+                    maybe_release(batch, owned_only=False)  # in hand, unyielded
+                    self.shutdown()
                     raise self._error
-                return
-            batch, nbytes = item
-            self.monitor.release(nbytes)
-            if self._error is not None:
-                self.shutdown()
-                raise self._error
-            yield batch
+                maybe_release(prev)        # consumer advanced past it
+                prev = batch               # set BEFORE yield: teardown at
+                yield batch                # the yield still recycles it
+        finally:
+            maybe_release(prev)
+            for batch, nbytes in reorder.values():   # abandoned mid-buffer
+                self.monitor.release(nbytes)
+                maybe_release(batch, owned_only=False)
+            reorder.clear()
 
     def shutdown(self):
+        """Stop workers and recycle everything in flight.
+
+        Must leave NO arena slot behind: workers parked in ``queue.put``
+        hold reserved batches, so the queue is drained repeatedly (each get
+        admits a blocked put, whose worker then sees the stop flag and
+        exits) until every worker thread is gone and the queue is empty.
+        """
         self._stop.set()
-        if self._queue is not None:
+        self._index_iter.drain()
+        if self._queue is None:
+            return
+        while (any(t.is_alive() for t in self._threads)
+               or not self._queue.empty()):
             try:
-                while True:
-                    item = self._queue.get_nowait()
-                    if item is not _SENTINEL:
-                        self.monitor.release(item[1])
+                item = self._queue.get(timeout=0.05)
             except queue.Empty:
-                pass
+                continue
+            if item is not _SENTINEL:
+                self.monitor.release(item[2])
+                maybe_release(item[1], owned_only=False)
 
 
 class ProcessWorkerPool:
     """Process-based fallback (GIL-heavy transforms).  Uses a fork pool and
-    chunked imap; heavier per-batch overhead, same interface."""
+    chunked imap; heavier per-batch overhead, same interface.
+
+    In-flight work is bounded to ``num_workers * prefetch_factor``
+    index-batches: the task pump blocks on a semaphore that the consumer
+    releases per delivered batch — real ``prefetch_factor`` backpressure
+    (previously the parameter was accepted and ignored: ``imap`` pumped the
+    whole epoch into the task queue).  ``imap`` already preserves submission
+    order, so delivery is always ordered.  Arena slabs cannot cross the
+    process boundary; batches arrive as fresh (pickled) dicts, but workers
+    still use the batched read + vectorized transform inside the child.
+    """
 
     def __init__(self, dataset, index_iter, *, num_workers: int,
                  prefetch_factor: int = 2,
-                 monitor: Optional[MemoryMonitor] = None):
+                 monitor: Optional[MemoryMonitor] = None,
+                 ordered: bool = True, fast: bool = True,
+                 arena: Optional[SlabArena] = None):
         import multiprocessing as mp
         self.dataset = dataset
         self.monitor = monitor or MemoryMonitor()
         self._indices = _DrainableIter(index_iter)
         self.num_workers = max(1, num_workers)
         self.prefetch_factor = max(1, prefetch_factor)
+        self.fast = fast
+        self._inflight = threading.BoundedSemaphore(
+            self.num_workers * self.prefetch_factor)
+        self._stopped = False
         self._pool = mp.get_context("fork").Pool(self.num_workers)
 
     def request_drain(self) -> None:
         self._indices.drain()
 
+    def _bounded_indices(self):
+        """Yield index-batches to the pool's task pump, at most
+        num_workers * prefetch_factor ahead of the consumer."""
+        for idx in self._indices:
+            self._inflight.acquire()
+            if self._stopped:   # shutdown() released us just to unblock
+                return
+            yield idx
+
     def __iter__(self):
+        import functools
+        fn = functools.partial(_mp_get_batch, self.dataset, self.fast)
         try:
             for batch in self._pool.imap(
-                    self.dataset.get_batch, self._indices,
+                    fn, self._bounded_indices(),
                     chunksize=1):
-                self.monitor.reserve(batch_nbytes(batch))
-                self.monitor.release(batch_nbytes(batch))
+                try:
+                    self._inflight.release()
+                except ValueError:      # pragma: no cover - defensive
+                    pass
+                nbytes = batch_nbytes(batch)
+                self.monitor.reserve(nbytes)
+                self.monitor.release(nbytes)
                 yield batch
         finally:
             self.shutdown()
 
     def shutdown(self):
+        # Pool.terminate() joins the task-pump thread, which may be parked
+        # in _bounded_indices' semaphore acquire if the consumer quit early
+        # — unblock it first or terminate() never returns.
+        self._stopped = True
+        while True:
+            try:
+                self._inflight.release()
+            except ValueError:          # back at the bound: pump is awake
+                break
         self._pool.terminate()

@@ -1,0 +1,569 @@
+"""Zero-copy fast path: batched reads, slab-arena collation, ordered
+delivery, coalesced latency accounting, and the donated device transfer."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import LoaderSimulator, MachineProfile
+from repro.data import (ArenaBatch, ArrayStorage, DataLoader, Dataset,
+                        FileStorage, LatencyStorage, LoaderParams, SlabArena,
+                        ShardedSampler, cifar10_profile, coalesce_runs,
+                        coco_profile, synthetic_image_dataset, token_dataset)
+from repro.data.dataset import image_transform
+from repro.data.prefetcher import DevicePrefetcher
+from repro.data.worker_pool import ProcessWorkerPool, ThreadWorkerPool
+
+FAST = LoaderParams(fast_path=True, zero_copy=True)
+LEGACY = LoaderParams(fast_path=False)
+
+
+# --------------------------------------------------------------------------
+# batched collation == per-sample collation, byte for byte
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mk", [
+    lambda: synthetic_image_dataset(64, 16, seed=3),
+    lambda: token_dataset(64, 12, 100, seed=3),
+])
+def test_batched_collation_matches_per_sample(mk):
+    ds = mk()
+    assert ds.supports_fast_path
+    idx = np.arange(64)[7:31]
+    slow = ds.get_batch(idx, fast=False)
+    fast = ds.get_batch(idx, fast=True)
+    assert set(slow) == set(fast)
+    for k in slow:
+        a, b = np.asarray(slow[k]), np.asarray(fast[k])
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes(), k
+
+
+def test_batched_collation_into_preallocated_out():
+    ds = synthetic_image_dataset(32, 8, seed=0)
+    idx = np.arange(8)
+    ref = ds.get_batch(idx, fast=False)
+    out = {"image": np.empty((8, 8, 8, 3), np.float32),
+           "label": np.empty((8,), np.int32)}
+    got = ds.get_batch(idx, out=out)
+    assert got is out and got["image"] is out["image"]
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(ref[k]), got[k])
+    # mismatched batch dim: out is ignored, fresh arrays returned
+    got2 = ds.get_batch(np.arange(4), out=out)
+    assert got2 is not out and got2["image"].shape[0] == 4
+
+
+def test_swapping_transform_disables_fast_path():
+    ds = synthetic_image_dataset(16, 8, seed=0)
+    assert ds.supports_fast_path
+
+    def boom(x):
+        raise ValueError("boom")
+
+    ds.transform = boom
+    assert not ds.supports_fast_path
+    with pytest.raises(ValueError, match="boom"):
+        ds.get_batch(np.arange(4))
+
+
+# --------------------------------------------------------------------------
+# storage read_batch
+# --------------------------------------------------------------------------
+def test_array_storage_dense_gather():
+    items = [np.full((3, 2), i, np.int16) for i in range(20)]
+    st = ArrayStorage(items)
+    got = st.read_batch([4, 9, 1])
+    assert isinstance(got, np.ndarray) and got.shape == (3, 3, 2)
+    np.testing.assert_array_equal(got[1], np.full((3, 2), 9, np.int16))
+    # ragged items fall back to a list
+    ragged = ArrayStorage([np.zeros(2), np.zeros(3)])
+    out = ragged.read_batch([1, 0])
+    assert isinstance(out, list) and out[0].shape == (3,)
+
+
+def test_file_storage_caches_sizes_and_read_batch(tmp_path, monkeypatch):
+    items = [np.arange(6, dtype=np.int64).reshape(2, 3) + i for i in range(5)]
+    st = FileStorage.create(str(tmp_path), items)
+    expected = [os.path.getsize(os.path.join(str(tmp_path), f"{i:08d}.npy"))
+                for i in range(5)]
+    calls = {"n": 0}
+    real_getsize = os.path.getsize
+
+    def counting_getsize(p):
+        calls["n"] += 1
+        return real_getsize(p)
+
+    monkeypatch.setattr(os.path, "getsize", counting_getsize)
+    for _ in range(3):                 # DPT's pre-check hammers these
+        for i in range(5):
+            assert st.item_nbytes(i) == expected[i]
+    assert calls["n"] == 0             # sizes were stat'ed once, at init
+    got = st.read_batch([2, 0, 4])
+    for g, i in zip(got, [2, 0, 4]):
+        np.testing.assert_array_equal(g, items[i])
+
+
+def test_coalesce_runs():
+    assert coalesce_runs([]) == []
+    assert coalesce_runs([5]) == [(5, 1)]
+    assert coalesce_runs([3, 1, 2, 7, 8, 0]) == [(0, 4), (7, 2)]
+
+
+def test_latency_storage_coalesced_run_accounting():
+    inner = ArrayStorage([np.zeros(4, np.float32) for _ in range(64)])
+    lat = LatencyStorage(inner, latency_s=5e-3, bandwidth=1e12)
+    t0 = time.perf_counter()
+    got = lat.read_batch(list(range(16)))          # one contiguous run
+    contiguous = time.perf_counter() - t0
+    assert lat.coalesced_requests == 1 and lat.batched_reads == 1
+    assert len(got) == 16
+    t0 = time.perf_counter()
+    lat.read_batch(list(range(16, 64, 3)))         # 16 isolated items
+    scattered = time.perf_counter() - t0
+    assert lat.coalesced_requests == 1 + 16
+    assert contiguous < scattered / 3              # 1 seek vs 16 seeks
+    assert lat.reads == 32 and lat.cache_hits == 0
+
+
+def test_latency_storage_read_batch_uses_cache():
+    inner = ArrayStorage([np.full(4, i, np.float32) for i in range(8)])
+    lat = LatencyStorage(inner, latency_s=1e-4, cache_bytes=10**6)
+    lat.read_batch(range(8))
+    lat.read_batch(range(8))
+    assert lat.cache_hits == 8
+    assert lat.coalesced_requests == 1             # second pass: all cached
+    np.testing.assert_array_equal(lat.read_batch([3])[0],
+                                  np.full(4, 3, np.float32))
+
+
+# --------------------------------------------------------------------------
+# slab arena
+# --------------------------------------------------------------------------
+def test_arena_recycles_slots_and_reaches_full_hit_rate():
+    ds = synthetic_image_dataset(512, 8, seed=0)
+    dl = DataLoader(ds, 16, params=FAST.replace(num_workers=2,
+                                                prefetch_factor=2),
+                    shuffle=False, seed=0)
+    stream = dl.stream(to_device=False)
+    buffers = set()
+    for i in range(24):
+        b = next(stream)
+        assert isinstance(b, ArenaBatch)
+        buffers.add(b["image"].__array_interface__["data"][0])
+    arena = dl._stream_arena
+    assert arena is not None
+    assert arena.allocated <= dl.params.arena_capacity()
+    # steady state: every buffer ever yielded came from the fixed slab ring
+    assert len(buffers) <= arena.allocated
+    # warm up until the lazily-grown ring stops allocating...
+    for _ in range(8):
+        misses_before = arena.misses
+        for _ in range(16):
+            next(stream)
+        if arena.misses == misses_before:
+            break
+    # ...then hit rate is 100%: no new slabs, ever
+    for _ in range(32):
+        next(stream)
+    assert arena.misses == misses_before
+    assert arena.misses <= dl.params.arena_capacity()  # ring-bounded allocs
+    assert arena.hits > 0
+
+
+def test_arena_batch_valid_until_next_request():
+    ds = synthetic_image_dataset(256, 8, seed=0)
+    dl = DataLoader(ds, 8, params=FAST.replace(num_workers=0),
+                    shuffle=False, seed=0)
+    it = dl.host_batches(epoch=0)
+    ref = ds.get_batch(dl.sampler.local_indices(0, 0), fast=False)
+    b0 = next(it)
+    np.testing.assert_array_equal(b0["image"], ref["image"])
+    kept = b0["image"]                 # view into the slab ring
+    for _ in range(dl.params.arena_capacity() + 1):
+        next(it)                       # ring wraps: slab now holds new data
+    assert not np.array_equal(kept, np.asarray(ref["image"]))
+
+
+def test_arena_hot_swap_no_slot_leaked_no_batch_lost():
+    """Index accounting (as in test_tuning) through the zero-copy path, plus
+    slab accounting: after each drain the arena has every slot back."""
+    n, gb = 512, 8
+    items = [np.full((4,), i, np.int32) for i in range(n)]
+
+    def transform(a):
+        return {"x": a}
+
+    def batch_transform(raw, *, out=None):
+        if out is None:
+            out = {"x": np.empty(raw.shape, raw.dtype)}
+        out["x"][...] = raw
+        return out
+
+    transform.batch_aware = True
+    transform.batch_variant = batch_transform
+    ds = Dataset(ArrayStorage(items), transform=transform)
+    dl = DataLoader(ds, gb, shuffle=False, seed=0,
+                    params=FAST.replace(num_workers=2, prefetch_factor=2))
+    stream = dl.stream(to_device=False)
+
+    seen = [next(stream)["x"][:, 0].copy() for _ in range(10)]
+    dl.apply_params(FAST.replace(num_workers=4, prefetch_factor=3))
+    while stream.swaps == 0:
+        seen.append(next(stream)["x"][:, 0].copy())
+    b1 = len(seen) - 1
+    got = sorted(np.concatenate(seen[:b1]).tolist())
+    assert got == list(range(b1 * gb))             # no batch lost or duplicated
+
+    arena = dl._stream_arena
+    assert arena.allocated <= dl.params.arena_capacity()
+
+    dl.apply_params(FAST.replace(num_workers=1, prefetch_factor=1))
+    while stream.swaps == 1:
+        seen.append(next(stream)["x"][:, 0].copy())
+    b2 = len(seen) - 1
+    assert sorted(np.concatenate(seen[:b2]).tolist()) == list(range(b2 * gb))
+
+    # steady state after both swaps: the (shrunk) ring recycles with no new
+    # allocations — a leaked slot would either deadlock the small pool above
+    # or show up here as fresh misses
+    for _ in range(5):
+        seen.append(next(stream)["x"][:, 0].copy())
+    misses = arena.misses
+    for _ in range(10):
+        seen.append(next(stream)["x"][:, 0].copy())
+    assert arena.misses == misses
+    cap_now = FAST.replace(num_workers=1, prefetch_factor=1).arena_capacity()
+    assert arena.in_use <= cap_now                 # nothing pinned beyond the ring
+
+
+def test_abandoned_stream_does_not_strand_arena_slots():
+    """Dropping a zero-copy stream mid-epoch and opening a new one must not
+    deadlock: the old pool's in-flight slots all return to the shared
+    stream arena."""
+    ds = synthetic_image_dataset(512, 8, seed=0)
+    dl = DataLoader(ds, 16, params=FAST.replace(num_workers=2,
+                                                prefetch_factor=2),
+                    shuffle=False, seed=0)
+    s1 = dl.stream(to_device=False)
+    for _ in range(3):
+        next(s1)                       # abandon mid-epoch, slots in flight
+    s2 = dl.stream(to_device=False)    # closes s1 first
+    got = [next(s2) for _ in range(16)]
+    assert len(got) == 16
+    assert dl._stream_arena.allocated <= dl.params.arena_capacity()
+
+
+def test_explicit_close_releases_everything():
+    ds = synthetic_image_dataset(256, 8, seed=0)
+    dl = DataLoader(ds, 16, params=FAST.replace(num_workers=2),
+                    shuffle=False, seed=0)
+    stream = dl.stream(to_device=True)
+    next(stream)
+    stream.close()
+    deadline = time.perf_counter() + 5.0
+    while dl._stream_arena.in_use > 0 and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    assert dl._stream_arena.in_use == 0
+
+
+def test_transfer_failure_does_not_leak_slot(monkeypatch):
+    import repro.data.prefetcher as P
+    arena = SlabArena(capacity=2)
+    orig = P.put_global_batch
+    boom = {"armed": True}
+
+    def failing_put(batch, sharding=None, **kw):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("transient transfer failure")
+        return orig(batch, sharding, **kw)
+
+    monkeypatch.setattr(P, "put_global_batch", failing_put)
+
+    def producer():
+        for i in range(3):
+            slot = arena.acquire()
+            if slot is None:
+                slot = arena.adopt({"x": np.full((4,), float(i), np.float32)})
+            else:
+                slot.arrays["x"][...] = i
+            yield ArenaBatch(slot)
+
+    with pytest.raises(RuntimeError, match="transient"):
+        list(DevicePrefetcher(producer(), depth=2))
+    assert arena.in_use == 0           # the failed batch's slot came back
+
+
+def test_file_storage_is_picklable():
+    import pickle
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        items = [np.arange(4, dtype=np.float32) + i for i in range(3)]
+        st = FileStorage.create(root, items)
+        st.read_batch([0, 1])          # populate mmap cache
+        clone = pickle.loads(pickle.dumps(st))
+        np.testing.assert_array_equal(clone.read(2), items[2])
+        np.testing.assert_array_equal(clone.read_batch([1])[0], items[1])
+        assert clone.item_nbytes(0) == st.item_nbytes(0)
+
+
+def test_batch_transform_rejects_stale_slab():
+    from repro.data.dataset import image_batch_transform
+    raw = np.zeros((4, 8, 8, 3), np.uint8)
+    stale = {"image": np.empty((4, 8, 8, 3), np.float64),   # wrong dtype
+             "label": np.empty((4,), np.int32)}
+    got = image_batch_transform(raw, out=stale)
+    assert got["image"] is not stale["image"]
+    assert got["image"].dtype == np.float32
+
+
+# --------------------------------------------------------------------------
+# ordered delivery
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("workers", [2, 4])
+def test_ordered_delivery_at_any_worker_count(workers):
+    """With ordered=True (the default) delivery matches sampler order even
+    when per-batch latency varies wildly across workers."""
+    n, gb = 256, 8
+    items = [np.full((2,), i, np.int32) for i in range(n)]
+    rng_sleep = {"t": 0}
+
+    def transform(a):
+        time.sleep(0.0005 * (int(a[0]) % 5))   # skewed per-batch cost
+        return {"x": a}
+
+    ds = Dataset(ArrayStorage(items), transform=transform)
+    dl = DataLoader(ds, gb, shuffle=False, seed=0,
+                    params=LoaderParams(num_workers=workers, ordered=True))
+    got = [int(b["x"][0, 0]) for b in dl.host_batches(epoch=0)]
+    assert got == list(range(0, n, gb))
+
+
+def test_ordered_pool_raises_promptly_when_one_worker_errors():
+    """A died worker leaves a sequence hole; the ordered consumer must get
+    the error via the sentinel instead of parking batches forever."""
+    n, gb = 512, 8
+    items = [np.full((2,), i, np.int32) for i in range(n)]
+
+    def transform(a):
+        if int(a[0]) == 40:            # one poisoned index-batch
+            raise ValueError("poisoned sample")
+        return {"x": a}
+
+    ds = Dataset(ArrayStorage(items), transform=transform)
+    idx = ShardedSampler(n, gb, shuffle=False, seed=0).epoch_iter(0)
+    pool = ThreadWorkerPool(ds, idx, num_workers=3, prefetch_factor=2,
+                            ordered=True)
+    with pytest.raises(ValueError, match="poisoned"):
+        list(pool)
+
+
+def test_zero_copy_pool_recovers_slot_when_worker_errors():
+    ds = synthetic_image_dataset(256, 8, seed=0)
+    calls = {"n": 0}
+    orig = ds.storage.read_batch
+
+    def flaky_read_batch(indices):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            raise OSError("transient storage failure")
+        return orig(indices)
+
+    ds.storage.read_batch = flaky_read_batch
+    dl = DataLoader(ds, 8, params=FAST.replace(num_workers=2), shuffle=False,
+                    seed=0)
+    pool, _ = dl._pool(dl.sampler.epoch_iter(0), for_stream=True)
+    with pytest.raises(OSError, match="transient"):
+        list(pool)
+    arena = dl._stream_arena
+    assert arena.in_use <= 1           # the errored worker's slot came back
+
+
+def test_ordered_straggler_does_not_defeat_backpressure():
+    """One slow batch must not let the other workers pull and collate the
+    whole epoch into the reordering buffer: pulls are bounded by the
+    sequence window (queue depth + workers)."""
+    n, gb = 800, 8
+    items = [np.full((2,), i, np.int32) for i in range(n)]
+    event = threading.Event()
+
+    def transform(a):
+        if int(a[0]) == 0:             # straggler on the very first batch
+            event.wait(1.5)
+        return {"x": a}
+
+    ds = Dataset(ArrayStorage(items), transform=transform)
+    idx = ShardedSampler(n, gb, shuffle=False, seed=0).epoch_iter(0)
+    pool = ThreadWorkerPool(ds, idx, num_workers=4, prefetch_factor=2,
+                            ordered=True)
+    time.sleep(0.5)                    # let the healthy workers run ahead
+    pulled_during_straggle = pool._seq
+    event.set()
+    got = [int(b["x"][0, 0]) for b in pool]
+    assert got == list(range(0, n, gb))
+    # window = depth (8) + workers (4); one extra for scheduling slop
+    assert pulled_during_straggle <= 8 + 4 + 1
+
+
+def test_unordered_still_delivers_everything():
+    ds = synthetic_image_dataset(128, 8, seed=0)
+    dl = DataLoader(ds, 8, params=LoaderParams(num_workers=3, ordered=False),
+                    shuffle=False, seed=0)
+    assert sum(1 for _ in dl.host_batches(epoch=0)) == 16
+
+
+# --------------------------------------------------------------------------
+# process pool backpressure
+# --------------------------------------------------------------------------
+def test_process_pool_bounds_inflight_and_delivers_all():
+    ds = synthetic_image_dataset(128, 8, seed=0)
+    pulled = {"n": 0}
+
+    def counting_indices():
+        for idx in ShardedSampler(128, 8, shuffle=False, seed=0).epoch_iter(0):
+            pulled["n"] += 1
+            yield idx
+
+    pool = ProcessWorkerPool(ds, counting_indices(), num_workers=2,
+                             prefetch_factor=1)
+    consumed = 0
+    try:
+        for batch in pool:
+            consumed += 1
+            assert batch["image"].shape == (8, 8, 8, 3)
+            # in-flight window: consumed + num_workers * prefetch_factor
+            assert pulled["n"] <= consumed + 2 + 1
+            time.sleep(0.01)
+    finally:
+        pool.shutdown()
+    assert consumed == 16
+
+
+def test_process_pool_shutdown_unblocks_task_pump():
+    """Abandoning iteration mid-epoch must not hang: terminate() joins the
+    task pump, which shutdown() has to wake out of the backpressure
+    semaphore first."""
+    ds = synthetic_image_dataset(128, 8, seed=0)
+    idx = ShardedSampler(128, 8, shuffle=False, seed=0).epoch_iter(0)
+    pool = ProcessWorkerPool(ds, idx, num_workers=2, prefetch_factor=1)
+    it = iter(pool)
+    next(it)                           # pump is now parked at the bound
+    t0 = time.perf_counter()
+    pool.shutdown()
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_dataset_ragged_fallback_reads_storage_once():
+    """Ragged items: the raw batch already fetched is collated per sample —
+    storage must not be charged a second time."""
+    items = [np.arange(3 + (i % 2), dtype=np.float32) for i in range(16)]
+    st = ArrayStorage(items)
+    reads = {"batch": 0, "single": 0}
+    orig_rb, orig_r = st.read_batch, st.read
+
+    def counting_rb(indices):
+        reads["batch"] += 1
+        return orig_rb(indices)
+
+    def counting_r(i):
+        reads["single"] += 1
+        return orig_r(i)
+
+    st.read_batch, st.read = counting_rb, counting_r
+
+    def transform(a):
+        return {"x": np.sum(a, keepdims=True)}
+
+    transform.batch_aware = True
+    transform.batch_variant = lambda raw, out=None: {"x": raw.sum(1)}
+    ds = Dataset(st, transform=transform)
+    got = ds.get_batch(np.arange(8))
+    assert reads == {"batch": 1, "single": 0}
+    ref = [float(np.sum(items[i])) for i in range(8)]
+    np.testing.assert_allclose(got["x"].ravel(), ref)
+
+
+# --------------------------------------------------------------------------
+# simulator coalescing fields
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("profile", [cifar10_profile(), coco_profile(80)])
+def test_simulator_fast_path_profile_never_slower(profile):
+    """Coalesced reads + amortized decode must improve (or preserve) every
+    simulated cell, so grid optima under the fast path are unchanged or
+    better — the paper-table benchmarks stay valid."""
+    mach = MachineProfile()
+    legacy_sim = LoaderSimulator(profile, mach)
+    fast_sim = LoaderSimulator(profile.with_fast_path(run_len=8.0), mach)
+    best_legacy, best_fast = float("inf"), float("inf")
+    for k in (1, 2, 4, 8):
+        for j in (1, 2, 4):
+            a = legacy_sim.simulate(batch_size=64, num_batches=32, nworker=k,
+                                    nprefetch=j, check_overflow=False).seconds
+            b = fast_sim.simulate(batch_size=64, num_batches=32, nworker=k,
+                                  nprefetch=j, check_overflow=False).seconds
+            assert b <= a * 1.0001
+            best_legacy, best_fast = min(best_legacy, a), min(best_fast, b)
+    assert best_fast <= best_legacy
+
+
+def test_simulator_defaults_are_neutral():
+    """coalesced_run_len=1 + vectorized_decode_fixed_s=None is bit-for-bit
+    the legacy model (existing paper-grid results are untouched)."""
+    p = cifar10_profile()
+    assert p.coalesced_run_len == 1.0
+    assert p.effective_decode_fixed_s == p.decode_cpu_s_fixed
+    fp = p.with_fast_path(run_len=4.0)
+    assert fp.coalesced_run_len == 4.0
+    assert fp.effective_decode_fixed_s < p.decode_cpu_s_fixed
+
+
+# --------------------------------------------------------------------------
+# device prefetcher: threaded transfer + donate
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("threads", [1, 2])
+def test_prefetcher_transfer_threads_preserve_order(threads):
+    batches = [{"x": np.full((4,), i, np.float32)} for i in range(12)]
+    out = list(DevicePrefetcher(iter(batches), depth=3,
+                                transfer_threads=threads, donate=True))
+    assert len(out) == 12
+    for i, b in enumerate(out):
+        np.testing.assert_array_equal(np.asarray(b["x"]),
+                                      np.full((4,), i, np.float32))
+
+
+def test_prefetcher_releases_arena_slots():
+    arena = SlabArena(capacity=2)
+    spec_batch = {"x": np.zeros((4,), np.float32)}
+
+    def producer():
+        for i in range(6):
+            slot = arena.acquire()
+            if slot is None:
+                slot = arena.adopt({"x": np.full((4,), float(i), np.float32)})
+            else:
+                slot.arrays["x"][...] = i
+            yield ArenaBatch(slot)
+
+    out = list(DevicePrefetcher(producer(), depth=2, transfer_threads=2))
+    assert len(out) == 6
+    assert arena.in_use == 0                       # every slot came back
+    for i, b in enumerate(out):
+        np.testing.assert_array_equal(np.asarray(b["x"]),
+                                      np.full((4,), i, np.float32))
+
+
+# --------------------------------------------------------------------------
+# end to end through the device path
+# --------------------------------------------------------------------------
+def test_zero_copy_stream_to_device_matches_legacy():
+    ds = synthetic_image_dataset(128, 8, seed=0)
+    mk = lambda p: DataLoader(ds, 16, params=p, shuffle=False, seed=0)
+    legacy = iter(mk(LEGACY.replace(num_workers=0)).stream(to_device=True))
+    fast = iter(mk(FAST.replace(num_workers=2, transfer_threads=2,
+                                donate_transfer=True)).stream(to_device=True))
+    for _ in range(8):
+        a, b = next(legacy), next(fast)
+        np.testing.assert_array_equal(np.asarray(a["image"]),
+                                      np.asarray(b["image"]))
