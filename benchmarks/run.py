@@ -25,6 +25,7 @@ BENCHES = [
     ("coco_resolution", "benchmarks.bench_coco_resolution", "Table 1a-1d"),
     ("loader_wallclock", "benchmarks.bench_loader_wallclock", "real machinery"),
     ("multihost", "benchmarks.bench_multihost", "beyond-paper"),
+    ("fleet", "benchmarks.bench_fleet", "beyond-paper"),
     ("goodput", "benchmarks.bench_goodput", "beyond-paper"),
     ("search_cost", "benchmarks.bench_search_cost", "beyond-paper"),
     ("online_drift", "benchmarks.bench_online_drift", "beyond-paper"),

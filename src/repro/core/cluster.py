@@ -1,11 +1,14 @@
-"""Fleet simulation for MultiHostDPT: heterogeneous hosts (stragglers,
-degraded storage, fewer free cores) built from perturbed machine/storage
-profiles.  Used by benchmarks/bench_multihost.py and the FT tests.
+"""Fleet simulation for MultiHostDPT and the fleet control plane:
+heterogeneous hosts (stragglers, degraded storage, fewer free cores) built
+from perturbed machine/storage profiles, plus deterministic join/leave/
+degrade schedules that drive elastic-fleet scenarios.  Used by
+benchmarks/bench_multihost.py, benchmarks/bench_fleet.py and the FT tests.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.evaluators import SimulatorEvaluator
 from repro.core.simulator import LoaderSimulator, MachineProfile
@@ -63,3 +66,56 @@ def fleet_evaluators(fleet: Sequence[HostSpec], *, batch_size: int,
     return [SimulatorEvaluator(LoaderSimulator(h.storage, h.machine),
                                batch_size=batch_size, device_ram=device_ram)
             for h in fleet]
+
+
+# --------------------------------------------------------------------------
+# elastic-fleet scenario schedules (join / leave / degrade at a step)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FleetEvent:
+    """One scheduled perturbation of the running fleet.
+
+    ``kind`` is ``"leave"`` (the host goes silent: heartbeat timeout ->
+    coordinator reshards around it), ``"join"`` (a new host enters at the
+    barrier) or ``"degrade"`` (the host's CPU/IO capacity is scaled —
+    what the straggler detector and re-consensus react to).
+    """
+    step: int
+    kind: str                         # "leave" | "join" | "degrade"
+    host: str
+    cpu_scale: float = 1.0            # degrade only
+    io_scale: float = 1.0             # degrade only
+
+    def __post_init__(self):
+        if self.kind not in ("leave", "join", "degrade"):
+            raise ValueError(f"unknown fleet event kind {self.kind!r}")
+
+
+class FleetSchedule:
+    """Deterministic event timeline for elastic-fleet runs.
+
+    The driver calls ``at(step)`` once per lockstep round and applies the
+    returned events (kill the host's driver loop, construct + ``join`` a
+    new agent, degrade the host's storage profile).  Mirrors
+    ``FailureInjector`` but speaks the full join/leave/degrade vocabulary
+    the control plane handles.
+    """
+
+    def __init__(self, events: Sequence[FleetEvent] = ()):
+        self._by_step: Dict[int, List[FleetEvent]] = defaultdict(list)
+        for e in events:
+            self._by_step[e.step].append(e)
+        self.fired: List[FleetEvent] = []
+
+    def add(self, event: FleetEvent) -> "FleetSchedule":
+        self._by_step[event.step].append(event)
+        return self
+
+    def at(self, step: int) -> List[FleetEvent]:
+        events = self._by_step.pop(step, [])
+        self.fired.extend(events)
+        return events
+
+    @property
+    def pending(self) -> int:
+        return sum(len(v) for v in self._by_step.values())

@@ -61,6 +61,9 @@ class Trial:
     seconds: float
     overflowed: bool = False
     peak_bytes: float = 0.0
+    # per-batch samples when the evaluator measured wall clock (None for
+    # aggregate-only evaluators like the simulator)
+    batch_seconds: Optional[List[float]] = None
 
 
 @dataclasses.dataclass
@@ -161,26 +164,12 @@ class MultiHostDPT:
         return FleetResult("per_host", results, params, fleet_time)
 
     def run_uniform(self) -> FleetResult:
+        """Per-host sweeps + straggler-aware consensus.  The consensus math
+        lives in the fleet control plane (``repro.tuning.fleet``), which the
+        FleetCoordinator also uses for online re-consensus."""
+        from repro.tuning.fleet import uniform_consensus
         results = [DPT(ev, self.config).run(measure_default=False)
                    for ev in self.evaluators]
-        # candidate set: every host's trial grid, scored by fleet max
-        per_cell: Dict[Tuple[int, int], float] = {}
-        for r in results:
-            for t in r.trials:
-                key = (t.nworker, t.nprefetch)
-                cur = per_cell.get(key, 0.0)
-                per_cell[key] = max(cur, t.seconds)
-        # a cell is feasible only if every host measured it un-overflowed
-        counts: Dict[Tuple[int, int], int] = {}
-        for r in results:
-            for t in r.trials:
-                if not t.overflowed and math.isfinite(t.seconds):
-                    counts[(t.nworker, t.nprefetch)] = counts.get(
-                        (t.nworker, t.nprefetch), 0) + 1
-        feasible = {k: v for k, v in per_cell.items()
-                    if counts.get(k, 0) == len(results)}
-        if not feasible:
-            raise MemoryOverflow("no uniform cell feasible on all hosts")
-        best = min(feasible, key=feasible.get)
+        best, fleet_time = uniform_consensus(results)
         return FleetResult("uniform", results, [best] * len(results),
-                           feasible[best], uniform_params=best)
+                           fleet_time, uniform_params=best)

@@ -28,12 +28,13 @@ import numpy as np
 class SlabSlot:
     """One preallocated batch buffer: field name -> numpy slab."""
 
-    __slots__ = ("arena", "arrays", "nbytes")
+    __slots__ = ("arena", "arrays", "nbytes", "epoch")
 
     def __init__(self, arena: "SlabArena", arrays: Dict[str, np.ndarray]):
         self.arena = arena
         self.arrays = arrays
         self.nbytes = int(sum(np.asarray(v).nbytes for v in arrays.values()))
+        self.epoch = arena._epoch     # spec generation this slot was cut for
 
     def release(self) -> None:
         self.arena._release(self)
@@ -101,8 +102,10 @@ class SlabArena:
         self.capacity = max(1, capacity)
         self._spec: Optional[Dict[str, tuple]] = None
         self._spec_nbytes = 0
+        self._expected_leading: Optional[int] = None
         self._free: deque = deque()
         self._allocated = 0
+        self._epoch = 0
         self._cond = threading.Condition()
         self.hits = 0
         self.misses = 0
@@ -133,11 +136,18 @@ class SlabArena:
 
     def adopt(self, batch: Dict[str, np.ndarray]) -> Optional[SlabSlot]:
         """Turn a freshly-allocated batch into a slot (establishes the spec
-        on first use).  Returns None if the batch doesn't fit the spec."""
+        on first use).  Returns None if the batch doesn't fit the spec —
+        or, while the spec is unset, if its leading dim differs from the
+        expected local batch (a ragged makeup chunk delivered right after
+        a reshard must not pin the arena to the wrong shape)."""
         arrays = {k: np.asarray(v) for k, v in batch.items()}
         spec = {k: (v.shape, v.dtype) for k, v in arrays.items()}
         with self._cond:
             if self._spec is None:
+                if self._expected_leading is not None and any(
+                        v.ndim == 0 or v.shape[0] != self._expected_leading
+                        for v in arrays.values()):
+                    return None
                 self._spec = spec
                 self._spec_nbytes = int(
                     sum(v.nbytes for v in arrays.values()))
@@ -174,6 +184,9 @@ class SlabArena:
 
     def _release(self, slot: SlabSlot) -> None:
         with self._cond:
+            if slot.epoch != self._epoch:
+                self._allocated -= 1      # stale spec (respec): drop it
+                return
             if self._allocated > self.capacity:
                 self._allocated -= 1      # shrink toward the new capacity
                 return
@@ -186,3 +199,21 @@ class SlabArena:
             while self._allocated > self.capacity and self._free:
                 self._free.pop()
                 self._allocated -= 1
+
+    def respec(self, *, expected_leading: Optional[int] = None) -> None:
+        """Forget the slab spec — the batch shape is about to change (an
+        elastic reshard resizes the local batch).  Free slots are dropped
+        now; in-use slots are dropped when their holder releases them (the
+        spec generation stamped on each slot tells stale from current), and
+        the next batch produced re-establishes the spec at the new shape.
+        ``expected_leading`` restricts which batch may do so (the new local
+        batch size) — odd-shaped makeup chunks bypass the arena instead.
+        """
+        with self._cond:
+            self._epoch += 1
+            self._allocated -= len(self._free)
+            self._free.clear()
+            self._spec = None
+            self._spec_nbytes = 0
+            self._expected_leading = expected_leading
+            self._cond.notify_all()

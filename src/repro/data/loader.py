@@ -15,7 +15,8 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Iterator, Optional
+from collections import deque
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -69,6 +70,9 @@ class TransferStats:
     bytes: int
     overflowed: bool = False
     peak_loader_bytes: int = 0
+    # per-batch arrival deltas (wall-clock evaluators fill this in); the
+    # variance-aware win test in repro.tuning needs samples, not just a mean
+    batch_seconds: Optional[List[float]] = None
 
     @property
     def bytes_per_second(self) -> float:
@@ -84,15 +88,39 @@ class LoaderStream:
     new (num_workers, prefetch_factor) from exactly the sampler position
     where the old pool stopped.  The swap is requested from any thread and
     performed by whoever consumes the stream; ``swaps`` counts completed
-    swaps.  ``device_prefetch`` depth is fixed at stream creation (the
-    device-side double buffer cannot resize mid-flight).
+    swaps.  ``device_prefetch`` depth is hot-swapped too: the live
+    prefetcher's depth gate is retargeted at the same boundary.
+
+    ``apply_reshard`` is the elastic fleet transition (a host died or
+    joined).  Unlike a params swap, a reshard must NOT deliver what the
+    pool pre-pulled under the old shard map — those index-batches belong
+    to the old topology.  The stream stops yielding at the agreed global
+    batch barrier (``at_batch``), discards the pool (every in-flight arena
+    slot still returns), rewinds the sampler to exactly the delivered
+    position, remaps (shard, num_shards), and restarts — so the batches a
+    consumer sees are precisely: old-shard slices of global batches before
+    the barrier, new-shard slices after it.  Optional ``makeup`` index
+    chunks (a dead host's undelivered slices, redistributed by the
+    coordinator) are delivered first after the barrier.  ``position`` is
+    the stream's absolute global-batch cursor; exact accounting relies on
+    ordered delivery (``LoaderParams.ordered``, the default).
     """
 
     def __init__(self, loader: "DataLoader", *, to_device: bool = True):
         self.loader = loader
         self.to_device = to_device
         self.swaps = 0
+        self.reshards = 0
+        bpe = loader.sampler.batches_per_epoch()
+        self.position = loader.sampler.state.absolute(bpe)
         self._pending: Optional[LoaderParams] = None
+        self._pending_reshard: Optional[Tuple[int, int, int]] = None
+        self._pending_makeup: List[np.ndarray] = []  # held until the barrier
+        self._makeup: deque = deque()        # index chunks awaiting delivery
+        # one flag per index-batch the pool pulled, in pull order (ordered
+        # delivery preserves it): True = makeup chunk, whose yield must NOT
+        # advance the regular-batch position
+        self._pull_kinds: deque = deque()
         self._lock = threading.Lock()
         self._prefetcher: Optional[DevicePrefetcher] = None
         self._host_gen = self._host_stream()
@@ -120,21 +148,131 @@ class LoaderStream:
         with self._lock:
             self._pending = params
 
+    def apply_reshard(self, num_shards: int, shard: int, *,
+                      at_batch: Optional[int] = None,
+                      makeup: Optional[Sequence[np.ndarray]] = None) -> int:
+        """Request an elastic reshard at global batch ``at_batch``.
+
+        ``at_batch`` is an absolute global-batch position; None means the
+        next batch boundary.  If the stream has already yielded past it,
+        the boundary is clamped up to ``position`` and the EFFECTIVE
+        boundary is returned — the coordinator re-issues the request to
+        the whole fleet at the max effective boundary until it is common
+        (once a request is pending the stream cannot yield past its
+        boundary, so the negotiation converges).  ``makeup`` index chunks
+        are delivered right after the barrier, before regular new-shard
+        batches; post-settlement chunks arrive via :meth:`add_makeup`.
+        """
+        with self._lock:
+            boundary = self.position if at_batch is None \
+                else max(at_batch, self.position)
+            self._pending_reshard = (num_shards, shard, boundary)
+            if makeup:
+                # held back until the barrier commits: the pool running
+                # NOW must not interleave makeup with old-shard batches
+                self._pending_makeup.extend(
+                    np.asarray(m) for m in makeup if len(m))
+            return boundary
+
+    def add_makeup(self, makeup: Sequence[np.ndarray]) -> None:
+        """Queue makeup index chunks for delivery.
+
+        Before the reshard commits they are parked with the pending
+        request; afterwards they go straight into the live feed (the
+        pull-kind FIFO keeps position accounting exact wherever they
+        interleave).
+        """
+        with self._lock:
+            arrays = [np.asarray(m) for m in makeup if len(m)]
+            if self._pending_reshard is not None:
+                self._pending_makeup.extend(arrays)
+            else:
+                self._makeup.extend(arrays)
+
+    # ---- internals ---------------------------------------------------------
+    def _reshard_due_locked(self) -> bool:
+        return (self._pending_reshard is not None
+                and self.position >= self._pending_reshard[2])
+
+    def _commit_reshard(self) -> None:
+        """At the barrier, with no pool running: rewind the sampler to the
+        delivered position, remap the shard, and re-spec the slab arena
+        (the local batch shape changed)."""
+        with self._lock:
+            num_shards, shard, _ = self._pending_reshard
+            self._pending_reshard = None
+            self._makeup.extend(self._pending_makeup)
+            self._pending_makeup = []
+            # pulled-but-undelivered flags belong to the discarded pool
+            self._pull_kinds.clear()
+        sampler = self.loader.sampler
+        bpe = sampler.batches_per_epoch()
+        sampler.state = SamplerState.from_absolute(self.position, bpe)
+        sampler.reshard(num_shards, shard)
+        if self.loader._stream_arena is not None:
+            # only batches of the NEW local size may establish the fresh
+            # spec — a ragged makeup chunk must not pin the arena shape
+            self.loader._stream_arena.respec(
+                expected_leading=sampler.local_batch)
+        self.reshards += 1
+
+    def _indices(self):
+        """The pool's index feed: queued makeup chunks first (pulled from
+        the shared deque, so chunks an outgoing pool never pulled remain
+        for the next pool), then the stateful sampler.  Each pull logs its
+        kind so the consumer can tell a yielded makeup batch (no position
+        advance) from a regular one at any interleaving."""
+        sampler_it = iter(self.loader.sampler)
+        while True:
+            if self._makeup:
+                idx = self._makeup.popleft()
+                self._pull_kinds.append(True)
+                yield idx
+            else:
+                idx = next(sampler_it)
+                self._pull_kinds.append(False)
+                yield idx
+
     def _host_stream(self):
         while True:
-            pool, _monitor = self.loader._pool(iter(self.loader.sampler),
+            with self._lock:
+                due = self._reshard_due_locked()
+            if due:
+                self._commit_reshard()
+            pool, _monitor = self.loader._pool(self._indices(),
                                                for_stream=True)
             draining = False
+            resharding = False
+            it = iter(pool)
             try:
-                for batch in pool:
+                while True:
+                    with self._lock:
+                        if self._reshard_due_locked():
+                            resharding = True
+                    if resharding:
+                        # discard boundary: pre-pulled batches belong to
+                        # the old shard map and must not be delivered
+                        break
                     if not draining and self._pending is not None:
                         pool.request_drain()
                         draining = True
+                    try:
+                        batch = next(it)
+                    except StopIteration:
+                        break
+                    # account BEFORE the yield: the generator parks there,
+                    # and the consumer holding the batch means the position
+                    # has advanced past it.  The pull-kind FIFO (ordered
+                    # delivery preserves pull order) tells makeup batches —
+                    # which never advance the position — from regular ones.
+                    if not (self._pull_kinds and self._pull_kinds.popleft()):
+                        self.position += 1
                     yield batch
             finally:
-                # normal end (drain swap / empty sampler) or the stream
+                # normal end (drain swap / reshard discard) or the stream
                 # being closed/abandoned: either way every in-flight slot
                 # must return to the arena
+                it.close()
                 pool.shutdown()
             with self._lock:
                 params, self._pending = self._pending, None
@@ -144,6 +282,8 @@ class LoaderStream:
                 # with_params between the request and this drain
                 self.loader.params = params
                 self.swaps += 1
+                if self._prefetcher is not None:
+                    self._prefetcher.set_depth(params.device_prefetch)
 
     def __iter__(self):
         return self
@@ -201,6 +341,36 @@ class DataLoader:
         if self._live_stream is not None:
             self._live_stream.apply_params(params)
         return params
+
+    def reshard(self, num_shards: int, shard: int, *,
+                at_batch: Optional[int] = None,
+                makeup: Optional[Sequence[np.ndarray]] = None) -> int:
+        """Elastic reshard: remap this host's shard of the global stream.
+
+        With a live stream the remap happens at the ``at_batch`` barrier
+        via :meth:`LoaderStream.apply_reshard` (in-flight old-shard batches
+        discarded, sampler rewound to the delivered position, optional
+        ``makeup`` chunks delivered first).  Without one the sampler is
+        remapped in place — its position IS the consumed position; makeup
+        would have no delivery channel, so it is rejected.  Returns the
+        effective barrier (see ``apply_reshard``).
+        """
+        if self._live_stream is not None:
+            return self._live_stream.apply_reshard(
+                num_shards, shard, at_batch=at_batch, makeup=makeup)
+        if makeup:
+            raise ValueError("makeup delivery needs a live stream; "
+                             "start one with stream() first")
+        self.sampler.reshard(num_shards, shard)
+        return self.sampler.state.absolute(self.sampler.batches_per_epoch())
+
+    def add_makeup(self, makeup: Sequence[np.ndarray]) -> None:
+        """Queue makeup chunks on the live stream (see
+        ``LoaderStream.add_makeup``)."""
+        if self._live_stream is None:
+            raise ValueError("makeup delivery needs a live stream; "
+                             "start one with stream() first")
+        self._live_stream.add_makeup(makeup)
 
     # ---- iteration ----------------------------------------------------------
     def _arena(self, *, for_stream: bool) -> Optional[SlabArena]:
@@ -295,6 +465,8 @@ class DataLoader:
                 yield b
 
         start = time.perf_counter()
+        prev = start
+        deltas: List[float] = []
         try:
             it = _counted(iter(pool))
             if to_device:
@@ -305,6 +477,9 @@ class DataLoader:
                     donate=self.params.donate_transfer))
             for _batch in it:
                 n += 1
+                now = time.perf_counter()
+                deltas.append(now - prev)
+                prev = now
         except MemoryOverflow:
             pool.shutdown()
             return TransferStats(float("inf"), n, total_bytes,
@@ -312,7 +487,8 @@ class DataLoader:
                                  peak_loader_bytes=monitor.peak)
         elapsed = time.perf_counter() - start
         return TransferStats(elapsed, n, total_bytes,
-                             peak_loader_bytes=monitor.peak)
+                             peak_loader_bytes=monitor.peak,
+                             batch_seconds=deltas)
 
 
 def _take(it, n):

@@ -77,14 +77,60 @@ def put_global_batch(batch, sharding=None, *, donate: bool = False,
     return jax.tree_util.tree_map(_put, batch)
 
 
+class _DepthGate:
+    """Resizable in-flight bound (the hot-swappable ``device_prefetch``).
+
+    A plain ``queue.Queue(maxsize=depth)`` fixes the depth at construction;
+    this gate moves the bound into a permit counter so ``set_depth`` can
+    grow it (release extra permits) or shrink it (absorb permits as the
+    consumer returns them) on a LIVE prefetcher without blocking either
+    side — which is what lets ``apply_params`` retune the device buffer
+    depth mid-stream instead of only at stream creation.
+    """
+
+    def __init__(self, depth: int):
+        self.depth = max(1, depth)
+        self._sem = threading.Semaphore(self.depth)
+        self._lock = threading.Lock()
+        self._deficit = 0            # permits to absorb after a shrink
+
+    def acquire(self, stop: threading.Event) -> bool:
+        """Producer side: take a permit (False when stopped while waiting)."""
+        while not stop.is_set():
+            if self._sem.acquire(timeout=0.05):
+                return True
+        return False
+
+    def release(self) -> None:
+        """Consumer side: return a permit (absorbed if the depth shrank)."""
+        with self._lock:
+            if self._deficit > 0:
+                self._deficit -= 1
+                return
+        self._sem.release()
+
+    def set_depth(self, depth: int) -> None:
+        depth = max(1, depth)
+        with self._lock:
+            delta = depth - self.depth
+            self.depth = depth
+            if delta > 0:
+                absorb = min(self._deficit, delta)
+                self._deficit -= absorb
+                for _ in range(delta - absorb):
+                    self._sem.release()
+            elif delta < 0:
+                self._deficit += -delta
+
+
 class DevicePrefetcher:
     def __init__(self, host_iter: Iterator, *, depth: int = 2, sharding=None,
                  transfer_threads: int = 1, donate: bool = False):
-        self.depth = max(1, depth)
         self.sharding = sharding
         self.donate = donate
         self.transfer_threads = max(1, transfer_threads)
-        self._queue: queue.Queue = queue.Queue(maxsize=self.depth)
+        self._gate = _DepthGate(depth)
+        self._queue: queue.Queue = queue.Queue()   # bounded by the gate
         self._error: Optional[BaseException] = None
         self._stop = threading.Event()
         self._executor = (ThreadPoolExecutor(
@@ -95,9 +141,17 @@ class DevicePrefetcher:
                                         daemon=True)
         self._thread.start()
 
+    @property
+    def depth(self) -> int:
+        return self._gate.depth
+
+    def set_depth(self, depth: int) -> None:
+        """Retune the prefetch depth on the live stream (hot swap)."""
+        self._gate.set_depth(depth)
+
     def close(self) -> None:
         """Stop prefetching and unblock the producer thread (which may be
-        parked on the full output queue).  Safe to call more than once."""
+        parked on the depth gate).  Safe to call more than once."""
         self._stop.set()
         while self._thread.is_alive():
             try:
@@ -154,6 +208,12 @@ class DevicePrefetcher:
                 # would otherwise recycle the slab under an in-flight copy)
                 if isinstance(batch, ArenaBatch):
                     batch.detach()
+                if not self._gate.acquire(self._stop):
+                    # closed while waiting for a free depth slot: the batch
+                    # never transfers — recycle it rather than leak
+                    if isinstance(batch, ArenaBatch):
+                        batch.release()
+                    break
                 if self._executor is None:
                     # synchronous put: the slab is free once _transfer
                     # returns, before the pool's auto-release even runs
@@ -175,6 +235,7 @@ class DevicePrefetcher:
                 if self._error is not None:
                     raise self._error
                 return
+            self._gate.release()
             if isinstance(item, Future):
                 item = item.result()
             yield item

@@ -34,6 +34,16 @@ class SamplerState:
         return SamplerState(total // batches_per_epoch,
                             total % batches_per_epoch)
 
+    def absolute(self, batches_per_epoch: int) -> int:
+        """Position as a single global batch count since step 0."""
+        return self.epoch * batches_per_epoch + self.batch_offset
+
+    @classmethod
+    def from_absolute(cls, position: int,
+                      batches_per_epoch: int) -> "SamplerState":
+        return cls(position // batches_per_epoch,
+                   position % batches_per_epoch)
+
 
 class ShardedSampler:
     def __init__(self, num_items: int, global_batch: int, *,
@@ -89,3 +99,28 @@ class ShardedSampler:
         e = self.state.epoch if epoch is None else epoch
         for b in range(self.batches_per_epoch()):
             yield self.local_indices(e, b)
+
+    # ---- elastic resharding -------------------------------------------------
+    def reshard(self, num_shards: int, shard: int) -> None:
+        """Remap this sampler's shard of the live stream (elastic fleet
+        transition: a host died or joined).
+
+        The global permutation and the global-batch boundaries depend only
+        on (seed, epoch, global_batch) — never on the shard topology — so
+        changing (shard, num_shards) at a global batch boundary re-slices
+        every NOT-YET-DELIVERED global batch while leaving delivered ones
+        untouched.  The union over the new shard set of any global batch is
+        exactly that batch's indices, which is the zero-lost/zero-duplicated
+        coverage invariant the fleet coordinator relies on.  The position
+        (epoch, batch_offset) is in global batches and survives unchanged.
+        """
+        if not 0 <= shard < num_shards:
+            raise ValueError(f"shard {shard} out of range for "
+                             f"{num_shards} shards")
+        if self.global_batch % num_shards:
+            raise ValueError(
+                f"global_batch {self.global_batch} not divisible by "
+                f"num_shards {num_shards}")
+        self.host_count = num_shards
+        self.host_index = shard
+        self.local_batch = self.global_batch // num_shards

@@ -28,6 +28,11 @@ class HeartbeatRegistry:
     def beat(self, host: str) -> None:
         self._last[host] = self.clock()
 
+    def remove(self, host: str) -> None:
+        """Forget a host (it was declared dead and resharded around, or it
+        left gracefully) so it stops appearing in ``dead_hosts``."""
+        self._last.pop(host, None)
+
     def hosts(self) -> List[str]:
         return sorted(self._last)
 
@@ -53,6 +58,11 @@ class StragglerDetector:
 
     def record(self, host: str, seconds: float) -> None:
         self._times[host].append(seconds)
+
+    def forget(self, host: str) -> None:
+        """Drop a departed host's window (its stale medians would otherwise
+        skew the fleet median forever)."""
+        self._times.pop(host, None)
 
     @staticmethod
     def _median(xs: Sequence[float]) -> float:

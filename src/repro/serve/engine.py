@@ -186,13 +186,27 @@ class BatchingFrontend:
     """Collects requests into batches (size- or timeout-triggered) and runs
     them through the engine — the 'serve a small model with batched
     requests' driver.  An optional BatchMixMonitor watches the served
-    shape mix and triggers loader retuning when traffic drifts."""
+    shape mix and triggers loader retuning when traffic drifts.
+
+    Fleet wiring: given a ``repro.tuning.fleet.HostAgent`` (construct it
+    with ``consumes_stream=False`` — serving observes per request-group,
+    not per loader batch, so the agent must take its consumed position
+    from the stream cursor), every served batch feeds the agent's goodput
+    monitor (data-wait = batch formation time, compute = generate time)
+    and doubles as the host's heartbeat, so the FleetCoordinator sees a
+    serving host exactly like a training host.  The usual mix-monitor
+    hookup becomes
+    ``BatchMixMonitor(on_drift=lambda mix: agent.notify_drift("batch-mix"))``
+    — the coordinator then runs the fleet-wide re-consensus instead of a
+    host-local retune."""
 
     def __init__(self, engine: ServeEngine, *, max_wait_s: float = 0.01,
-                 mix_monitor: Optional[BatchMixMonitor] = None):
+                 mix_monitor: Optional[BatchMixMonitor] = None,
+                 agent=None):
         self.engine = engine
         self.max_wait_s = max_wait_s
         self.mix_monitor = mix_monitor
+        self.agent = agent
         self._queue: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -221,9 +235,13 @@ class BatchingFrontend:
 
     def _run(self):
         while not self._stop.is_set():
+            t0 = time.perf_counter()
             reqs = self._drain_batch()
             if not reqs:
+                if self.agent is not None:
+                    self.agent.heartbeat()    # idle != dead
                 continue
+            t_form = time.perf_counter() - t0
             # group by (prompt_len, max_new) to keep shapes static
             by_shape = {}
             for r in reqs:
@@ -231,14 +249,22 @@ class BatchingFrontend:
                     (len(r.prompt), r.max_new_tokens), []).append(r)
             for (plen, max_new), group in by_shape.items():
                 prompts = np.stack([r.prompt for r in group])
+                t1 = time.perf_counter()
                 res = self.engine.generate(prompts, max_new)
+                t_gen = time.perf_counter() - t1
                 self.batches_served += 1
-                if self.mix_monitor is not None:
-                    try:
+                try:
+                    if self.agent is not None:
+                        # batch formation is the serving analogue of the
+                        # trainer's data wait; generate is the compute
+                        self.agent.observe(data_s=t_form,
+                                           step_s=t_form + t_gen)
+                    if self.mix_monitor is not None:
                         self.mix_monitor.record((plen, max_new))
-                    except Exception:  # noqa: BLE001 - retune must not
-                        import traceback  # kill the serving thread
-                        traceback.print_exc()
+                except Exception:  # noqa: BLE001 - observe/retune must not
+                    import traceback  # kill the serving thread
+                    traceback.print_exc()
+                t_form = 0.0        # only the first group pays formation
                 for i, r in enumerate(group):
                     r.result.put(res.tokens[i])
 

@@ -13,6 +13,13 @@ Drift:    an OnlineTuner (repro.tuning.online) watches the per-step
           hot-swaps the winner into the live stream (no rebuild, no lost
           batches) — the online re-tuning the paper's conclusion gestures
           at for clouds.
+Fleet:    on a coordinated fleet the Trainer is constructed with a
+          HostAgent (repro.tuning.fleet) instead: the same goodput signal
+          streams to the FleetCoordinator (doubling as the heartbeat),
+          which owns the decide step — uniform re-consensus and elastic
+          resharding arrive back through the agent's apply_params /
+          reshard.  The local OnlineTuner is disabled in that mode so
+          host-local and fleet-level retunes can never fight.
 """
 from __future__ import annotations
 
@@ -30,7 +37,8 @@ from repro.data.loader import DataLoader, LoaderParams
 from repro.distributed.fault_tolerance import StragglerDetector
 from repro.train.train_step import (TrainState, TrainStepConfig,
                                     init_train_state, make_train_step)
-from repro.tuning import OnlineTuner, OnlineTunerConfig, tune
+from repro.tuning import (OnlineTuner, OnlineTunerConfig, adaptive_budget,
+                          tune)
 from repro.utils.fingerprint import machine_fingerprint
 
 
@@ -44,23 +52,34 @@ class TrainerConfig:
     # DPT integration (startup tune + online retune, see repro.tuning)
     autotune: bool = True
     autotune_strategy: str = "grid"
-    autotune_budget_batches: int = 8
+    # None derives the per-cell budget adaptively (>= 3x the deepest
+    # worker rung — see tuning.base.adaptive_budget)
+    autotune_budget_batches: Optional[int] = None
     autotune_max_prefetch: int = 4
     retune_stall_fraction: float = 0.5   # data-wait/compute drift trigger
     retune_window: int = 8
     retune_cooldown_steps: int = 16
     dpt_cache_path: Optional[str] = None
+    # zero-copy slab-arena delivery (DESIGN.md §3).  Default ON: the train
+    # loop consumes device batches through the prefetcher (which transfers
+    # before the slab recycles) and never retains a host view, so the
+    # batch-lifetime contract holds.  Silently inert for datasets without
+    # the fast path or for process pools.
+    zero_copy: bool = True
     step_config: TrainStepConfig = dataclasses.field(
         default_factory=TrainStepConfig)
 
 
 class Trainer:
     def __init__(self, model, loader: DataLoader, cfg: TrainerConfig,
-                 *, host_name: str = "host0"):
+                 *, host_name: str = "host0", agent=None):
         self.model = model
         self.loader = loader
         self.cfg = cfg
         self.host_name = host_name
+        # fleet mode: a repro.tuning.fleet.HostAgent — observations stream
+        # to the coordinator and the local OnlineTuner stays off
+        self.agent = agent
         self.checkpointer = Checkpointer(cfg.checkpoint_dir) \
             if cfg.checkpoint_dir else None
         self.straggler = StragglerDetector()
@@ -85,9 +104,9 @@ class Trainer:
             self.loader.with_params(params)
             return params
         ev = LoaderEvaluator(self.loader, to_device=True)
-        search_cfg = DPTConfig(
-            max_prefetch=self.cfg.autotune_max_prefetch,
-            num_batches=self.cfg.autotune_budget_batches)
+        search_cfg = DPTConfig(max_prefetch=self.cfg.autotune_max_prefetch)
+        search_cfg = dataclasses.replace(search_cfg, num_batches=(
+            adaptive_budget(search_cfg, self.cfg.autotune_budget_batches)))
         strategy = self.cfg.autotune_strategy
         if strategy == "grid":
             kwargs = {"measure_default": False}
@@ -163,13 +182,26 @@ class Trainer:
         self.checkpointer.save(step, self.state, aux={"loader": sd},
                                block=block)
 
+    def _apply_delivery_defaults(self) -> None:
+        """Flip zero-copy delivery on when the pipeline supports it — the
+        trainer's consumption pattern (device batches via the prefetcher,
+        nothing retained host-side) satisfies the batch-lifetime contract
+        unconditionally."""
+        p = self.loader.params
+        if (self.cfg.zero_copy and not p.zero_copy and p.fast_path
+                and not p.use_processes
+                and self.loader.dataset.supports_fast_path):
+            self.loader.with_params(p.replace(zero_copy=True))
+
     # ---- main loop -----------------------------------------------------------
     def run(self) -> Dict[str, Any]:
         cfg = self.cfg
         self._maybe_restore()
+        self._apply_delivery_defaults()
         if cfg.autotune:
             self.tune_loader()
-            self.online_tuner = self._make_online_tuner()
+            if self.agent is None:
+                self.online_tuner = self._make_online_tuner()
 
         step = self.start_step
         batches = self._rebuild_stream(step)
@@ -191,8 +223,12 @@ class Trainer:
 
             # loader-drift retune (paper §5: cloud environments drift).
             # A triggered retune hot-swaps the live stream in place — no
-            # rebuild, no lost batches, sampler position preserved.
-            if self.online_tuner is not None:
+            # rebuild, no lost batches, sampler position preserved.  In
+            # fleet mode the same signal streams to the coordinator
+            # instead (which may push a uniform retune or a reshard back).
+            if self.agent is not None:
+                self.agent.observe(data_s=t_data, step_s=dt)
+            elif self.online_tuner is not None:
                 self.online_tuner.observe(data_s=t_data, step_s=dt)
 
             if step % cfg.log_every == 0 or step == cfg.total_steps:

@@ -3,7 +3,10 @@
 ``tune(evaluator=..., strategy=..., config=...)`` is the single front door
 to every search policy (see ``base.py``); ``OnlineTuner`` turns tuning into
 a continuous background activity against a live, hot-swappable DataLoader
-(see ``online.py``).  Strategy implementations live in ``strategies.py``
+(``online.py``: split into observe/decide/act components); the fleet
+control plane (``fleet.py``: HostAgent + FleetCoordinator) recomposes
+those components across hosts — coordinated re-consensus and elastic
+resharding.  Strategy implementations live in ``strategies.py``
 and self-register; third-party strategies register the same way::
 
     from repro.tuning import register_strategy
@@ -15,10 +18,12 @@ and self-register; third-party strategies register the same way::
 from repro.tuning.base import (  # noqa: F401
     TrialRecorder,
     TuningStrategy,
+    adaptive_budget,
     available_strategies,
     get_strategy,
     register_strategy,
     tune,
+    welch_wins,
     worker_rungs,
 )
 from repro.tuning.strategies import (  # noqa: F401
@@ -30,4 +35,17 @@ from repro.tuning.strategies import (  # noqa: F401
     WarmstartHillClimb,
     cost_model_warmstart,
 )
-from repro.tuning.online import OnlineTuner, OnlineTunerConfig  # noqa: F401
+from repro.tuning.online import (  # noqa: F401
+    GoodputMonitor,
+    OnlineTuner,
+    OnlineTunerConfig,
+    RetuneExecutor,
+    RetunePolicy,
+)
+from repro.tuning.fleet import (  # noqa: F401
+    FleetConfig,
+    FleetCoordinator,
+    HostAgent,
+    HostReport,
+    uniform_consensus,
+)

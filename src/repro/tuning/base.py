@@ -24,7 +24,8 @@ because they predate the layer and everything imports them from there.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Protocol, Type, Union, runtime_checkable
+from typing import (Dict, List, Optional, Protocol, Sequence, Type, Union,
+                    runtime_checkable)
 
 from repro.core.dpt import DPTConfig, DPTResult, Evaluator, Trial
 from repro.core.monitor import MemoryOverflow
@@ -69,8 +70,10 @@ class TrialRecorder:
                                          overflowed=True))
             return math.inf
         if record:
-            self.trials.append(Trial(nworker, nprefetch, stats.seconds,
-                                     peak_bytes=stats.peak_loader_bytes))
+            self.trials.append(Trial(
+                nworker, nprefetch, stats.seconds,
+                peak_bytes=stats.peak_loader_bytes,
+                batch_seconds=getattr(stats, "batch_seconds", None)))
         return stats.seconds
 
     def result(self, nworker: int, nprefetch: int, optimal_time: float,
@@ -92,6 +95,70 @@ def worker_rungs(num_cpu_cores: int, num_devices: int) -> List[int]:
         i = min(i + num_devices, num_cpu_cores)
         rungs.append(i)
     return rungs
+
+
+def adaptive_budget(config: DPTConfig,
+                    explicit: Optional[int] = None) -> int:
+    """Measurement budget per trial cell.
+
+    With budget <= nWorker every config finishes in one parallel wave and
+    all cells measure identically (pipeline fill, not steady-state rate),
+    so the budget must comfortably exceed the largest worker count in the
+    search space.  ``explicit`` (a user-set budget) wins; otherwise the
+    budget is 3x the deepest worker rung, floored at 8.
+    """
+    if explicit is not None:
+        return explicit
+    n, g = config.resolve()
+    rungs = worker_rungs(n, g)
+    return max(8, 3 * (rungs[-1] if rungs else 1))
+
+
+# one-sided Student-t critical values at alpha=0.05, indexed by df (1-based)
+# through df=40, then stepped toward the normal tail — monotone, so the
+# test never gets abruptly laxer as the sample count crosses a boundary
+_T05 = [6.314, 2.920, 2.353, 2.132, 2.015, 1.943, 1.895, 1.860, 1.833,
+        1.812, 1.796, 1.782, 1.771, 1.761, 1.753, 1.746, 1.740, 1.734,
+        1.729, 1.725, 1.721, 1.717, 1.714, 1.711, 1.708, 1.706, 1.703,
+        1.701, 1.699, 1.697, 1.696, 1.694, 1.692, 1.691, 1.690, 1.688,
+        1.687, 1.686, 1.685, 1.684]
+
+
+def t_critical(df: float) -> float:
+    if df < 1:
+        return _T05[0]
+    if df < len(_T05):
+        return _T05[int(df) - 1]
+    # bracket lower-bound values: conservative and monotone past the table
+    if df < 60:
+        return 1.684
+    if df < 120:
+        return 1.671
+    return 1.658
+
+
+def welch_wins(current: Sequence[float], candidate: Sequence[float]) -> bool:
+    """Variance-aware win test: is the candidate's mean per-batch time
+    significantly lower than the current config's?
+
+    Welch's unequal-variance t-test, one-sided at alpha=0.05 with the
+    Welch-Satterthwaite degrees of freedom.  Replaces a fixed relative
+    ``min_improvement`` threshold: a noisy host needs a bigger gap to call
+    a winner, a quiet host can act on a smaller one.
+    """
+    na, nb = len(current), len(candidate)
+    if na < 2 or nb < 2:
+        return False
+    ma = sum(current) / na
+    mb = sum(candidate) / nb
+    va = sum((x - ma) ** 2 for x in current) / (na - 1)
+    vb = sum((x - mb) ** 2 for x in candidate) / (nb - 1)
+    sa, sb = va / na, vb / nb
+    if sa + sb <= 0.0:
+        return mb < ma
+    t = (ma - mb) / math.sqrt(sa + sb)
+    df = (sa + sb) ** 2 / (sa ** 2 / (na - 1) + sb ** 2 / (nb - 1))
+    return t >= t_critical(df)
 
 
 @runtime_checkable

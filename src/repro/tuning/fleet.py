@@ -1,0 +1,512 @@
+"""Fleet control plane: coordinated per-host online tuning + elastic
+resharding of the live data pipeline.
+
+The single-host :class:`~repro.tuning.online.OnlineTuner` observes,
+decides and acts on one machine.  A fleet serving heavy traffic needs the
+same loop split across the wire: per-host optima diverge with hardware,
+hosts drift, straggle and die, and a lockstep SPMD fleet's effective
+transfer time is the MAX over hosts — so per-host decisions must be
+coordinated to protect global goodput.
+
+  observe — a :class:`HostAgent` on every host feeds its
+            :class:`GoodputMonitor` one (data-wait, step-time) pair per
+            step and streams :class:`HostReport`\\ s (goodput, stall
+            ratio, per-batch seconds, stream position) to the
+            coordinator.  Each ingested report is also the host's
+            heartbeat.
+  decide  — the :class:`FleetCoordinator` aggregates: fleet-level stall
+            drift or straggler divergence declares a re-consensus;
+            heartbeat timeouts declare a death; ``join`` admits a new
+            host.  Warmup/cooldown/backoff bookkeeping lives here, not on
+            the hosts.
+  act     — re-consensus runs the existing ``tune()``/:class:`MultiHostDPT`
+            machinery over every live host's evaluator and hot-swaps the
+            winning uniform params into each host through
+            ``apply_params``.  A death (or join) emits an elastic
+            reshard: every surviving loader remaps its
+            ``ShardedSampler`` shard at a common global-batch barrier,
+            and the dead host's undelivered slices are redistributed as
+            makeup chunks — zero samples lost, zero duplicated across
+            the transition (see ``LoaderStream.apply_reshard``).
+
+Reshard invariants (DESIGN.md §4):
+
+* the global permutation and global-batch boundaries depend only on
+  (seed, epoch, global_batch) — never on the shard topology;
+* all hosts remap at the SAME absolute barrier ``B``, chosen as the max
+  stream position over survivors (no host has yielded past it);
+* batches before ``B`` were delivered under the old shard map (the dead
+  host's own deliveries up to its last reported position included),
+  batches from ``B`` on are delivered under the new map, and the dead
+  host's undelivered window ``[dead_position, B)`` arrives as makeup —
+  the union is every index exactly once per epoch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dpt import DPTConfig, DPTResult, MultiHostDPT
+from repro.core.monitor import MemoryOverflow
+from repro.data.loader import DataLoader, LoaderParams
+from repro.distributed.fault_tolerance import (HeartbeatRegistry,
+                                               StragglerDetector, plan_remesh)
+from repro.tuning.base import adaptive_budget
+from repro.tuning.online import GoodputMonitor
+
+
+# --------------------------------------------------------------------------
+# consensus math (MultiHostDPT.run_uniform delegates here)
+# --------------------------------------------------------------------------
+def uniform_consensus(results: Sequence[DPTResult]
+                      ) -> Tuple[Tuple[int, int], float]:
+    """Straggler-aware minimax over per-host sweeps.
+
+    Candidate cells are every host's trials, scored by the fleet max (the
+    lockstep step time); a cell is feasible only if every host measured it
+    un-overflowed.  Returns the argmin cell and its fleet time; raises
+    MemoryOverflow when no cell is feasible everywhere.
+    """
+    per_cell: Dict[Tuple[int, int], float] = {}
+    counts: Dict[Tuple[int, int], int] = {}
+    for r in results:
+        for t in r.trials:
+            key = (t.nworker, t.nprefetch)
+            per_cell[key] = max(per_cell.get(key, 0.0), t.seconds)
+            if not t.overflowed and math.isfinite(t.seconds):
+                counts[key] = counts.get(key, 0) + 1
+    feasible = {k: v for k, v in per_cell.items()
+                if counts.get(k, 0) == len(results)}
+    if not feasible:
+        raise MemoryOverflow("no uniform cell feasible on all hosts")
+    best = min(feasible, key=feasible.get)
+    return best, feasible[best]
+
+
+# --------------------------------------------------------------------------
+# the wire format
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class HostReport:
+    """One observation snapshot from a host (also its heartbeat)."""
+    host: str
+    steps: int                       # observations since the agent started
+    consumed: int                    # absolute global-batch position trained
+    position: int                    # stream yield cursor (>= consumed)
+    stall_ratio: float
+    steps_per_s: float
+    batch_seconds: List[float]
+    params: Tuple[int, int]          # current (num_workers, prefetch_factor)
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    heartbeat_timeout_s: float = 30.0
+    # decide: aggregate drift + straggler divergence
+    stall_fraction: float = 0.35     # mean stall ratio over alive hosts
+    straggler_threshold: float = 1.5
+    straggler_window: int = 16
+    warmup_steps: int = 4            # min fleet steps before deciding
+    cooldown_steps: int = 16         # fleet steps between consensus runs
+    max_backoff: int = 8
+    min_improvement: float = 0.05    # uniform winner must beat current cell
+    # act: the consensus search (None budget derives adaptively)
+    retune_budget_batches: Optional[int] = None
+    max_prefetch: int = 4
+    num_cpu_cores: Optional[int] = None
+    num_devices: Optional[int] = None
+    # elastic re-mesh bookkeeping (plan_remesh)
+    devices_per_host: int = 1
+    model_axis: int = 1
+
+
+# --------------------------------------------------------------------------
+# per-host agent: observe + act, no decisions
+# --------------------------------------------------------------------------
+class HostAgent:
+    """The fleet's presence on one host.
+
+    Observe: ``observe(data_s, step_s)`` once per training/serving step —
+    it feeds the goodput window and streams a report (the heartbeat) to
+    the coordinator.  Act: ``apply_params`` / ``reshard`` are invoked BY
+    the coordinator; the agent never decides anything itself.
+    """
+
+    def __init__(self, host: str, loader: DataLoader, *, evaluator=None,
+                 window: int = 8, report_every: int = 1,
+                 consumes_stream: bool = True):
+        self.host = host
+        self.loader = loader
+        if evaluator is None:
+            from repro.core.evaluators import LoaderEvaluator
+            evaluator = LoaderEvaluator(loader, to_device=True)
+        self.evaluator = evaluator
+        self.monitor = GoodputMonitor(window=window)
+        self.report_every = max(1, report_every)
+        # training loops consume exactly one loader batch per observe();
+        # serving frontends observe per served request-group instead, so
+        # their step count says nothing about loader consumption — they
+        # pass consumes_stream=False and the stream cursor is used
+        self.consumes_stream = consumes_stream
+        self.coordinator: Optional["FleetCoordinator"] = None
+        bpe = loader.sampler.batches_per_epoch()
+        self._base = loader.sampler.state.absolute(bpe)
+        self.steps = 0
+
+    # ---- observe -----------------------------------------------------------
+    def observe(self, *, data_s: float, step_s: float) -> None:
+        self.monitor.observe(data_s=data_s, step_s=step_s)
+        self.steps += 1
+        if self.coordinator is not None \
+                and self.steps % self.report_every == 0:
+            self.coordinator.ingest(self.report())
+
+    def consumed_position(self) -> int:
+        """Absolute global-batch position the CONSUMER reached (one batch
+        per observed step for a training loop; the stream cursor when the
+        observer does not consume the stream batch-per-step)."""
+        if not self.consumes_stream:
+            return self.stream_position()
+        return self._base + self.steps
+
+    def stream_position(self) -> int:
+        """The live stream's yield cursor (>= consumed: the device
+        prefetcher may hold yielded-but-unconsumed batches, which are
+        guaranteed to be delivered)."""
+        stream = self.loader._live_stream
+        if stream is not None:
+            return stream.position
+        return self.loader.sampler.state.absolute(
+            self.loader.sampler.batches_per_epoch())
+
+    def report(self) -> HostReport:
+        p = self.loader.params
+        return HostReport(
+            host=self.host, steps=self.steps,
+            consumed=self.consumed_position(),
+            position=self.stream_position(),
+            stall_ratio=self.monitor.stall_ratio,
+            steps_per_s=self.monitor.steps_per_s,
+            batch_seconds=self.monitor.batch_seconds,
+            params=(p.num_workers, p.prefetch_factor))
+
+    def heartbeat(self) -> None:
+        """Liveness without an observation (e.g. a serving frontend between
+        batches)."""
+        if self.coordinator is not None:
+            self.coordinator.beat(self.host)
+
+    def notify_drift(self, reason: str) -> None:
+        """External drift signal (e.g. the serving batch-mix monitor):
+        asks the coordinator for an out-of-band re-consensus."""
+        if self.coordinator is not None:
+            self.coordinator.request_consensus(reason=reason)
+
+    # ---- act (coordinator-driven) ------------------------------------------
+    def apply_params(self, nworker: int, nprefetch: int) -> LoaderParams:
+        return self.loader.apply_params(self.loader.params.replace(
+            num_workers=nworker, prefetch_factor=nprefetch))
+
+    def reshard(self, num_shards: int, shard: int, *,
+                at_batch: Optional[int] = None,
+                makeup: Optional[Sequence[np.ndarray]] = None) -> int:
+        return self.loader.reshard(num_shards, shard, at_batch=at_batch,
+                                   makeup=makeup)
+
+    def add_makeup(self, makeup: Sequence[np.ndarray]) -> None:
+        self.loader.add_makeup(makeup)
+
+    def align_to(self, position: int) -> None:
+        """Point a FRESH loader (no live stream yet) at an absolute
+        global-batch position — how a joining host meets the fleet at the
+        barrier."""
+        sampler = self.loader.sampler
+        from repro.data.sampler import SamplerState
+        sampler.state = SamplerState.from_absolute(
+            position, sampler.batches_per_epoch())
+        self._base = position
+        self.steps = 0
+
+
+# --------------------------------------------------------------------------
+# the coordinator: decide
+# --------------------------------------------------------------------------
+class FleetCoordinator:
+    """Aggregates host reports and drives fleet-wide tuning + resharding.
+
+    Drive it with ``ingest``/``beat`` (or let registered agents do that
+    through ``observe``) and call ``poll()`` from the control loop —
+    every action taken is appended to ``events`` and returned.
+    """
+
+    def __init__(self, *, config: FleetConfig = FleetConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = config
+        self.clock = clock
+        self.registry = HeartbeatRegistry(
+            timeout_s=config.heartbeat_timeout_s, clock=clock)
+        self.straggler = StragglerDetector(
+            window=config.straggler_window,
+            threshold=config.straggler_threshold)
+        self.agents: Dict[str, HostAgent] = {}
+        self.reports: Dict[str, HostReport] = {}
+        self.events: List[Dict[str, Any]] = []
+        self.consensus_runs = 0
+        self.reshards = 0
+        self._last_consensus_step = -config.cooldown_steps
+        self._backoff = 1
+        self._forced_reason: Optional[str] = None
+
+    # ---- membership --------------------------------------------------------
+    def register(self, agent: HostAgent) -> HostAgent:
+        agent.coordinator = self
+        self.agents[agent.host] = agent
+        self.registry.beat(agent.host)
+        return agent
+
+    @staticmethod
+    def _negotiate_barrier(agents: Sequence[HostAgent], num_shards: int,
+                           floor: int) -> int:
+        """Issue the reshard to every agent at a common barrier, re-issuing
+        at the max EFFECTIVE barrier until it is common.
+
+        A live stream whose prefetcher raced past the proposed barrier
+        clamps its boundary up and reports it; since a pending request
+        pins the stream at its boundary, each re-issue round can only
+        raise the barrier and the loop converges (normally in one pass).
+        """
+        barrier = max([a.stream_position() for a in agents] + [floor])
+        while True:
+            effective = max(a.reshard(num_shards, i, at_batch=barrier)
+                            for i, a in enumerate(agents))
+            if effective <= barrier:
+                return barrier
+            barrier = effective
+
+    def join(self, agent: HostAgent) -> int:
+        """Admit a new host mid-run: every existing host reshards to
+        H+1 shards at a common barrier, the newcomer is aligned to that
+        barrier and takes the last shard.  Returns the barrier."""
+        incumbents = [self.agents[h] for h in sorted(self.agents)]
+        new_count = len(incumbents) + 1
+        barrier = self._negotiate_barrier(incumbents, new_count, 0)
+        agent.align_to(barrier)
+        agent.loader.reshard(new_count, new_count - 1)
+        self.register(agent)
+        self.reshards += 1
+        self.events.append({"kind": "join", "host": agent.host,
+                            "barrier": barrier, "hosts": new_count})
+        # the local batch shrank on every incumbent: re-tune for the new
+        # topology at the next poll
+        if self._forced_reason is None:
+            self._forced_reason = "post-reshard"
+        return barrier
+
+    def leave(self, host: str) -> None:
+        """Graceful departure: same reshard as a death, but the host's
+        stream position needs no makeup beyond its own report."""
+        self._reshard_around([host], reason="leave")
+
+    # ---- observe ingestion -------------------------------------------------
+    def beat(self, host: str) -> None:
+        self.registry.beat(host)
+
+    def ingest(self, report: HostReport) -> None:
+        self.registry.beat(report.host)
+        if report.batch_seconds:
+            self.straggler.record(
+                report.host,
+                sum(report.batch_seconds) / len(report.batch_seconds))
+        self.reports[report.host] = report
+
+    def request_consensus(self, *, reason: str) -> None:
+        """Out-of-band drift signal (serving batch-mix, operator): run a
+        re-consensus at the next ``poll`` regardless of cooldown."""
+        self._forced_reason = reason
+
+    # ---- decide ------------------------------------------------------------
+    @property
+    def fleet_step(self) -> int:
+        return max((r.steps for r in self.reports.values()), default=0)
+
+    def fleet_stall_ratio(self) -> float:
+        alive = set(self.registry.alive_hosts())
+        ratios = [r.stall_ratio for h, r in self.reports.items()
+                  if h in alive]
+        return sum(ratios) / len(ratios) if ratios else 0.0
+
+    def drifted(self) -> bool:
+        return self.fleet_stall_ratio() > self.cfg.stall_fraction
+
+    def poll(self) -> List[Dict[str, Any]]:
+        """One decide step: handle deaths, then drift/straggler consensus.
+        Returns the actions taken (also appended to ``events``)."""
+        actions: List[Dict[str, Any]] = []
+        dead = [h for h in self.registry.dead_hosts() if h in self.agents]
+        if dead:
+            # one reshard around ALL currently-dead hosts: handling them
+            # one at a time would hand a dead "survivor" a shard (and a
+            # makeup share) it can never deliver
+            actions.append(self._reshard_around(dead, reason="dead"))
+        reason = self._consensus_reason()
+        if reason is not None:
+            act = self._reconsensus(reason)
+            if act is not None:
+                actions.append(act)
+        return actions
+
+    def _consensus_reason(self) -> Optional[str]:
+        if self._forced_reason is not None:
+            reason, self._forced_reason = self._forced_reason, None
+            return reason
+        if self.fleet_step < self.cfg.warmup_steps:
+            return None
+        cooldown = self.cfg.cooldown_steps * self._backoff
+        if self.fleet_step - self._last_consensus_step < cooldown:
+            return None
+        stragglers = self.straggler.stragglers()
+        if stragglers:
+            return f"straggler-divergence:{','.join(stragglers)}"
+        if self.drifted():
+            return "goodput-drift"
+        return None
+
+    # ---- act: uniform re-consensus -----------------------------------------
+    def _search_config(self) -> DPTConfig:
+        cfg = DPTConfig(num_cpu_cores=self.cfg.num_cpu_cores,
+                        num_devices=self.cfg.num_devices,
+                        max_prefetch=self.cfg.max_prefetch)
+        return dataclasses.replace(cfg, num_batches=adaptive_budget(
+            cfg, self.cfg.retune_budget_batches))
+
+    def _reconsensus(self, reason: str) -> Optional[Dict[str, Any]]:
+        """Uniform re-consensus over every live host's evaluator, pushed
+        to the whole fleet through apply_params."""
+        hosts = sorted(h for h in self.agents
+                       if h in set(self.registry.alive_hosts()))
+        if not hosts:
+            return None
+        agents = [self.agents[h] for h in hosts]
+        originals = [a.loader.params for a in agents]
+        tuner = MultiHostDPT([a.evaluator for a in agents],
+                             self._search_config())
+        self._last_consensus_step = self.fleet_step
+        try:
+            fleet = tuner.run_uniform()
+        except MemoryOverflow:
+            self._backoff = min(self.cfg.max_backoff, self._backoff * 2)
+            return None
+        finally:
+            # trial cells mutate loader params via with_params; a live
+            # stream must never rebuild on trial params
+            for a, orig in zip(agents, originals):
+                a.loader.with_params(orig)
+        self.consensus_runs += 1
+        won = self._is_fleet_win(fleet, agents)
+        self._backoff = 1 if won else min(self.cfg.max_backoff,
+                                          self._backoff * 2)
+        event = {"kind": "consensus", "reason": reason,
+                 "params": fleet.uniform_params,
+                 "fleet_time": fleet.fleet_time, "hosts": hosts,
+                 "applied": won}
+        self.events.append(event)
+        if won:
+            for a in agents:
+                a.apply_params(*fleet.uniform_params)
+        return event
+
+    def _is_fleet_win(self, fleet, agents: Sequence[HostAgent]) -> bool:
+        """Anti-churn at fleet scope: the uniform winner must differ from
+        the current (majority) config and beat that config's own measured
+        fleet time by ``min_improvement``."""
+        current: Dict[Tuple[int, int], int] = {}
+        for a in agents:
+            p = a.loader.params
+            key = (p.num_workers, p.prefetch_factor)
+            current[key] = current.get(key, 0) + 1
+        cur_cell = max(current, key=current.get)
+        if fleet.uniform_params == cur_cell and len(current) == 1:
+            return False
+        cur_times = []
+        for r in fleet.per_host:
+            t = next((t for t in r.trials
+                      if (t.nworker, t.nprefetch) == cur_cell
+                      and math.isfinite(t.seconds)), None)
+            if t is None:
+                return True          # current cell infeasible somewhere
+            cur_times.append(t.seconds)
+        cur_fleet = max(cur_times)
+        return fleet.fleet_time \
+            <= (1.0 - self.cfg.min_improvement) * cur_fleet
+
+    # ---- act: elastic reshard ----------------------------------------------
+    def _reshard_around(self, hosts: Sequence[str], *,
+                        reason: str) -> Dict[str, Any]:
+        """One or more hosts left the fleet (a rack failure is one event,
+        not a cascade): remap every survivor at one common barrier and
+        redistribute every departed host's undelivered slices."""
+        departed = [self.agents.pop(h) for h in hosts]
+        for h in hosts:
+            self.registry.remove(h)
+            self.straggler.forget(h)
+            self.reports.pop(h, None)
+        # survivors keep their relative order; shard indices compact
+        survivors = sorted(self.agents.values(),
+                           key=lambda a: a.loader.sampler.host_index)
+        new_count = len(survivors)
+        old_count = new_count + len(departed)
+        consumed = {d.host: d.consumed_position() for d in departed}
+        event: Dict[str, Any] = {"kind": "reshard", "reason": reason,
+                                 "lost": list(hosts), "host": hosts[0],
+                                 "dead_consumed": consumed,
+                                 "hosts": new_count}
+        if not survivors:
+            event.update(barrier=None, makeup_batches=0, plan=None)
+            self.events.append(event)
+            return event
+        barrier = self._negotiate_barrier(
+            survivors, new_count, max(consumed.values(), default=0))
+        plan = plan_remesh(
+            alive_hosts=new_count,
+            devices_per_host=self.cfg.devices_per_host,
+            model_axis=self.cfg.model_axis,
+            old_hosts=old_count,
+            old_global_batch=departed[0].loader.sampler.global_batch,
+            restore_step=barrier)
+        # makeup: every departed host's undelivered slices up to the
+        # settled barrier, re-chunked to the NEW local batch size (so the
+        # chunks share the regular batch shape and can use the re-specced
+        # arena; at most one ragged tail chunk bypasses it) and dealt
+        # round-robin over survivors
+        missing: List[np.ndarray] = []
+        makeup_batches = 0
+        for d in departed:
+            sampler = d.loader.sampler           # OLD shard map, frozen
+            bpe = sampler.batches_per_epoch()
+            for b in range(consumed[d.host], barrier):
+                missing.append(sampler.local_indices(b // bpe, b % bpe))
+                makeup_batches += 1
+        if missing:
+            flat = np.concatenate(missing)
+            new_local = survivors[0].loader.sampler.global_batch // new_count
+            chunks = [flat[i:i + new_local]
+                      for i in range(0, len(flat), new_local)]
+            shares: List[List[np.ndarray]] = [[] for _ in survivors]
+            for i, chunk in enumerate(chunks):
+                shares[i % new_count].append(chunk)
+            for a, share in zip(survivors, shares):
+                if share:
+                    a.add_makeup(share)
+        self.reshards += 1
+        # the per-host optimum moved with the local batch size: follow the
+        # reshard with a re-consensus for the new topology at next poll
+        if self._forced_reason is None:
+            self._forced_reason = "post-reshard"
+        event.update(barrier=barrier, makeup_batches=makeup_batches,
+                     plan=plan)
+        self.events.append(event)
+        return event

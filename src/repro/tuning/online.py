@@ -2,21 +2,30 @@
 
 The paper tunes once, offline, before training starts.  Production hosts
 drift: storage throughput sags under co-tenant load, CPU gets stolen, the
-batch mix changes.  :class:`OnlineTuner` closes the loop:
+batch mix changes.  The loop is split into three separable components so
+the same machinery serves a single host (:class:`OnlineTuner`) and a
+coordinated fleet (:mod:`repro.tuning.fleet`, where observe stays on the
+host and decide moves to the coordinator):
 
-  observe   — the trainer (or serving engine) feeds it one (data-wait,
-              step-time) pair per step: the goodput signal.  The loader is
-              healthy while its transfer time hides behind the model step;
-              it is hurting goodput when the step stalls waiting for data.
-  detect    — when the mean data-wait over a sliding window exceeds
-              ``stall_fraction`` of the mean compute time (with warmup and
-              a cooldown between retunes), drift is declared.
-  re-search — a bounded strategy from the unified ``tune(...)`` layer runs
-              against the live loader (trial cells measure on short
-              side-channel epochs; the live stream keeps flowing).
-  apply     — the winner is hot-swapped into the running DataLoader via
+  observe   — :class:`GoodputMonitor`: the trainer (or serving engine)
+              feeds it one (data-wait, step-time) pair per step.  The
+              loader is healthy while its transfer time hides behind the
+              model step; it is hurting goodput when the step stalls
+              waiting for data.
+  decide    — :class:`RetunePolicy`: warmup/cooldown/backoff bookkeeping
+              plus the win test.  Drift is declared when the mean
+              data-wait over the window exceeds ``stall_fraction`` of the
+              mean compute time; a search winner is accepted only when it
+              beats the current config by a variance-aware Welch test
+              over per-batch times (falling back to the relative
+              ``min_improvement`` threshold when the evaluator measured
+              no per-batch samples).
+  act       — :class:`RetuneExecutor`: runs a bounded strategy from the
+              unified ``tune(...)`` layer against the live loader (trial
+              cells measure on short side-channel epochs; the live stream
+              keeps flowing), hot-swaps the winner in via
               ``apply_params`` (pool drained at a batch boundary, sampler
-              state preserved, zero batches lost) and persisted in
+              state preserved, zero batches lost) and persists it in
               :class:`DPTCache` under the machine/dataset fingerprint so
               the next process on this host starts warm.
 """
@@ -26,13 +35,13 @@ import dataclasses
 import math
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.cache import DPTCache
-from repro.core.dpt import DPTConfig, DPTResult
+from repro.core.dpt import DPTConfig, DPTResult, Trial
 from repro.core.monitor import MemoryOverflow
 from repro.data.loader import DataLoader, LoaderParams
-from repro.tuning.base import tune
+from repro.tuning.base import adaptive_budget, tune, welch_wins
 from repro.utils.fingerprint import machine_fingerprint
 
 
@@ -42,23 +51,215 @@ class OnlineTunerConfig:
     window: int = 8                  # steps in the drift window
     warmup_steps: int = 4            # observations before drift can fire
     cooldown_steps: int = 16         # min steps between retunes
-    # Measurement budget per trial cell.  Must comfortably exceed the max
-    # worker count under consideration: with budget <= nworker every config
+    # Measurement budget per trial cell.  None derives it adaptively as
+    # >= 3x the deepest worker rung in the search space (see
+    # tuning.base.adaptive_budget): with budget <= nWorker every config
     # finishes in one parallel wave and all cells measure identically
-    # (pipeline fill, not steady-state rate).  ~3x max workers is a good
-    # floor for wall-clock evaluators.
-    retune_budget_batches: int = 8
+    # (pipeline fill, not steady-state rate).
+    retune_budget_batches: Optional[int] = None
     max_prefetch: int = 4
     strategy: str = "hillclimb"      # bounded re-search policy
     max_search_steps: int = 12       # hillclimb step bound
-    min_improvement: float = 0.05    # swap only if >=5% faster than current
+    min_improvement: float = 0.05    # fallback win threshold (no samples)
     max_backoff: int = 8             # cooldown multiplier cap on no-win
     num_cpu_cores: Optional[int] = None   # override DPTConfig.resolve()
     num_devices: Optional[int] = None
 
 
+class GoodputMonitor:
+    """Observe: the per-step goodput signal, windowed.
+
+    One ``observe(data_s, step_s)`` call per training/serving step.  The
+    stall ratio (mean data-wait over mean compute) is the drift signal;
+    ``batch_seconds`` exposes the raw window for fleet reports.
+    """
+
+    def __init__(self, window: int = 8):
+        self._data_s: deque = deque(maxlen=window)
+        self._compute_s: deque = deque(maxlen=window)
+        self.steps = 0
+
+    def observe(self, *, data_s: float, step_s: float) -> None:
+        self.steps += 1
+        self._data_s.append(max(0.0, data_s))
+        self._compute_s.append(max(1e-9, step_s - data_s))
+
+    @property
+    def full(self) -> bool:
+        return len(self._data_s) == self._data_s.maxlen
+
+    @property
+    def stall_ratio(self) -> float:
+        """Mean data-wait over mean compute time in the current window."""
+        if not self._compute_s:
+            return 0.0
+        return (sum(self._data_s) / len(self._data_s)) \
+            / (sum(self._compute_s) / len(self._compute_s))
+
+    @property
+    def steps_per_s(self) -> float:
+        """Goodput over the window (steps per wall second)."""
+        total = sum(self._data_s) + sum(self._compute_s)
+        return len(self._data_s) / total if total > 0 else 0.0
+
+    @property
+    def batch_seconds(self) -> List[float]:
+        """Per-step wall times in the window (data wait + compute)."""
+        return [d + c for d, c in zip(self._data_s, self._compute_s)]
+
+    def reset(self) -> None:
+        self._data_s.clear()
+        self._compute_s.clear()
+
+
+class RetunePolicy:
+    """Decide: when a re-search may run and whether its winner is real.
+
+    Owns the warmup/cooldown/backoff bookkeeping and the win test; holds
+    no reference to the loader or evaluator, so a coordinator can run the
+    same policy over aggregated fleet signals.
+    """
+
+    def __init__(self, cfg: OnlineTunerConfig):
+        self.cfg = cfg
+        self._last_retune_step = -cfg.cooldown_steps
+        self._backoff = 1            # doubles when a re-search finds no win
+
+    def drifted(self, monitor: GoodputMonitor) -> bool:
+        return monitor.stall_ratio > self.cfg.stall_fraction
+
+    def should_retune(self, monitor: GoodputMonitor) -> bool:
+        if monitor.steps < self.cfg.warmup_steps:
+            return False
+        cooldown = self.cfg.cooldown_steps * self._backoff
+        if monitor.steps - self._last_retune_step < cooldown:
+            return False
+        if not monitor.full:
+            return False
+        return self.drifted(monitor)
+
+    def note_searched(self, step: int) -> None:
+        self._last_retune_step = step
+
+    def record_outcome(self, won: bool) -> None:
+        """A no-win search doubles the cooldown — if the loader is simply
+        the bottleneck at its optimum, re-search cannot help and should
+        get rarer.  A win resets the backoff."""
+        self._backoff = 1 if won else min(self.cfg.max_backoff,
+                                          self._backoff * 2)
+
+    # ---- the win test ------------------------------------------------------
+    @staticmethod
+    def _find_trial(result: DPTResult, cell: Tuple[int, int],
+                    strategy: str) -> Optional[Trial]:
+        if strategy == "hillclimb" and result.trials:
+            # the hillclimb's first trial is its start: the current config
+            # snapped onto the search lattice — the improvement reference
+            # even when the exact current cell is off-lattice
+            return result.trials[0]
+        return next((t for t in result.trials
+                     if (t.nworker, t.nprefetch) == cell), None)
+
+    def is_win(self, result: DPTResult, current: LoaderParams) -> bool:
+        """Anti-churn: only swap when the winner beats the CURRENT config's
+        own measured cell.
+
+        With per-batch samples on both cells the comparison is a Welch
+        test (variance-aware: noisy measurements need a bigger gap);
+        without samples it falls back to the relative ``min_improvement``
+        threshold on the cell means.
+        """
+        cur_cell = (current.num_workers, current.prefetch_factor)
+        ref = self._find_trial(result, cur_cell, self.cfg.strategy)
+        win_cell = (result.nworker, result.nprefetch)
+        if win_cell == cur_cell:
+            return False
+        if ref is not None and win_cell == (ref.nworker, ref.nprefetch):
+            return False
+        if ref is None:
+            return True                      # nothing measured to defend
+        winner = next((t for t in result.trials
+                       if (t.nworker, t.nprefetch) == win_cell), None)
+        # drop each cell's pipeline-fill prefix (pool spin-up + first
+        # reads): the adaptive budget reserves ~1/3 of the measurements
+        # for fill, and leaving it in inflates variance on both sides,
+        # gutting the test's power
+        ref_samples = self._steady(ref.batch_seconds)
+        win_samples = self._steady(winner.batch_seconds) if winner else []
+        if len(ref_samples) >= 2 and len(win_samples) >= 2:
+            return welch_wins(ref_samples, win_samples)
+        return result.optimal_time \
+            <= (1.0 - self.cfg.min_improvement) * ref.seconds
+
+    @staticmethod
+    def _steady(samples) -> List[float]:
+        if not samples:
+            return []
+        return list(samples[len(samples) // 3:])
+
+
+class RetuneExecutor:
+    """Act: bounded re-search against the live loader + hot swap + cache."""
+
+    def __init__(self, loader: DataLoader, evaluator,
+                 cfg: OnlineTunerConfig, *, cache: Optional[DPTCache] = None,
+                 machine_fp: Optional[str] = None,
+                 dataset_fp: Optional[str] = None):
+        self.loader = loader
+        self.evaluator = evaluator
+        self.cfg = cfg
+        self.cache = cache
+        self.machine_fp = machine_fp or machine_fingerprint()
+        self.dataset_fp = dataset_fp or loader.dataset.fingerprint()
+
+    def search_config(self) -> DPTConfig:
+        cfg = DPTConfig(num_cpu_cores=self.cfg.num_cpu_cores,
+                        num_devices=self.cfg.num_devices,
+                        max_prefetch=self.cfg.max_prefetch)
+        return dataclasses.replace(cfg, num_batches=adaptive_budget(
+            cfg, self.cfg.retune_budget_batches))
+
+    def search(self) -> Optional[DPTResult]:
+        """Run the bounded strategy; the loader's params are restored even
+        on unexpected evaluator errors so a live stream never rebuilds on
+        trial params (trial measurements mutate loader.params via
+        with_params)."""
+        orig = self.loader.params
+        cfg = self.search_config()
+        kwargs: Dict[str, Any] = {}
+        if self.cfg.strategy == "hillclimb":
+            _, G = cfg.resolve()
+            kwargs = {"start": (max(G, orig.num_workers),
+                                orig.prefetch_factor),
+                      "max_steps": self.cfg.max_search_steps}
+        elif self.cfg.strategy == "grid":
+            kwargs = {"measure_default": False}
+        try:
+            return tune(evaluator=self.evaluator, strategy=self.cfg.strategy,
+                        config=cfg, **kwargs)
+        except MemoryOverflow:
+            return None
+        finally:
+            self.loader.with_params(orig)
+
+    def apply(self, result: DPTResult) -> LoaderParams:
+        """Hot-swap the winner into the live stream and persist it."""
+        params = self.loader.params.replace(num_workers=result.nworker,
+                                            prefetch_factor=result.nprefetch)
+        self.loader.apply_params(params)
+        if self.cache is not None:
+            self.cache.put(self.machine_fp, self.dataset_fp,
+                           self.loader.global_batch, result)
+        return params
+
+
 class OnlineTuner:
-    """Watches goodput and retunes a live DataLoader when it drifts."""
+    """Watches goodput and retunes a live DataLoader when it drifts.
+
+    A thin composition of the observe/decide/act components above; the
+    fleet control plane recomposes the same parts with decide living in
+    the coordinator.
+    """
 
     def __init__(self, loader: DataLoader, *,
                  config: OnlineTunerConfig = OnlineTunerConfig(),
@@ -71,16 +272,34 @@ class OnlineTuner:
             from repro.core.evaluators import LoaderEvaluator
             evaluator = LoaderEvaluator(loader, to_device=True)
         self.evaluator = evaluator
-        self.cache = cache
-        self.machine_fp = machine_fp or machine_fingerprint()
-        self.dataset_fp = dataset_fp or loader.dataset.fingerprint()
-        self._data_s: deque = deque(maxlen=config.window)
-        self._compute_s: deque = deque(maxlen=config.window)
-        self._steps = 0
-        self._last_retune_step = -config.cooldown_steps
-        self._backoff = 1            # doubles when a re-search finds no win
+        self.monitor = GoodputMonitor(window=config.window)
+        self.policy = RetunePolicy(config)
+        self.executor = RetuneExecutor(loader, evaluator, config,
+                                       cache=cache, machine_fp=machine_fp,
+                                       dataset_fp=dataset_fp)
         self.retunes = 0
         self.history: List[Dict[str, Any]] = []
+
+    # back-compat accessors (pre-split callers and tests use these)
+    @property
+    def cache(self):
+        return self.executor.cache
+
+    @property
+    def machine_fp(self):
+        return self.executor.machine_fp
+
+    @property
+    def dataset_fp(self):
+        return self.executor.dataset_fp
+
+    @property
+    def stall_ratio(self) -> float:
+        return self.monitor.stall_ratio
+
+    @property
+    def drifted(self) -> bool:
+        return self.policy.drifted(self.monitor)
 
     # ---- the per-step goodput signal ---------------------------------------
     def observe(self, *, data_s: float, step_s: float
@@ -90,52 +309,12 @@ class OnlineTuner:
         Returns the newly applied LoaderParams when this observation
         triggered a retune + hot-swap, else None.
         """
-        self._steps += 1
-        self._data_s.append(max(0.0, data_s))
-        self._compute_s.append(max(1e-9, step_s - data_s))
-        if self._steps < self.cfg.warmup_steps:
-            return None
-        cooldown = self.cfg.cooldown_steps * self._backoff
-        if self._steps - self._last_retune_step < cooldown:
-            return None
-        if len(self._data_s) < self._data_s.maxlen:
-            return None
-        if not self.drifted:
+        self.monitor.observe(data_s=data_s, step_s=step_s)
+        if not self.policy.should_retune(self.monitor):
             return None
         return self.force_retune(reason="goodput-drift")
 
-    @property
-    def stall_ratio(self) -> float:
-        """Mean data-wait over mean compute time in the current window."""
-        if not self._compute_s:
-            return 0.0
-        return (sum(self._data_s) / len(self._data_s)) \
-            / (sum(self._compute_s) / len(self._compute_s))
-
-    @property
-    def drifted(self) -> bool:
-        return self.stall_ratio > self.cfg.stall_fraction
-
     # ---- bounded re-search + hot swap --------------------------------------
-    def _search(self) -> Optional[DPTResult]:
-        cfg = DPTConfig(num_cpu_cores=self.cfg.num_cpu_cores,
-                        num_devices=self.cfg.num_devices,
-                        max_prefetch=self.cfg.max_prefetch,
-                        num_batches=self.cfg.retune_budget_batches)
-        kwargs: Dict[str, Any] = {}
-        if self.cfg.strategy == "hillclimb":
-            _, G = cfg.resolve()
-            kwargs = {"start": (max(G, self.loader.params.num_workers),
-                                self.loader.params.prefetch_factor),
-                      "max_steps": self.cfg.max_search_steps}
-        elif self.cfg.strategy == "grid":
-            kwargs = {"measure_default": False}
-        try:
-            return tune(evaluator=self.evaluator, strategy=self.cfg.strategy,
-                        config=cfg, **kwargs)
-        except MemoryOverflow:
-            return None
-
     def force_retune(self, *, reason: str = "forced"
                      ) -> Optional[LoaderParams]:
         """Run the bounded re-search now and hot-swap the winner in.
@@ -145,59 +324,29 @@ class OnlineTuner:
         """
         orig = self.loader.params
         t0 = time.perf_counter()
-        try:
-            result = self._search()
-        finally:
-            # trial measurements mutate loader.params via with_params;
-            # restore even on unexpected evaluator errors so a live stream
-            # never rebuilds on trial params
-            self.loader.with_params(orig)
-        self._last_retune_step = self._steps
-        self._data_s.clear()
-        self._compute_s.clear()
+        result = self.executor.search()
+        self.policy.note_searched(self.monitor.steps)
+        self.monitor.reset()
         if result is None or not math.isfinite(result.optimal_time):
-            self._backoff = min(self.cfg.max_backoff, self._backoff * 2)
+            self.policy.record_outcome(won=False)
             return None
-        # anti-churn: only swap when the winner beats the CURRENT config's
-        # own measured time by min_improvement.  The reference cell is the
-        # hillclimb's first trial (its start — the current config snapped
-        # onto the search lattice); for other strategies, the trial at the
-        # current cell if the sweep covered it.  A no-win search doubles
-        # the cooldown — if the loader is simply the bottleneck at its
-        # optimum, re-search cannot help and should get rarer.
-        if self.cfg.strategy == "hillclimb" and result.trials:
-            ref = result.trials[0]
-        else:
-            ref = next((t for t in result.trials
-                        if (t.nworker, t.nprefetch)
-                        == (orig.num_workers, orig.prefetch_factor)), None)
-        current = ref.seconds if ref is not None else None
-        same = (result.nworker, result.nprefetch) \
-            == (orig.num_workers, orig.prefetch_factor)
-        if ref is not None:
-            same = same or (result.nworker, result.nprefetch) \
-                == (ref.nworker, ref.nprefetch)
-        if same or (current is not None and result.optimal_time
-                    > (1.0 - self.cfg.min_improvement) * current):
-            self._backoff = min(self.cfg.max_backoff, self._backoff * 2)
+        won = self.policy.is_win(result, orig)
+        self.policy.record_outcome(won=won)
+        if not won:
             self.history.append({
-                "step": self._steps, "reason": reason, "outcome": "kept",
+                "step": self.monitor.steps, "reason": reason,
+                "outcome": "kept",
                 "params": (orig.num_workers, orig.prefetch_factor),
                 "optimal_time": result.optimal_time,
                 "measurements": len(result.trials),
                 "search_s": time.perf_counter() - t0,
             })
             return None
-        self._backoff = 1
-        params = orig.replace(num_workers=result.nworker,
-                              prefetch_factor=result.nprefetch)
-        self.loader.apply_params(params)
-        if self.cache is not None:
-            self.cache.put(self.machine_fp, self.dataset_fp,
-                           self.loader.global_batch, result)
+        params = self.executor.apply(result)
         self.retunes += 1
         self.history.append({
-            "step": self._steps, "reason": reason, "outcome": "applied",
+            "step": self.monitor.steps, "reason": reason,
+            "outcome": "applied",
             "params": (result.nworker, result.nprefetch),
             "optimal_time": result.optimal_time,
             "measurements": len(result.trials),

@@ -1,0 +1,467 @@
+"""Fleet control plane: elastic resharding, coordinator decisions, and the
+adaptive-budget / variance-aware-win satellites.
+
+The coverage tests assert the reshard invariant EXACTLY (every index once,
+as a multiset over everything every host delivered) — any lost sample
+leaves a hole, any duplicate a repeat.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import FleetEvent, FleetSchedule
+from repro.core.dpt import DPTConfig, DPTResult, Trial
+from repro.data import DataLoader, Dataset, LoaderParams
+from repro.data.loader import TransferStats
+from repro.data.sampler import SamplerState, ShardedSampler
+from repro.data.storage import ArrayStorage
+from repro.tuning import (FleetConfig, FleetCoordinator, HostAgent,
+                          OnlineTuner, OnlineTunerConfig, RetunePolicy,
+                          adaptive_budget, uniform_consensus, welch_wins)
+
+
+def _index_dataset(n):
+    items = [np.full((4,), i, np.int32) for i in range(n)]
+    return Dataset(ArrayStorage(items), transform=lambda a: {"x": a})
+
+
+def _flat_indices(batches):
+    return sorted(np.concatenate(
+        [np.asarray(b["x"])[:, 0] for b in batches]).tolist())
+
+
+def _table_evaluator(fn):
+    def ev(i, j, *, num_batches=16, epoch=0):
+        ev.calls += 1
+        ev.budgets.append(num_batches)
+        return TransferStats(fn(i, j), num_batches, 0)
+    ev.calls = 0
+    ev.budgets = []
+    return ev
+
+
+# --------------------------------------------------------------------------
+# ShardedSampler.reshard: determinism + exact coverage
+# --------------------------------------------------------------------------
+def _epoch_coverage(num_items, global_batch, old_count, new_count,
+                    barrier):
+    """Old-shard slices of batches [0, barrier) + new-shard slices of
+    [barrier, end), unioned over the (changing) host set."""
+    bpe = num_items // global_batch
+    out = []
+    for h in range(old_count):
+        s = ShardedSampler(num_items, global_batch, shuffle=True, seed=9,
+                           host_index=h, host_count=old_count)
+        out.extend(s.local_indices(0, b).tolist() for b in range(barrier))
+    for h in range(new_count):
+        s = ShardedSampler(num_items, global_batch, shuffle=True, seed=9,
+                           host_index=0, host_count=old_count)
+        s.reshard(new_count, h)
+        out.extend(s.local_indices(0, b).tolist()
+                   for b in range(barrier, bpe))
+    return sorted(x for chunk in out for x in chunk)
+
+
+@pytest.mark.parametrize("old,new", [(4, 3), (3, 4)])
+def test_sampler_reshard_exact_coverage_mid_epoch(old, new):
+    n, gb = 480, 12          # divisible by 3 and 4
+    assert _epoch_coverage(n, gb, old, new, barrier=17) == list(range(n))
+
+
+def test_sampler_reshard_validates():
+    s = ShardedSampler(120, 12, host_index=0, host_count=3)
+    with pytest.raises(ValueError, match="not divisible"):
+        s.reshard(5, 0)
+    with pytest.raises(ValueError, match="out of range"):
+        s.reshard(3, 3)
+    s.reshard(4, 2)
+    assert (s.host_count, s.host_index, s.local_batch) == (4, 2, 3)
+
+
+def test_sampler_checkpoint_round_trip_across_reshard():
+    """Checkpoint at the barrier, reshard, keep going — a fresh sampler
+    restored from the checkpoint with the NEW topology must produce the
+    identical sequence (reshard state is topology, position is state)."""
+    n, gb = 240, 12
+    s = ShardedSampler(n, gb, shuffle=True, seed=4, host_index=1,
+                       host_count=4)
+    it = iter(s)
+    for _ in range(7):
+        next(it)
+    saved = s.state.to_dict()
+    s.reshard(3, 1)
+    live = [next(it).tolist() for _ in range(6)]
+
+    restored = ShardedSampler(n, gb, shuffle=True, seed=4, host_index=1,
+                              host_count=3,
+                              state=SamplerState.from_dict(saved))
+    again = [next(iter(restored)) for _ in range(6)]
+    assert live == [a.tolist() for a in again]
+
+
+def test_sampler_state_absolute_round_trip():
+    st = SamplerState(epoch=3, batch_offset=7)
+    assert SamplerState.from_absolute(st.absolute(20), 20) == st
+
+
+# --------------------------------------------------------------------------
+# live-loader reshard: barrier + makeup, exact coverage
+# --------------------------------------------------------------------------
+def test_live_reshard_with_makeup_exact_coverage():
+    """2-host fleet, host1 dies after 5 batches while host0 is at 8: host0
+    takes over at the barrier, host1's undelivered slices [5, 8) arrive as
+    makeup — and the epoch's index multiset is exactly covered."""
+    n, gb = 240, 12
+    mk = lambda h: DataLoader(
+        _index_dataset(n), gb, shuffle=True, seed=3,
+        params=LoaderParams(num_workers=2, prefetch_factor=2),
+        host_index=h, host_count=2)
+    h0, h1 = mk(0), mk(1)
+    s0, s1 = h0.stream(to_device=False), h1.stream(to_device=False)
+    delivered = []
+    delivered += [next(s1) for _ in range(5)]        # host1 then dies
+    delivered += [next(s0) for _ in range(8)]
+    barrier = max(s0.position, s1.position)
+    assert (s0.position, s1.position) == (8, 5)
+
+    ref = ShardedSampler(n, gb, shuffle=True, seed=3, host_index=1,
+                         host_count=2)
+    makeup = [ref.local_indices(0, b) for b in range(5, barrier)]
+    h0.reshard(1, 0, at_batch=barrier, makeup=makeup)
+    while s0.position < n // gb:
+        delivered.append(next(s0))
+    s0.close()
+    s1.close()
+    assert _flat_indices(delivered) == list(range(n))
+    assert s0.reshards == 1
+
+
+def test_live_reshard_without_stream_remaps_sampler():
+    dl = DataLoader(_index_dataset(48), 12, host_index=0, host_count=2)
+    dl.reshard(3, 2)
+    assert (dl.sampler.host_count, dl.sampler.host_index) == (3, 2)
+    with pytest.raises(ValueError, match="live stream"):
+        dl.reshard(2, 0, makeup=[np.array([1, 2])])
+
+
+def test_device_prefetch_depth_hot_swap():
+    """The device-side buffer depth retunes at the swap boundary (it used
+    to be fixed at stream creation)."""
+    dl = DataLoader(_index_dataset(512), 8, shuffle=False, seed=0,
+                    params=LoaderParams(num_workers=2, prefetch_factor=2,
+                                        device_prefetch=2))
+    stream = dl.stream(to_device=True)
+    got = [next(stream) for _ in range(3)]
+    dl.apply_params(dl.params.replace(num_workers=1, device_prefetch=4))
+    while stream.swaps == 0:
+        got.append(next(stream))
+    assert stream._prefetcher.depth == 4
+    dl.apply_params(dl.params.replace(device_prefetch=1))
+    while stream.swaps == 1:
+        got.append(next(stream))
+    assert stream._prefetcher.depth == 1
+    # delivery stayed exact through both swaps
+    assert _flat_indices(got) == list(range(len(got) * 8))
+    stream.close()
+
+
+# --------------------------------------------------------------------------
+# FleetCoordinator: death, drift, join
+# --------------------------------------------------------------------------
+def _fleet(n=480, gb=12, hosts=3, timeout=5.0):
+    clock = [0.0]
+    coord = FleetCoordinator(
+        config=FleetConfig(heartbeat_timeout_s=timeout, warmup_steps=2,
+                           cooldown_steps=4, num_cpu_cores=4, num_devices=1,
+                           max_prefetch=2, retune_budget_batches=2),
+        clock=lambda: clock[0])
+    agents, streams = [], []
+    for h in range(hosts):
+        dl = DataLoader(_index_dataset(n), gb, shuffle=True, seed=5,
+                        params=LoaderParams(num_workers=2,
+                                            prefetch_factor=2),
+                        host_index=h, host_count=hosts)
+        agent = coord.register(HostAgent(
+            f"host{h}", dl,
+            evaluator=_table_evaluator(lambda i, j: 4.0 / i + 0.1 * j)))
+        agents.append(agent)
+        streams.append(dl.stream(to_device=False))
+    return clock, coord, agents, streams
+
+
+def test_coordinator_death_reshards_with_exact_coverage():
+    n, gb = 480, 12
+    clock, coord, agents, streams = _fleet(n, gb)
+    delivered = {h: [] for h in range(3)}
+    for rnd in range(12):
+        clock[0] += 1.0
+        for h in range(3):
+            if h == 2 and rnd >= 7:
+                continue             # host2 goes silent mid-run
+            delivered[h].append(next(streams[h]))
+            agents[h].observe(data_s=0.001, step_s=0.1)
+        coord.poll()
+    clock[0] += 10.0                 # silence outlives the timeout
+    for h in (0, 1):
+        agents[h].heartbeat()
+    actions = coord.poll()
+    reshard = next(a for a in actions if a["kind"] == "reshard")
+    assert reshard["host"] == "host2"
+    assert reshard["makeup_batches"] == reshard["barrier"] - 7
+    assert reshard["plan"].feasible
+
+    for h in (0, 1):
+        while streams[h].position < n // gb:
+            delivered[h].append(next(streams[h]))
+        streams[h].close()
+    streams[2].close()
+    everything = [b for blist in delivered.values() for b in blist]
+    assert _flat_indices(everything) == list(range(n))
+    assert coord.reshards == 1
+    assert "host2" not in coord.agents
+
+
+def test_coordinator_correlated_deaths_one_reshard_exact_coverage():
+    """Two hosts dying in the same detection window (a rack failure) are
+    handled as ONE reshard: neither dead host is treated as a survivor of
+    the other's reshard, and no makeup share is parked on a corpse."""
+    n, gb = 480, 12
+    clock = [0.0]
+    coord = FleetCoordinator(
+        config=FleetConfig(heartbeat_timeout_s=5.0, warmup_steps=2,
+                           cooldown_steps=1000, num_cpu_cores=4,
+                           num_devices=1, max_prefetch=2,
+                           retune_budget_batches=2),
+        clock=lambda: clock[0])
+    agents, streams = [], []
+    for h in range(4):
+        dl = DataLoader(_index_dataset(n), gb, shuffle=True, seed=5,
+                        params=LoaderParams(num_workers=2,
+                                            prefetch_factor=2),
+                        host_index=h, host_count=4)
+        agents.append(coord.register(HostAgent(
+            f"host{h}", dl, evaluator=_table_evaluator(lambda i, j: 1.0))))
+        streams.append(dl.stream(to_device=False))
+    delivered = {h: [] for h in range(4)}
+    for rnd in range(10):
+        clock[0] += 1.0
+        for h in range(4):
+            if h >= 2 and rnd >= 6:
+                continue             # hosts 2 AND 3 go silent together
+            delivered[h].append(next(streams[h]))
+            agents[h].observe(data_s=0.001, step_s=0.1)
+        coord.poll()
+    clock[0] += 10.0
+    for h in (0, 1):
+        agents[h].heartbeat()
+    actions = coord.poll()
+    reshards = [a for a in actions if a["kind"] == "reshard"]
+    assert len(reshards) == 1
+    assert sorted(reshards[0]["lost"]) == ["host2", "host3"]
+    assert reshards[0]["hosts"] == 2
+    assert reshards[0]["makeup_batches"] == 2 * (reshards[0]["barrier"] - 6)
+
+    for h in (0, 1):
+        while streams[h].position < n // gb:
+            delivered[h].append(next(streams[h]))
+    for s in streams:
+        s.close()
+    everything = [b for blist in delivered.values() for b in blist]
+    assert _flat_indices(everything) == list(range(n))
+
+
+def test_arena_respec_expected_leading_rejects_ragged_first_batch():
+    """A ragged makeup chunk arriving first after a reshard must not pin
+    the arena spec to the wrong local batch shape."""
+    from repro.data.arena import SlabArena
+    arena = SlabArena(4)
+    assert arena.adopt({"x": np.zeros((4, 3))}) is not None   # spec @ 4
+    arena.respec(expected_leading=6)
+    assert arena.adopt({"x": np.zeros((4, 3))}) is None       # stale shape
+    assert arena.adopt({"x": np.zeros((2, 3))}) is None       # ragged tail
+    slot = arena.adopt({"x": np.zeros((6, 3))})               # the new spec
+    assert slot is not None
+    slot.release()
+    assert arena.acquire() is not None
+
+
+def test_coordinator_drift_pushes_uniform_params_to_all_hosts():
+    clock, coord, agents, streams = _fleet()
+    # stalled fleet: data-wait dominates compute on every host
+    for _ in range(6):
+        clock[0] += 1.0
+        for a in agents:
+            a.observe(data_s=0.09, step_s=0.1)
+    actions = coord.poll()
+    consensus = next(a for a in actions if a["kind"] == "consensus")
+    assert consensus["reason"] == "goodput-drift"
+    assert consensus["applied"]
+    assert consensus["params"] == (4, 1)     # argmin of 4/i + 0.1j
+    for a in agents:
+        assert a.loader.params.num_workers == 4
+        assert a.loader.params.prefetch_factor == 1
+    for s in streams:
+        s.close()
+
+
+def test_coordinator_straggler_triggers_consensus():
+    clock, coord, agents, streams = _fleet()
+    for _ in range(6):
+        clock[0] += 1.0
+        for i, a in enumerate(agents):
+            # host2 is 4x slower per step but data stays hidden: only the
+            # straggler signal can catch this
+            step = 0.4 if i == 2 else 0.1
+            a.observe(data_s=0.001, step_s=step)
+    actions = coord.poll()
+    consensus = next(a for a in actions if a["kind"] == "consensus")
+    assert consensus["reason"].startswith("straggler-divergence:host2")
+    for s in streams:
+        s.close()
+
+
+def test_coordinator_join_expands_fleet_with_exact_coverage():
+    """3 -> 4 hosts mid-epoch: incumbents reshard at the barrier, the
+    newcomer aligns to it and takes the last shard."""
+    n, gb = 480, 12
+    clock, coord, agents, streams = _fleet(n, gb)
+    delivered = []
+    for rnd in range(6):
+        clock[0] += 1.0
+        for h in range(3):
+            delivered.append(next(streams[h]))
+            agents[h].observe(data_s=0.001, step_s=0.1)
+
+    dl_new = DataLoader(_index_dataset(n), gb, shuffle=True, seed=5,
+                        params=LoaderParams(num_workers=1,
+                                            prefetch_factor=2))
+    newcomer = HostAgent("host3", dl_new,
+                         evaluator=_table_evaluator(lambda i, j: 1.0))
+    barrier = coord.join(newcomer)
+    assert barrier >= 6
+    assert dl_new.sampler.state.batch_offset == barrier
+    assert (dl_new.sampler.host_count, dl_new.sampler.host_index) == (4, 3)
+
+    streams.append(dl_new.stream(to_device=False))
+    for s in streams:
+        while s.position < n // gb:
+            delivered.append(next(s))
+        s.close()
+    assert _flat_indices(delivered) == list(range(n))
+    assert len(coord.agents) == 4
+
+
+def test_coordinator_no_win_consensus_backs_off():
+    clock, coord, agents, streams = _fleet()
+    for a in agents:                 # flat objective: nothing to win
+        a.evaluator = _table_evaluator(lambda i, j: 1.0)
+    before = [a.loader.params for a in agents]
+    coord.request_consensus(reason="forced")
+    actions = coord.poll()
+    consensus = next(a for a in actions if a["kind"] == "consensus")
+    assert not consensus["applied"]
+    assert [a.loader.params for a in agents] == before
+    assert coord._backoff == 2
+    for s in streams:
+        s.close()
+
+
+def test_fleet_schedule_fires_once_in_order():
+    sched = FleetSchedule([FleetEvent(step=3, kind="degrade", host="h1",
+                                      io_scale=4.0),
+                           FleetEvent(step=3, kind="leave", host="h2")])
+    sched.add(FleetEvent(step=5, kind="join", host="h3"))
+    assert sched.at(0) == []
+    fired = sched.at(3)
+    assert [e.kind for e in fired] == ["degrade", "leave"]
+    assert sched.at(3) == []         # events fire exactly once
+    assert sched.pending == 1
+    assert [e.kind for e in sched.at(5)] == ["join"]
+    with pytest.raises(ValueError, match="unknown fleet event"):
+        FleetEvent(step=0, kind="explode", host="h0")
+
+
+def test_uniform_consensus_requires_universal_feasibility():
+    ok = Trial(2, 1, 1.0)
+    res_a = DPTResult(2, 1, 1.0, [ok, Trial(4, 1, 0.5)])
+    res_b = DPTResult(2, 1, 2.0, [Trial(2, 1, 2.0),
+                                  Trial(4, 1, math.inf, overflowed=True)])
+    best, fleet_time = uniform_consensus([res_a, res_b])
+    assert best == (2, 1)            # (4,1) is faster but overflows on b
+    assert fleet_time == 2.0
+
+
+# --------------------------------------------------------------------------
+# satellites: adaptive budget + Welch win test
+# --------------------------------------------------------------------------
+def test_adaptive_budget_derives_from_search_space():
+    cfg = DPTConfig(num_cpu_cores=12, num_devices=4)
+    assert adaptive_budget(cfg) == 36          # 3x the deepest rung (12)
+    assert adaptive_budget(cfg, explicit=5) == 5
+    assert adaptive_budget(DPTConfig(num_cpu_cores=2, num_devices=1)) == 8
+
+
+def test_online_tuner_uses_adaptive_budget_when_unset():
+    ev = _table_evaluator(lambda i, j: 4.0 / i + 0.1 * j)
+    dl = DataLoader(_index_dataset(64), 8, shuffle=False, seed=0,
+                    params=LoaderParams(num_workers=1, prefetch_factor=1))
+    tuner = OnlineTuner(dl, evaluator=ev,
+                        config=OnlineTunerConfig(num_cpu_cores=4,
+                                                 num_devices=1,
+                                                 max_prefetch=2),
+                        machine_fp="m", dataset_fp="d")
+    tuner.force_retune()
+    assert ev.budgets and all(b == 12 for b in ev.budgets)   # 3 * 4 cores
+
+
+def test_welch_wins_separates_signal_from_noise():
+    slow = [1.00, 1.02, 0.98, 1.01, 0.99, 1.00]
+    fast = [0.50, 0.52, 0.49, 0.51, 0.50, 0.48]
+    assert welch_wins(slow, fast)
+    assert not welch_wins(fast, slow)          # one-sided
+    noisy_a = [1.0, 0.2, 1.8, 0.6, 1.4]
+    noisy_b = [0.9, 0.3, 1.7, 0.5, 1.5]        # same spread, tiny shift
+    assert not welch_wins(noisy_a, noisy_b)
+    assert not welch_wins([1.0], [0.5])        # too few samples
+
+
+def test_retune_policy_welch_blocks_noisy_win():
+    """A 'winner' whose mean is lower only within noise is not applied;
+    a clearly separated one is."""
+    cfg = OnlineTunerConfig(strategy="hillclimb", min_improvement=0.05)
+    policy = RetunePolicy(cfg)
+    current = LoaderParams(num_workers=1, prefetch_factor=1)
+
+    def result(win_samples):
+        ref = Trial(1, 1, 1.0, batch_seconds=[1.0, 0.6, 1.4, 0.8, 1.2])
+        win = Trial(4, 1, 0.9, batch_seconds=win_samples)
+        return DPTResult(4, 1, 0.9, [ref, win])
+
+    noisy = result([0.9, 0.5, 1.5, 0.7, 1.3])       # -10% mean, huge var
+    assert not policy.is_win(noisy, current)
+    clear = result([0.30, 0.32, 0.28, 0.31, 0.29])  # unambiguous
+    assert policy.is_win(clear, current)
+
+
+def test_retune_policy_falls_back_without_samples():
+    cfg = OnlineTunerConfig(strategy="hillclimb", min_improvement=0.05)
+    policy = RetunePolicy(cfg)
+    current = LoaderParams(num_workers=1, prefetch_factor=1)
+    res = DPTResult(4, 1, 0.5, [Trial(1, 1, 1.0), Trial(4, 1, 0.5)])
+    assert policy.is_win(res, current)
+    res_small = DPTResult(4, 1, 0.97, [Trial(1, 1, 1.0), Trial(4, 1, 0.97)])
+    assert not policy.is_win(res_small, current)
+
+
+def test_loader_evaluator_records_batch_seconds():
+    """Wall-clock trials carry per-batch samples for the Welch test."""
+    from repro.tuning import TrialRecorder
+    from repro.core.evaluators import LoaderEvaluator
+    dl = DataLoader(_index_dataset(64), 8, shuffle=False, seed=0,
+                    params=LoaderParams(num_workers=0))
+    rec = TrialRecorder(LoaderEvaluator(dl, to_device=False),
+                        DPTConfig(num_batches=4))
+    rec.seconds(0, 1)
+    assert len(rec.trials) == 1
+    assert len(rec.trials[0].batch_seconds) == 4
