@@ -20,6 +20,7 @@ from benchmarks.common import csv_lines, fmt_table, save_rows
 BENCHES = [
     # (name, module, paper table/figure)
     ("fastpath", "benchmarks.bench_fastpath", "perf gate"),
+    ("locality", "benchmarks.bench_locality", "perf gate"),
     ("grid_cifar", "benchmarks.bench_grid_cifar", "Fig 2a/2b/4"),
     ("prefetch", "benchmarks.bench_prefetch", "Fig 3"),
     ("coco_resolution", "benchmarks.bench_coco_resolution", "Table 1a-1d"),

@@ -42,15 +42,50 @@ class DPTCache:
                                           batch_size, epoch))
         return (v["nworker"], v["nprefetch"]) if v else None
 
+    def get_params(self, machine_fp: str, dataset_fp: str, batch_size: int,
+                   epoch: int = 0, *, require_locality: bool = False
+                   ) -> Optional[Tuple[int, int, int]]:
+        """Like ``get`` but with the locality axis: (nworker, nprefetch,
+        locality_chunk).  Entries written before the axis existed read
+        back as locality 0 (random order).  ``require_locality=True``
+        treats entries whose search never swept the axis as misses — a
+        run that newly enables the axis must not be satisfied by a stale
+        two-axis result."""
+        with self._lock:
+            v = self._store.get(self._key(machine_fp, dataset_fp,
+                                          batch_size, epoch))
+        if not v:
+            return None
+        if require_locality and not v.get("locality_searched", False):
+            return None
+        return (v["nworker"], v["nprefetch"],
+                int(v.get("locality_chunk", 0)))
+
     def put(self, machine_fp: str, dataset_fp: str, batch_size: int,
             result: DPTResult, epoch: int = 0) -> None:
+        key = self._key(machine_fp, dataset_fp, batch_size, epoch)
+        entry = {
+            "nworker": result.nworker,
+            "nprefetch": result.nprefetch,
+            "optimal_time": result.optimal_time,
+            "locality_chunk": getattr(result, "locality_chunk", 0),
+            # did the sweep actually price the axis?  any non-zero chunk
+            # among the trials means candidate chunks were measured (a
+            # searched axis always includes one)
+            "locality_searched": any(
+                getattr(t, "locality_chunk", 0) for t in result.trials),
+        }
         with self._lock:
-            self._store[self._key(machine_fp, dataset_fp, batch_size,
-                                  epoch)] = {
-                "nworker": result.nworker,
-                "nprefetch": result.nprefetch,
-                "optimal_time": result.optimal_time,
-            }
+            prev = self._store.get(key)
+            if (not entry["locality_searched"] and prev
+                    and prev.get("locality_searched")):
+                # a locality-blind refinement (e.g. an online 2-axis
+                # retune) was measured AT the live chunk: it refines
+                # (nworker, nprefetch) without invalidating the searched
+                # locality — keep it instead of clobbering it to 0
+                entry["locality_chunk"] = prev.get("locality_chunk", 0)
+                entry["locality_searched"] = True
+            self._store[key] = entry
             if self.path:
                 tmp = self.path + ".tmp"
                 with open(tmp, "w") as f:

@@ -39,6 +39,11 @@ class DPTConfig:
     min_prefetch: int = 1
     num_batches: int = 32                    # measurement budget per cell
     epoch: int = 0                           # 0 = cold (1st), >=1 = warm
+    # beyond-paper third grid axis (DESIGN.md §5): candidate sampler
+    # locality_chunk values (0 = fully random).  None keeps the search on
+    # the paper's (nWorker, nPrefetch) plane and never passes the kwarg to
+    # the evaluator — existing two-argument evaluators are untouched.
+    locality_chunks: Optional[Tuple[int, ...]] = None
 
     def resolve(self) -> Tuple[int, int]:
         n = self.num_cpu_cores
@@ -64,6 +69,9 @@ class Trial:
     # per-batch samples when the evaluator measured wall clock (None for
     # aggregate-only evaluators like the simulator)
     batch_seconds: Optional[List[float]] = None
+    # sampler locality the cell was measured with (0 = random order / the
+    # locality axis was not searched)
+    locality_chunk: int = 0
 
 
 @dataclasses.dataclass
@@ -73,6 +81,7 @@ class DPTResult:
     optimal_time: float
     trials: List[Trial]
     default_time: Optional[float] = None
+    locality_chunk: int = 0
 
     @property
     def speedup_vs_default(self) -> Optional[float]:

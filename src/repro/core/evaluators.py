@@ -26,16 +26,20 @@ class LoaderEvaluator:
         self.calls = 0
 
     def __call__(self, nworker: int, nprefetch: int, *, num_batches: int = 16,
-                 epoch: int = 0) -> TransferStats:
+                 epoch: int = 0,
+                 locality_chunk: Optional[int] = None) -> TransferStats:
         self.calls += 1
         # replace() keeps the loader's delivery knobs (fast_path, zero_copy,
         # ordered, use_processes, ...) so trials measure the same machinery
-        # the live stream runs
+        # the live stream runs.  The locality axis is passed as a
+        # measurement-only override — candidate chunk sizes must not touch
+        # the shared sampler's live epoch schedule.
         self.loader.with_params(self.loader.params.replace(
             num_workers=nworker, prefetch_factor=nprefetch,
             device_prefetch=self.device_prefetch))
         return self.loader.measure_transfer_time(
-            num_batches, epoch=epoch, to_device=self.to_device)
+            num_batches, epoch=epoch, to_device=self.to_device,
+            locality_chunk=locality_chunk)
 
 
 class SimulatorEvaluator:
@@ -52,14 +56,16 @@ class SimulatorEvaluator:
         self.calls = 0
 
     def __call__(self, nworker: int, nprefetch: int, *, num_batches: int = 16,
-                 epoch: int = 0) -> TransferStats:
+                 epoch: int = 0,
+                 locality_chunk: Optional[int] = None) -> TransferStats:
         self.calls += 1
         if self.num_batches_cap is not None:
             num_batches = min(num_batches, self.num_batches_cap)
         r = self.sim.simulate(
             batch_size=self.batch_size, num_batches=num_batches,
             nworker=nworker, nprefetch=nprefetch, epoch=epoch,
-            device_prefetch=self.device_prefetch, device_ram=self.device_ram)
+            device_prefetch=self.device_prefetch, device_ram=self.device_ram,
+            locality_chunk=locality_chunk or 0)
         return TransferStats(r.seconds, num_batches,
                              int(num_batches * self.sim.batch_bytes(
                                  self.batch_size)),

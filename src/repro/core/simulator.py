@@ -118,7 +118,8 @@ class LoaderSimulator:
     def simulate(self, *, batch_size: int, num_batches: int, nworker: int,
                  nprefetch: int, epoch: int = 0, device_prefetch: int = 2,
                  device_ram: Optional[float] = None,
-                 check_overflow: bool = True) -> SimResult:
+                 check_overflow: bool = True,
+                 locality_chunk: int = 0) -> SimResult:
         sp, mp = self.sp, self.mp
         K = max(1, nworker)
         j = max(1, nprefetch)
@@ -146,7 +147,14 @@ class LoaderSimulator:
         # reads coalesce contiguous items into runs (StorageProfile
         # .coalesced_run_len, 1.0 = legacy per-item requests), amortizing
         # the base latency over the run — bandwidth is charged in full.
+        # Chunked sampling (locality_chunk > 1, DESIGN.md §5): a batch's
+        # sorted misses coalesce into runs of about min(chunk, batch) items
+        # — the measured effect of ShardedSampler's chunked orders, priced
+        # here so DPT grids resolve the locality axis in virtual time.
+        # 0/1 leaves the profile's own run length (neutral default).
         run = max(1.0, sp.coalesced_run_len)
+        if locality_chunk and locality_chunk > 1:
+            run = max(run, float(min(locality_chunk, batch_size)))
         lat_k = sp.io_latency_s * (1.0 + sp.seek_congestion * K)
         agg_bw = sp.storage_bw / (1.0 + mp.io_congestion
                                   * max(0, K - mp.io_streams))

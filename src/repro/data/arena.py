@@ -61,6 +61,14 @@ class ArenaBatch(dict):
         self._detached = True
         return self
 
+    def copy_into(self, out: Dict[str, np.ndarray]) -> None:
+        """Copy every field into matching preallocated buffers (the device
+        edge's staging pool): after this returns, nothing downstream holds a
+        view of the slot and the caller may ``release()`` immediately —
+        decoupling the arena's lifetime from the device transfer."""
+        for k, v in self.items():
+            np.copyto(out[k], v)
+
     def release(self) -> None:
         with self._lock:
             if self._released:

@@ -26,6 +26,7 @@ from repro.data.arena import SlabArena
 from repro.data.dataset import Dataset
 from repro.data.prefetcher import DevicePrefetcher
 from repro.data.sampler import SamplerState, ShardedSampler
+from repro.data.storage import storage_io_counters
 from repro.data.worker_pool import (ProcessWorkerPool, ThreadWorkerPool,
                                     batch_nbytes)
 
@@ -43,6 +44,15 @@ class LoaderParams:
     order-preserving reordering buffer so delivery matches sampler order at
     any worker count; ``transfer_threads``/``donate_transfer`` configure the
     device prefetcher's HBM copy lanes.
+
+    IO-locality knobs (DESIGN.md §5): ``locality_chunk`` (0/1 = fully
+    random) switches the sampler to chunked shuffling so cold-epoch
+    ``read_batch`` calls coalesce into contiguous runs — the third axis
+    DPT's grid searches next to (nWorker, nPrefetch); ``staging_buffers``
+    sizes the device edge's pinned staging ring (0 disables it, restoring
+    the per-batch verify-and-re-put).  Both hot-swap via ``apply_params``
+    (locality latches at the next epoch boundary — see
+    ``ShardedSampler.set_locality``).
     """
     num_workers: int = 0
     prefetch_factor: int = 2
@@ -53,6 +63,8 @@ class LoaderParams:
     ordered: bool = True
     transfer_threads: int = 1
     donate_transfer: bool = False
+    locality_chunk: int = 0
+    staging_buffers: int = 2
 
     def replace(self, **kw) -> "LoaderParams":
         return dataclasses.replace(self, **kw)
@@ -73,6 +85,14 @@ class TransferStats:
     # per-batch arrival deltas (wall-clock evaluators fill this in); the
     # variance-aware win test in repro.tuning needs samples, not just a mean
     batch_seconds: Optional[List[float]] = None
+    # IO-efficiency counters (DESIGN.md §5): storage requests issued during
+    # the window, mean cache-miss items served per request (the measured
+    # coalesced run length), and the device edge's staging-pool hit rate —
+    # so retune decisions and benches see *locality*, not just bytes/s.
+    # Zero/None when the storage backend keeps no counters / no staging ran.
+    coalesced_requests: int = 0
+    coalesced_run_len: float = 0.0
+    staging_hit_rate: Optional[float] = None
 
     @property
     def bytes_per_second(self) -> float:
@@ -129,7 +149,8 @@ class LoaderStream:
                 self._host_gen, depth=loader.params.device_prefetch,
                 sharding=loader.sharding,
                 transfer_threads=loader.params.transfer_threads,
-                donate=loader.params.donate_transfer)
+                donate=loader.params.donate_transfer,
+                staging_buffers=loader.params.staging_buffers)
             self._iter = iter(self._prefetcher)
         else:
             self._iter = self._host_gen
@@ -281,9 +302,13 @@ class LoaderStream:
                 # measurements may have mutated loader.params via
                 # with_params between the request and this drain
                 self.loader.params = params
+                # locality latches at the next epoch boundary — an
+                # in-progress epoch keeps its permutation (coverage)
+                self.loader.sampler.set_locality(params.locality_chunk)
                 self.swaps += 1
                 if self._prefetcher is not None:
                     self._prefetcher.set_depth(params.device_prefetch)
+                    self._prefetcher.set_staging(params.staging_buffers)
 
     def __iter__(self):
         return self
@@ -310,21 +335,35 @@ class DataLoader:
         self.sampler = ShardedSampler(
             len(dataset), global_batch, shuffle=shuffle, seed=seed,
             host_index=host_index, host_count=host_count,
-            state=sampler_state)
+            state=sampler_state, locality_chunk=params.locality_chunk)
 
     # ---- checkpointable state ---------------------------------------------
     def state_dict(self):
         return {"sampler": self.sampler.state.to_dict(),
-                "params": dataclasses.asdict(self.params)}
+                "params": dataclasses.asdict(self.params),
+                "locality": self.sampler.locality_state()}
 
     def load_state_dict(self, d):
         self.sampler.state = SamplerState.from_dict(d["sampler"])
         self.params = LoaderParams(**d["params"])
+        if "locality" in d:
+            # the full schedule restores a mid-epoch deferred change exactly
+            self.sampler.load_locality(d["locality"])
+        else:                          # pre-locality checkpoint
+            self.sampler.force_locality(self.params.locality_chunk)
 
     def with_params(self, params: LoaderParams) -> "DataLoader":
         """Set params for *future* pools (trial measurements, restarts).
-        Does not touch a live stream — use ``apply_params`` for that."""
+        Does not swap a live stream's pool — use ``apply_params`` for
+        that.  ``locality_chunk`` does latch into the (shared) sampler
+        schedule, effective from the next epoch that hasn't started — so
+        a restart honours it; a live stream keeps its current epoch's
+        order either way.  (DPT trials never hit this: they preserve the
+        loader's locality via ``replace`` and measure candidate chunks
+        through the ``measure_transfer_time(locality_chunk=...)``
+        override.)"""
         self.params = params
+        self.sampler.set_locality(params.locality_chunk)
         return self
 
     def apply_params(self, params: LoaderParams) -> LoaderParams:
@@ -339,7 +378,10 @@ class DataLoader:
         """
         self.params = params
         if self._live_stream is not None:
+            # sampler locality syncs when the stream commits the swap
             self._live_stream.apply_params(params)
+        else:
+            self.sampler.set_locality(params.locality_chunk)
         return params
 
     def reshard(self, num_shards: int, shard: int, *,
@@ -434,18 +476,51 @@ class DataLoader:
         return iter(self.stream())
 
     # ---- the DPT objective ---------------------------------------------------
+    def _uses_processes(self) -> bool:
+        return self.params.use_processes and self.params.num_workers > 0
+
+    def io_counters(self) -> dict:
+        """Live IO-efficiency snapshot for the monitor report: storage
+        request counters (+ achieved coalesced run length), the live
+        stream's staging-pool hit rate, and the arena hit rate.  Empty
+        when nothing in the pipeline keeps counters — including process
+        pools, whose reads increment counters in the forked children, not
+        here (zeros would read as "no locality", which is a lie)."""
+        out: dict = {}
+        c = None if self._uses_processes() \
+            else storage_io_counters(self.dataset.storage)
+        if c is not None:
+            out.update(c)
+            misses = c["reads"] - c["cache_hits"]
+            out["coalesced_run_len"] = (
+                misses / c["coalesced_requests"]
+                if c["coalesced_requests"] else 0.0)
+        stream = self._live_stream
+        if stream is not None and stream._prefetcher is not None:
+            hr = stream._prefetcher.staging_hit_rate
+            if hr is not None:
+                out["staging_hit_rate"] = hr
+        if self._stream_arena is not None:
+            out["arena_hit_rate"] = self._stream_arena.hit_rate
+        return out
+
     def measure_transfer_time(self, num_batches: int, *,
                               epoch: int = 0,
-                              to_device: bool = True) -> TransferStats:
+                              to_device: bool = True,
+                              locality_chunk: Optional[int] = None
+                              ) -> TransferStats:
         """Wall-clock time to deliver ``num_batches`` (storage->host[->HBM]).
 
         Raises MemoryOverflow through TransferStats.overflowed=True so
-        Algorithm 1's inner-loop break can act on it.
+        Algorithm 1's inner-loop break can act on it.  ``locality_chunk``
+        overrides the sampler's scheduled chunking for this measurement
+        only (how DPT trials price the locality axis without perturbing a
+        live stream's epoch order).
         """
         # static pre-check (the paper's N/A cells fail before running)
         if self.memory_budget is not None:
             probe = self.dataset.get_batch(
-                self.sampler.local_indices(epoch, 0)[:1])
+                self.sampler.local_indices(epoch, 0, locality_chunk)[:1])
             est_batch = batch_nbytes(probe) * self.sampler.local_batch
             est = estimate_loader_footprint(
                 est_batch, self.params.num_workers,
@@ -453,7 +528,14 @@ class DataLoader:
             if est > self.memory_budget.loader_bytes * 4:
                 return TransferStats(float("inf"), 0, 0, overflowed=True)
 
-        idx_iter = _take(self.sampler.epoch_iter(epoch), num_batches)
+        idx_iter = _take(self.sampler.epoch_iter(epoch, locality_chunk),
+                         num_batches)
+        # snapshot BEFORE _pool(): worker threads start reading the moment
+        # the pool is constructed, and their requests belong to this window.
+        # Process pools read in the forked children — their parent-side
+        # counters never move, so skip attribution rather than report 0.
+        io_before = None if self._uses_processes() \
+            else storage_io_counters(self.dataset.storage)
         pool, monitor = self._pool(idx_iter)
         total_bytes = 0
         n = 0
@@ -467,14 +549,17 @@ class DataLoader:
         start = time.perf_counter()
         prev = start
         deltas: List[float] = []
+        prefetcher = None
         try:
             it = _counted(iter(pool))
             if to_device:
-                it = iter(DevicePrefetcher(
+                prefetcher = DevicePrefetcher(
                     it, depth=self.params.device_prefetch,
                     sharding=self.sharding,
                     transfer_threads=self.params.transfer_threads,
-                    donate=self.params.donate_transfer))
+                    donate=self.params.donate_transfer,
+                    staging_buffers=self.params.staging_buffers)
+                it = iter(prefetcher)
             for _batch in it:
                 n += 1
                 now = time.perf_counter()
@@ -486,9 +571,20 @@ class DataLoader:
                                  overflowed=True,
                                  peak_loader_bytes=monitor.peak)
         elapsed = time.perf_counter() - start
-        return TransferStats(elapsed, n, total_bytes,
-                             peak_loader_bytes=monitor.peak,
-                             batch_seconds=deltas)
+        stats = TransferStats(elapsed, n, total_bytes,
+                              peak_loader_bytes=monitor.peak,
+                              batch_seconds=deltas)
+        io_after = storage_io_counters(self.dataset.storage)
+        if io_before is not None and io_after is not None:
+            req = int(io_after["coalesced_requests"]
+                      - io_before["coalesced_requests"])
+            misses = ((io_after["reads"] - io_after["cache_hits"])
+                      - (io_before["reads"] - io_before["cache_hits"]))
+            stats.coalesced_requests = req
+            stats.coalesced_run_len = misses / req if req else 0.0
+        if prefetcher is not None:
+            stats.staging_hit_rate = prefetcher.staging_hit_rate
+        return stats
 
 
 def _take(it, n):

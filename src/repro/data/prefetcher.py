@@ -17,14 +17,22 @@ Fast-path extensions (DESIGN.md §3):
   concurrently with each other and with compute;
 * arena-backed batches (``ArenaBatch``) are ``detach``ed before an async
   transfer and released the moment their device copy completes, returning
-  the slab to the ring as early as possible.
+  the slab to the ring as early as possible;
+* a ``StagingPool`` (``staging_buffers > 0``, the default) interposes a
+  small ring of preallocated host staging buffers on the device edge: the
+  slab is copied into a pooled buffer once and released *immediately*
+  (before the device copy even starts), and the device put runs from the
+  pooled buffer with no ``may_alias=False`` / verify-and-re-put dance —
+  a buffer the backend zero-copied is retired from the ring instead of
+  reused, so privacy holds by construction (DESIGN.md §5).
 """
 from __future__ import annotations
 
 import queue
 import threading
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import jax
 import numpy as np
@@ -77,6 +85,81 @@ def put_global_batch(batch, sharding=None, *, donate: bool = False,
     return jax.tree_util.tree_map(_put, batch)
 
 
+class StagingPool:
+    """Pinned staging-buffer ring for the device edge (DESIGN.md §5).
+
+    The zero-copy pipeline's last host hop: an arena slab must not be
+    recycled while a device copy might still read (or alias) it.  PR 2
+    solved that with ``may_alias=False`` + a per-batch verify-and-re-put
+    (``_ensure_private`` — jax 0.4.37's concurrent ``device_put`` can
+    ignore ``may_alias=False``).  The pool replaces the dance: the slab is
+    copied ONCE into a pooled buffer shaped like the device batch and
+    released on the spot, and the device put runs from the pooled buffer.
+    A buffer the backend genuinely copied returns to the ring (hit on next
+    acquire); one the backend zero-copied now *backs a live device array*
+    and is retired instead — it is never written again, so the device
+    array can never be mutated by recycling.
+
+    The spec (field shapes/dtypes) latches from the first batch; a batch
+    of a different shape (reshard, ragged makeup chunk) drops the stale
+    ring and re-establishes it.  ``hit_rate``/``retired`` feed
+    ``TransferStats.staging_hit_rate`` and the monitor report.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = max(1, capacity)
+        self._spec: Optional[Dict[str, tuple]] = None
+        self._free: deque = deque()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.retired = 0
+
+    def acquire(self, batch: Dict) -> Dict[str, np.ndarray]:
+        """A staging dict matching ``batch``'s field spec.  Never blocks
+        and never fails: a miss allocates (transfers already in flight
+        bound how many buffers can be out; ``release`` drops surplus)."""
+        spec = {k: (np.asarray(v).shape, np.asarray(v).dtype)
+                for k, v in batch.items()}
+        with self._lock:
+            if self._spec != spec:
+                # first batch, or the batch shape changed (reshard):
+                # pooled buffers of the old shape are useless — drop them
+                self._free.clear()
+                self._spec = spec
+            if self._free:
+                self.hits += 1
+                return self._free.popleft()
+            self.misses += 1
+        return {k: np.empty(shape, dtype) for k, (shape, dtype) in
+                spec.items()}
+
+    def release(self, buf: Dict[str, np.ndarray]) -> None:
+        """The device copy landed in a private buffer: back to the ring
+        (dropped if the spec moved on or the ring is full)."""
+        with self._lock:
+            spec = {k: (v.shape, v.dtype) for k, v in buf.items()}
+            if spec == self._spec and len(self._free) < self.capacity:
+                self._free.append(buf)
+
+    def retire(self, buf: Dict[str, np.ndarray]) -> None:
+        """The device array aliases this buffer — it belongs to the device
+        array now and must never be reused."""
+        with self._lock:
+            self.retired += 1
+
+    def resize(self, capacity: int) -> None:
+        with self._lock:
+            self.capacity = max(1, capacity)
+            while len(self._free) > self.capacity:
+                self._free.pop()
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
 class _DepthGate:
     """Resizable in-flight bound (the hot-swappable ``device_prefetch``).
 
@@ -125,10 +208,13 @@ class _DepthGate:
 
 class DevicePrefetcher:
     def __init__(self, host_iter: Iterator, *, depth: int = 2, sharding=None,
-                 transfer_threads: int = 1, donate: bool = False):
+                 transfer_threads: int = 1, donate: bool = False,
+                 staging_buffers: int = 2):
         self.sharding = sharding
         self.donate = donate
         self.transfer_threads = max(1, transfer_threads)
+        self._staging = (StagingPool(staging_buffers)
+                         if staging_buffers > 0 else None)
         self._gate = _DepthGate(depth)
         self._queue: queue.Queue = queue.Queue()   # bounded by the gate
         self._error: Optional[BaseException] = None
@@ -149,6 +235,22 @@ class DevicePrefetcher:
         """Retune the prefetch depth on the live stream (hot swap)."""
         self._gate.set_depth(depth)
 
+    def set_staging(self, staging_buffers: int) -> None:
+        """Retune (or disable) the staging ring on the live stream.  Runs
+        at the same params boundary as ``set_depth``; in-flight transfers
+        finish against the pool they started with."""
+        if staging_buffers <= 0:
+            self._staging = None
+        elif self._staging is None:
+            self._staging = StagingPool(staging_buffers)
+        else:
+            self._staging.resize(staging_buffers)
+
+    @property
+    def staging_hit_rate(self) -> Optional[float]:
+        """Staging-pool hit rate (None when the pool is disabled)."""
+        return self._staging.hit_rate if self._staging is not None else None
+
     def close(self) -> None:
         """Stop prefetching and unblock the producer thread (which may be
         parked on the depth gate).  Safe to call more than once."""
@@ -166,6 +268,17 @@ class DevicePrefetcher:
         # transferred array (CPU backend zero-copies plain numpy otherwise)
         arena_backed = isinstance(batch, ArenaBatch)
         payload = dict(batch) if arena_backed else batch
+        # snapshot the pool: set_staging(0) may null self._staging while a
+        # transfer is in flight — it must finish against the pool it
+        # started with
+        staging = self._staging
+        if arena_backed and staging is not None:
+            try:
+                staged = staging.acquire(payload)
+            except BaseException:
+                batch.release()    # allocation failed: never strand a slot
+                raise
+            return self._transfer_staged(batch, staged, staging)
         try:
             dev = put_global_batch(payload, self.sharding, donate=self.donate,
                                    may_alias=False if arena_backed else None)
@@ -179,6 +292,29 @@ class DevicePrefetcher:
         finally:
             if arena_backed:
                 batch.release()    # even on a failed transfer: never leak
+
+    def _transfer_staged(self, batch: ArenaBatch, staged, pool: StagingPool):
+        """Staging fast path: one host memcpy frees the slab immediately;
+        the device put runs from the pooled buffer, whose privacy is
+        settled once (alias -> retire) instead of verified-and-re-put per
+        batch."""
+        try:
+            batch.copy_into(staged)
+        finally:
+            batch.release()        # slab is free the moment the copy ends
+        try:
+            dev = put_global_batch(staged, self.sharding, donate=self.donate)
+            # the (async) put may still be reading the staging buffer — and
+            # on a zero-copying backend the result may *be* the buffer
+            jax.block_until_ready(dev)
+        except BaseException:
+            pool.release(staged)   # unused after a failed put
+            raise
+        if any(_leaf_aliases(d, staged[k]) for k, d in dev.items()):
+            pool.retire(staged)    # owned by the device array now
+        else:
+            pool.release(staged)
+        return dev
 
     def _ensure_private(self, dev, host):
         """Guarantee no transferred leaf still aliases its source slab.

@@ -5,11 +5,23 @@ Multi-pod semantics: every host sees the same global permutation (seeded by
 consumes a consistent global batch without coordination.  The sampler state
 (epoch, offset) is part of the training checkpoint — restart resumes the
 data stream exactly (fault-tolerance requirement).
+
+IO locality (DESIGN.md §5): ``locality_chunk = C > 1`` switches the epoch
+permutation from fully random to *chunked* — fixed-size contiguous chunks
+of the index space are shuffled as units, and items are shuffled within
+each chunk.  A batch then covers a few whole chunks instead of B scattered
+items, so ``Storage.read_batch``'s sorted-miss coalescing sees contiguous
+runs of ~C items (one storage request per run instead of one per item) on
+cold epochs.  Coverage is untouched: a chunked order is still exactly a
+permutation of [0, N), so once-per-epoch delivery — including under
+mid-epoch ``reshard`` — holds unconditionally.  Locality changes are
+epoch-latched (``set_locality``): an in-progress epoch keeps its order, so
+a live hot swap can never split one epoch across two permutations.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -49,7 +61,8 @@ class ShardedSampler:
     def __init__(self, num_items: int, global_batch: int, *,
                  shuffle: bool = True, seed: int = 0, drop_last: bool = True,
                  host_index: int = 0, host_count: int = 1,
-                 state: Optional[SamplerState] = None):
+                 state: Optional[SamplerState] = None,
+                 locality_chunk: int = 0):
         if global_batch % host_count:
             raise ValueError(
                 f"global_batch {global_batch} not divisible by host_count "
@@ -63,21 +76,103 @@ class ShardedSampler:
         self.host_index = host_index
         self.host_count = host_count
         self.state = state or SamplerState()
+        self.locality_chunk = max(0, int(locality_chunk))
+        # (first_epoch, chunk) steps; the chunk for epoch e is the last
+        # entry with first_epoch <= e — how set_locality defers a change
+        # to the next epoch boundary without forgetting the old order
+        self._locality_schedule: List[Tuple[int, int]] = [
+            (0, self.locality_chunk)]
+        self._perm_cache: dict = {}
 
     def batches_per_epoch(self) -> int:
         if self.drop_last:
             return self.num_items // self.global_batch
         return -(-self.num_items // self.global_batch)
 
-    def _epoch_perm(self, epoch: int) -> np.ndarray:
+    # ---- locality schedule ------------------------------------------------
+    def chunk_for_epoch(self, epoch: int) -> int:
+        """The locality_chunk in effect for ``epoch``."""
+        chunk = self._locality_schedule[0][1]
+        for e, c in self._locality_schedule:
+            if e > epoch:
+                break
+            chunk = c
+        return chunk
+
+    def set_locality(self, chunk: int) -> None:
+        """Change the chunked-shuffle granularity (0/1 = fully random).
+
+        Epoch-latched: takes effect for the current epoch only if it has
+        not delivered a batch yet, otherwise from the next epoch — an
+        in-progress epoch keeps its permutation, so coverage stays exact
+        across a live hot swap.
+        """
+        chunk = max(0, int(chunk))
+        if chunk == self.locality_chunk:
+            return
+        eff = self.state.epoch + (1 if self.state.batch_offset else 0)
+        self.locality_chunk = chunk
+        self._locality_schedule = [
+            (e, c) for e, c in self._locality_schedule if e < eff]
+        self._locality_schedule.append((eff, chunk))
+
+    def force_locality(self, chunk: int) -> None:
+        """Reset the schedule to ``chunk`` for every epoch (restore path)."""
+        self.locality_chunk = max(0, int(chunk))
+        self._locality_schedule = [(0, self.locality_chunk)]
+
+    def locality_state(self) -> List[List[int]]:
+        return [[int(e), int(c)] for e, c in self._locality_schedule]
+
+    def load_locality(self, schedule: Sequence[Sequence[int]]) -> None:
+        self._locality_schedule = [(int(e), int(c)) for e, c in schedule]
+        self.locality_chunk = self._locality_schedule[-1][1]
+
+    # ---- epoch orders -----------------------------------------------------
+    @staticmethod
+    def _chunked_perm(rng: np.random.Generator, n: int,
+                      chunk: int) -> np.ndarray:
+        """Shuffle contiguous ``chunk``-sized blocks of [0, n) as units,
+        and shuffle within each block.  Still exactly a permutation of
+        [0, n), so coverage never depends on the chunk size."""
+        n_chunks = -(-n // chunk)
+        order = rng.permutation(n_chunks)
+        keys = rng.random((n_chunks, chunk))
+        base = np.arange(n_chunks * chunk).reshape(n_chunks, chunk)
+        within = np.take_along_axis(base, np.argsort(keys, axis=1), axis=1)
+        perm = within[order].reshape(-1)
+        # the padded tail chunk carries out-of-range slots: drop them
+        return perm[perm < n] if n_chunks * chunk != n else perm
+
+    def _epoch_perm(self, epoch: int,
+                    chunk: Optional[int] = None) -> np.ndarray:
         if not self.shuffle:
             return np.arange(self.num_items)
-        rng = np.random.default_rng((self.seed, epoch))
-        return rng.permutation(self.num_items)
+        if chunk is None:
+            chunk = self.chunk_for_epoch(epoch)
+        chunk = max(0, int(chunk))
+        key = (epoch, chunk, self.seed, self.num_items)
+        perm = self._perm_cache.get(key)
+        if perm is None:
+            rng = np.random.default_rng((self.seed, epoch))
+            if chunk <= 1:
+                perm = rng.permutation(self.num_items)
+            else:
+                perm = self._chunked_perm(rng, self.num_items, chunk)
+            if len(self._perm_cache) >= 4:   # tiny memo: streams touch at
+                self._perm_cache.clear()     # most a couple of epochs at once
+            self._perm_cache[key] = perm
+        return perm
 
-    def local_indices(self, epoch: int, batch: int) -> np.ndarray:
-        """This host's slice of global batch ``batch`` in ``epoch``."""
-        perm = self._epoch_perm(epoch)
+    def local_indices(self, epoch: int, batch: int,
+                      chunk: Optional[int] = None) -> np.ndarray:
+        """This host's slice of global batch ``batch`` in ``epoch``.
+
+        ``chunk`` overrides the scheduled locality for this lookup only
+        (DPT trials measure candidate chunk sizes without touching the
+        live schedule).
+        """
+        perm = self._epoch_perm(epoch, chunk)
         start = batch * self.global_batch
         glob = perm[start:start + self.global_batch]
         if len(glob) < self.global_batch and not self.drop_last:
@@ -94,11 +189,13 @@ class ShardedSampler:
             self.state.epoch += 1
             self.state.batch_offset = 0
 
-    def epoch_iter(self, epoch: Optional[int] = None) -> Iterator[np.ndarray]:
-        """One epoch, non-stateful (used by DPT trials)."""
+    def epoch_iter(self, epoch: Optional[int] = None,
+                   chunk: Optional[int] = None) -> Iterator[np.ndarray]:
+        """One epoch, non-stateful (used by DPT trials).  ``chunk``
+        overrides the scheduled locality for this iteration only."""
         e = self.state.epoch if epoch is None else epoch
         for b in range(self.batches_per_epoch()):
-            yield self.local_indices(e, b)
+            yield self.local_indices(e, b, chunk)
 
     # ---- elastic resharding -------------------------------------------------
     def reshard(self, num_shards: int, shard: int) -> None:

@@ -27,7 +27,8 @@ import dataclasses
 import os
 import threading
 import time
-from typing import List, Optional, Sequence, Tuple, Union
+import weakref
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -169,6 +170,25 @@ class ArrayStorage(Storage):
         return self._items[idx].nbytes
 
 
+# FileStorage instances whose mmap caches must be dropped in a forked
+# child: a fork duplicates the parent's open handles/mappings into the
+# child (where they are dead weight at best — the child lazily reopens on
+# first use).  Pickling already drops them (__getstate__); this covers the
+# fork-without-pickle path (ProcessWorkerPool's fork pool inherits the
+# parent's live objects at Pool() creation).
+_FORK_RESET_STORAGES: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def _drop_inherited_mmaps() -> None:   # runs in the CHILD, right after fork
+    for fs in list(_FORK_RESET_STORAGES):
+        fs._mmaps = {}
+        fs._mmap_lock = threading.Lock()
+
+
+if hasattr(os, "register_at_fork"):    # pragma: no branch - CPython 3.7+
+    os.register_at_fork(after_in_child=_drop_inherited_mmaps)
+
+
 class FileStorage(Storage):
     """One .npy file per item under ``root``.
 
@@ -188,6 +208,7 @@ class FileStorage(Storage):
         self._sizes = [os.path.getsize(p) for p in self._paths]
         self._mmaps: dict = {}
         self._mmap_lock = threading.Lock()
+        _FORK_RESET_STORAGES.add(self)
 
     @classmethod
     def create(cls, root: str, items) -> "FileStorage":
@@ -229,6 +250,7 @@ class FileStorage(Storage):
     def __setstate__(self, state):
         self.__dict__.update(state)
         self._mmap_lock = threading.Lock()
+        _FORK_RESET_STORAGES.add(self)
 
 
 class LatencyStorage(Storage):
@@ -316,6 +338,28 @@ class LatencyStorage(Storage):
                 self._maybe_cache(i, self.inner.item_nbytes(i), data)
         return [self._cache[i] if i in hits else miss_data[i]
                 for i in indices]
+
+    @property
+    def achieved_run_len(self) -> float:
+        """Mean cache-miss items served per storage request so far — the
+        measured counterpart of ``StorageProfile.coalesced_run_len``."""
+        if not self.coalesced_requests:
+            return 0.0
+        return (self.reads - self.cache_hits) / self.coalesced_requests
+
+
+_IO_COUNTER_FIELDS = ("reads", "cache_hits", "batched_reads",
+                      "coalesced_requests")
+
+
+def storage_io_counters(storage) -> Optional[Dict[str, float]]:
+    """Snapshot of a storage's IO-efficiency counters (None when the
+    backend doesn't keep them).  Duck-typed so instrumented backends other
+    than ``LatencyStorage`` surface the same numbers; loaders diff two
+    snapshots to attribute requests to one measurement window."""
+    if not all(hasattr(storage, f) for f in _IO_COUNTER_FIELDS):
+        return None
+    return {f: float(getattr(storage, f)) for f in _IO_COUNTER_FIELDS}
 
 
 # --- canonical dataset profiles used by the paper-table benchmarks --------

@@ -56,6 +56,14 @@ class TrainerConfig:
     # worker rung — see tuning.base.adaptive_budget)
     autotune_budget_batches: Optional[int] = None
     autotune_max_prefetch: int = 4
+    # candidate sampler locality_chunk values for the startup grid
+    # (DESIGN.md §5).  None keeps the search on the paper's two axes;
+    # include 0 in the tuple so fully-random order stays a candidate —
+    # warm/CPU-bound profiles should be free to reject chunking.
+    # Single-host only: on a sharded fleet the axis is ignored (every host
+    # must slice the SAME epoch permutation, so locality can only change
+    # uniformly via the coordinator, never from a per-host tune).
+    autotune_locality_chunks: Optional[tuple] = None
     retune_stall_fraction: float = 0.5   # data-wait/compute drift trigger
     retune_window: int = 8
     retune_cooldown_steps: int = 16
@@ -96,18 +104,39 @@ class Trainer:
         cache = DPTCache(self.cfg.dpt_cache_path)
         mfp = machine_fingerprint()
         dfp = self.loader.dataset.fingerprint()
-        cached = None if force else cache.get(mfp, dfp,
-                                              self.loader.global_batch)
+        strategy = self.cfg.autotune_strategy
+        locality_axis = self.cfg.autotune_locality_chunks
+        if locality_axis and self.loader.sampler.host_count > 1:
+            # per-host tuned chunks would give each host a DIFFERENT epoch
+            # permutation, breaking the cross-host coverage invariant the
+            # fleet relies on (every host must slice the SAME perm).  A
+            # multi-host locality change must arrive uniformly through the
+            # coordinator, not the local startup tune.
+            locality_axis = None
+        if locality_axis and strategy != "grid":
+            # only the grid strategy sweeps DPTConfig.locality_chunks; for
+            # any other strategy the axis is unsearched and the result's
+            # locality_chunk=0 must not be force-applied over the user's
+            locality_axis = None
+        cached = None if force else cache.get_params(
+            mfp, dfp, self.loader.global_batch,
+            require_locality=bool(locality_axis))
         if cached is not None:
-            params = self.loader.params.replace(num_workers=cached[0],
-                                                prefetch_factor=cached[1])
+            rep = {"num_workers": cached[0], "prefetch_factor": cached[1]}
+            if locality_axis:
+                # only adopt a cached locality when this run searches the
+                # axis — a 2-axis run must not silently reset a user-set
+                # locality_chunk to a stale cached value
+                rep["locality_chunk"] = cached[2]
+            params = self.loader.params.replace(**rep)
             self.loader.with_params(params)
             return params
         ev = LoaderEvaluator(self.loader, to_device=True)
-        search_cfg = DPTConfig(max_prefetch=self.cfg.autotune_max_prefetch)
+        search_cfg = DPTConfig(max_prefetch=self.cfg.autotune_max_prefetch,
+                               locality_chunks=(tuple(locality_axis)
+                                                if locality_axis else None))
         search_cfg = dataclasses.replace(search_cfg, num_batches=(
             adaptive_budget(search_cfg, self.cfg.autotune_budget_batches)))
-        strategy = self.cfg.autotune_strategy
         if strategy == "grid":
             kwargs = {"measure_default": False}
         elif strategy == "successive_halving":
@@ -125,8 +154,11 @@ class Trainer:
         result = tune(evaluator=ev, strategy=strategy,
                       config=search_cfg, **kwargs)
         cache.put(mfp, dfp, self.loader.global_batch, result)
-        params = self.loader.params.replace(
-            num_workers=result.nworker, prefetch_factor=result.nprefetch)
+        rep = {"num_workers": result.nworker,
+               "prefetch_factor": result.nprefetch}
+        if locality_axis:
+            rep["locality_chunk"] = result.locality_chunk
+        params = self.loader.params.replace(**rep)
         self.loader.with_params(params)
         return params
 

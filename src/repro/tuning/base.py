@@ -48,38 +48,49 @@ class TrialRecorder:
 
     def seconds(self, nworker: int, nprefetch: int, *,
                 num_batches: Optional[int] = None,
-                record: bool = True) -> float:
+                record: bool = True,
+                locality_chunk: Optional[int] = None) -> float:
         """Measure one cell; ``math.inf`` on overflow.
 
         ``record=False`` measures without logging a Trial (used for the
         paper's default-parameter reference run, which is not part of the
-        sweep).
+        sweep).  ``locality_chunk`` is the beyond-paper third axis; it is
+        forwarded to the evaluator ONLY when set, so two-axis searches
+        keep working against evaluators that never heard of it.
         """
         nb = self.config.num_batches if num_batches is None else num_batches
+        kw = {} if locality_chunk is None \
+            else {"locality_chunk": locality_chunk}
+        chunk = locality_chunk or 0
         try:
             stats = self.evaluator(nworker, nprefetch, num_batches=nb,
-                                   epoch=self.config.epoch)
+                                   epoch=self.config.epoch, **kw)
         except MemoryOverflow:
             if record:
                 self.trials.append(Trial(nworker, nprefetch, math.inf,
-                                         overflowed=True))
+                                         overflowed=True,
+                                         locality_chunk=chunk))
             return math.inf
         if stats.overflowed:
             if record:
                 self.trials.append(Trial(nworker, nprefetch, math.inf,
-                                         overflowed=True))
+                                         overflowed=True,
+                                         locality_chunk=chunk))
             return math.inf
         if record:
             self.trials.append(Trial(
                 nworker, nprefetch, stats.seconds,
                 peak_bytes=stats.peak_loader_bytes,
-                batch_seconds=getattr(stats, "batch_seconds", None)))
+                batch_seconds=getattr(stats, "batch_seconds", None),
+                locality_chunk=chunk))
         return stats.seconds
 
     def result(self, nworker: int, nprefetch: int, optimal_time: float,
-               *, default_time: Optional[float] = None) -> DPTResult:
+               *, default_time: Optional[float] = None,
+               locality_chunk: int = 0) -> DPTResult:
         return DPTResult(nworker, nprefetch, optimal_time, self.trials,
-                         default_time=default_time)
+                         default_time=default_time,
+                         locality_chunk=locality_chunk)
 
 
 def worker_rungs(num_cpu_cores: int, num_devices: int) -> List[int]:

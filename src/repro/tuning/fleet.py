@@ -101,6 +101,11 @@ class HostReport:
     steps_per_s: float
     batch_seconds: List[float]
     params: Tuple[int, int]          # current (num_workers, prefetch_factor)
+    # IO-efficiency snapshot (DataLoader.io_counters: storage request
+    # counters, achieved coalesced run length, staging/arena hit rates) —
+    # lets retune decisions and dashboards see *locality*, not just rates.
+    # None when nothing in the host's pipeline keeps counters.
+    io: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -192,7 +197,8 @@ class HostAgent:
             stall_ratio=self.monitor.stall_ratio,
             steps_per_s=self.monitor.steps_per_s,
             batch_seconds=self.monitor.batch_seconds,
-            params=(p.num_workers, p.prefetch_factor))
+            params=(p.num_workers, p.prefetch_factor),
+            io=self.loader.io_counters() or None)
 
     def heartbeat(self) -> None:
         """Liveness without an observation (e.g. a serving frontend between

@@ -39,30 +39,40 @@ class GridSearch:
     is lines 14-17.  The optional default-parameter reference run
     reproduces the paper's comparison against PyTorch defaults and is not
     recorded as a sweep trial.
+
+    Beyond paper: when ``config.locality_chunks`` is set, the same sweep
+    repeats per candidate sampler chunk size — a third, outermost axis
+    (DESIGN.md §5).  Left unset (the default), the loop is exactly
+    Algorithm 1 and the evaluator never sees a locality kwarg.
     """
 
     def tune(self, rec: TrialRecorder, *,
              measure_default: bool = True) -> DPTResult:
         cfg = rec.config
         N, G = cfg.resolve()
-        n_worker, n_prefetch = 0, 0
+        chunks = cfg.locality_chunks if cfg.locality_chunks else (None,)
+        n_worker, n_prefetch, n_chunk = 0, 0, 0
         optimal_time = math.inf
-        for i in worker_rungs(N, G):                   # lines 4-5
-            j = cfg.min_prefetch                       # line 6
-            while j <= cfg.max_prefetch:               # line 7
-                t = rec.seconds(i, j)                  # lines 8, 12
-                if not math.isfinite(t):               # lines 9-10
-                    break
-                if t < optimal_time:                   # lines 14-17
-                    optimal_time = t
-                    n_worker, n_prefetch = i, j
-                j += 1                                 # line 19
+        for c in chunks:                               # beyond-paper axis
+            for i in worker_rungs(N, G):               # lines 4-5
+                j = cfg.min_prefetch                   # line 6
+                while j <= cfg.max_prefetch:           # line 7
+                    t = rec.seconds(i, j,              # lines 8, 12
+                                    locality_chunk=c)
+                    if not math.isfinite(t):           # lines 9-10
+                        break
+                    if t < optimal_time:               # lines 14-17
+                        optimal_time = t
+                        n_worker, n_prefetch = i, j
+                        n_chunk = c or 0
+                    j += 1                             # line 19
         default_time = None
         if measure_default:
             dw, dp = default_params(N)
             default_time = rec.seconds(dw, dp, record=False)
         return rec.result(n_worker, n_prefetch, optimal_time,
-                          default_time=default_time)
+                          default_time=default_time,
+                          locality_chunk=n_chunk)
 
 
 @register_strategy("successive_halving")

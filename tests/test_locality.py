@@ -1,0 +1,415 @@
+"""IO-locality fast path: chunked sampling coverage/quality, the DPT
+locality axis, the pinned staging-buffer pool, counter surfacing, and the
+FileStorage fork hygiene fix (DESIGN.md §5)."""
+import dataclasses
+import multiprocessing as mp
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cache import DPTCache
+from repro.core.dpt import DPTConfig, DPTResult, Trial
+from repro.core.evaluators import LoaderEvaluator, SimulatorEvaluator
+from repro.core.simulator import LoaderSimulator, MachineProfile
+from repro.data import (ArrayStorage, DataLoader, Dataset, FileStorage,
+                        LatencyStorage, LoaderParams, ShardedSampler,
+                        coco_profile, synthetic_image_dataset)
+from repro.data.dataset import image_transform
+from repro.data.prefetcher import DevicePrefetcher, StagingPool
+from repro.data.storage import coalesce_runs, storage_io_counters
+from repro.tuning import tune
+
+
+def _cold_dataset(n, *, latency_s=1e-3, cache_bytes=0):
+    rng = np.random.default_rng(0)
+    items = [rng.integers(0, 255, (8, 8, 3), dtype=np.uint8)
+             for _ in range(n)]
+    storage = LatencyStorage(ArrayStorage(items), latency_s=latency_s,
+                             bandwidth=1e9, cache_bytes=cache_bytes)
+    return Dataset(storage, transform=image_transform)
+
+
+# --------------------------------------------------------------------------
+# chunked orders are permutations: exact once-per-epoch coverage
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk", [0, 1, 3, 16, 64, 200, 777])
+def test_chunked_perm_is_permutation(chunk):
+    s = ShardedSampler(200, 20, seed=5, locality_chunk=chunk)
+    for epoch in (0, 1):
+        perm = s._epoch_perm(epoch)
+        assert sorted(perm.tolist()) == list(range(200))
+    # reseeded per epoch
+    if chunk != 200:   # a single chunk containing everything can collide
+        assert s._epoch_perm(0).tolist() != s._epoch_perm(1).tolist()
+
+
+@pytest.mark.parametrize("chunk", [0, 4, 16])
+@pytest.mark.parametrize("hosts", [1, 2, 4])
+def test_coverage_every_chunk_and_shard_count(chunk, hosts):
+    shards = [ShardedSampler(128, 16, seed=2, host_index=h, host_count=hosts,
+                             locality_chunk=chunk) for h in range(hosts)]
+    seen = []
+    for b in range(shards[0].batches_per_epoch()):
+        for s in shards:
+            seen.extend(s.local_indices(0, b).tolist())
+    assert sorted(seen) == list(range(128))
+
+
+def test_coverage_exact_across_midepoch_reshard_chunked():
+    """Old-shard slices before the barrier + new-shard slices after it must
+    cover the chunked epoch exactly (the PR 3 invariant, now under chunked
+    orders)."""
+    n, gb, barrier = 96, 12, 4
+    old = [ShardedSampler(n, gb, seed=7, host_index=h, host_count=2,
+                          locality_chunk=8) for h in range(2)]
+    seen = []
+    for b in range(barrier):
+        for s in old:
+            seen.extend(s.local_indices(0, b).tolist())
+    for h, s in enumerate(old):
+        s.reshard(3, h)
+    extra = ShardedSampler(n, gb, seed=7, host_index=2, host_count=3,
+                           locality_chunk=8)
+    new = old + [extra]
+    for b in range(barrier, new[0].batches_per_epoch()):
+        for s in new:
+            seen.extend(s.local_indices(0, b).tolist())
+    assert sorted(seen) == list(range(n))
+
+
+def test_chunked_batches_coalesce_into_runs():
+    # chunk == global batch, one host: every batch is one contiguous run
+    s = ShardedSampler(256, 32, seed=1, locality_chunk=32)
+    for b in range(s.batches_per_epoch()):
+        runs = coalesce_runs(s.local_indices(0, b))
+        assert len(runs) == 1 and runs[0][1] == 32
+    # random order: batches are essentially all singleton runs
+    r = ShardedSampler(256, 32, seed=1)
+    assert len(coalesce_runs(r.local_indices(0, 0))) > 24
+
+
+# --------------------------------------------------------------------------
+# shuffle quality: chunk order uniform, adjacency bounded
+# --------------------------------------------------------------------------
+def test_chunk_order_is_uniform():
+    """Each chunk should land in each chunk-slot equally often across
+    epochs (the chunk permutation is an unbiased rng.permutation)."""
+    n, chunk = 64, 16                       # 4 chunks
+    s = ShardedSampler(n, 16, seed=3, locality_chunk=chunk)
+    epochs = 400
+    counts = np.zeros((4, 4), int)          # chunk id x slot
+    for e in range(epochs):
+        perm = s._epoch_perm(e)
+        for slot in range(4):
+            counts[perm[slot * chunk] // chunk, slot] += 1
+    expected = epochs / 4
+    assert (np.abs(counts - expected) < 0.4 * expected).all(), counts
+
+
+def test_adjacent_pair_rate_bounded_by_chunk_ceiling():
+    from benchmarks.bench_locality import adjacent_pair_ceiling
+    n = 4096
+    for chunk in (16, 64, 256):
+        perm = ShardedSampler(n, 64, seed=0,
+                              locality_chunk=chunk)._epoch_perm(0)
+        rate = float(np.mean(perm[1:] == perm[:-1] + 1))
+        assert rate <= adjacent_pair_ceiling(chunk)
+        assert rate < 0.2                   # nowhere near sequential (1.0)
+
+
+# --------------------------------------------------------------------------
+# chunked epoch == random epoch, as a sample multiset
+# --------------------------------------------------------------------------
+def test_chunked_epoch_is_byte_identical_multiset():
+    ds = synthetic_image_dataset(128, 8, seed=0)
+
+    def digests(chunk):
+        dl = DataLoader(ds, 16, params=LoaderParams(locality_chunk=chunk),
+                        shuffle=True, seed=0)
+        out = []
+        for batch in dl.host_batches(epoch=0, num_batches=8):
+            out.extend(r.tobytes() for r in np.asarray(batch["image"]))
+        return sorted(out)
+
+    assert digests(0) == digests(32)
+
+
+# --------------------------------------------------------------------------
+# epoch-latched locality changes + live hot swap
+# --------------------------------------------------------------------------
+def test_set_locality_defers_to_next_epoch_midepoch():
+    s = ShardedSampler(64, 8, seed=1)
+    it = iter(s)
+    first = [next(it) for _ in range(3)]            # mid-epoch now
+    before = s._epoch_perm(0).copy()
+    s.set_locality(8)
+    assert s.chunk_for_epoch(0) == 0                # current epoch untouched
+    assert s.chunk_for_epoch(1) == 8
+    np.testing.assert_array_equal(s._epoch_perm(0), before)
+    # at an epoch boundary the change is immediate
+    s2 = ShardedSampler(64, 8, seed=1)
+    s2.set_locality(8)
+    assert s2.chunk_for_epoch(0) == 8
+    del first
+
+
+def test_hot_swap_locality_on_live_stream_zero_lost_dup():
+    ds = synthetic_image_dataset(96, 8, seed=0)
+    dl = DataLoader(ds, 16, params=LoaderParams(num_workers=2),
+                    shuffle=True, seed=0)
+    bpe = dl.sampler.batches_per_epoch()            # 6
+    stream = dl.stream(to_device=False)
+    seen = [next(stream) for _ in range(2)]         # mid-epoch 0
+    dl.apply_params(dl.params.replace(locality_chunk=16, num_workers=1))
+    # consume the rest of epoch 0 and all of epoch 1
+    seen += [next(stream) for _ in range(2 * bpe - 2)]
+    assert stream.swaps == 1
+    assert stream.position == 2 * bpe
+    assert dl.sampler.chunk_for_epoch(0) == 0       # epoch 0 kept its order
+    assert dl.sampler.chunk_for_epoch(1) == 16
+    # every epoch's delivered multiset is exact (no lost/dup batches)
+    rows = [r.tobytes() for b in seen[:bpe] for r in np.asarray(b["image"])]
+    rows2 = [r.tobytes() for b in seen[bpe:] for r in np.asarray(b["image"])]
+    ref = sorted(ds.get_batch(np.arange(96), fast=False)["image"]
+                 [i].tobytes() for i in range(96))
+    assert sorted(rows) == ref and sorted(rows2) == ref
+    stream.close()
+
+
+def test_locality_schedule_survives_checkpoint_roundtrip():
+    ds = synthetic_image_dataset(64, 8, seed=0)
+    dl = DataLoader(ds, 8, params=LoaderParams(), shuffle=True, seed=0)
+    it = iter(dl.sampler)
+    for _ in range(3):
+        next(it)
+    dl.apply_params(dl.params.replace(locality_chunk=8))  # deferred
+    state = dl.state_dict()
+
+    dl2 = DataLoader(ds, 8, params=LoaderParams(), shuffle=True, seed=0)
+    dl2.load_state_dict(state)
+    assert dl2.params.locality_chunk == 8
+    assert dl2.sampler.chunk_for_epoch(0) == 0      # deferral preserved
+    assert dl2.sampler.chunk_for_epoch(1) == 8
+    np.testing.assert_array_equal(dl2.sampler._epoch_perm(0),
+                                  dl.sampler._epoch_perm(0))
+
+
+# --------------------------------------------------------------------------
+# the DPT third axis
+# --------------------------------------------------------------------------
+def test_grid_without_locality_axis_never_passes_kwarg():
+    calls = []
+
+    def ev(i, j, *, num_batches, epoch):            # no locality kwarg
+        calls.append((i, j))
+        from repro.data.loader import TransferStats
+        return TransferStats(1.0 / (i + j), num_batches, 0)
+
+    res = tune(evaluator=ev, strategy="grid",
+               config=DPTConfig(num_cpu_cores=2, num_devices=1,
+                                max_prefetch=2, num_batches=4),
+               measure_default=False)
+    assert calls and res.locality_chunk == 0
+
+
+def test_grid_selects_chunked_on_cold_cache_real_loader():
+    ds = _cold_dataset(256)
+    dl = DataLoader(ds, 32, params=LoaderParams(fast_path=True),
+                    shuffle=True, seed=0)
+    cfg = DPTConfig(num_cpu_cores=2, num_devices=2, min_prefetch=1,
+                    max_prefetch=1, num_batches=6, epoch=0,
+                    locality_chunks=(0, 32))
+    res = tune(evaluator=LoaderEvaluator(dl, to_device=False),
+               strategy="grid", config=cfg, measure_default=False)
+    assert res.locality_chunk == 32
+    assert {t.locality_chunk for t in res.trials} == {0, 32}
+    # measurement-only override: the live schedule never saw the sweep
+    assert dl.sampler.chunk_for_epoch(0) == 0
+
+
+def test_grid_selects_chunked_on_cold_cache_simulator():
+    sim = LoaderSimulator(coco_profile(80), MachineProfile())
+    ev = SimulatorEvaluator(sim, batch_size=64)
+    cfg = DPTConfig(num_cpu_cores=4, num_devices=2, max_prefetch=2,
+                    num_batches=8, epoch=0, locality_chunks=(0, 64))
+    res = tune(evaluator=ev, strategy="grid", config=cfg,
+               measure_default=False)
+    assert res.locality_chunk == 64
+
+
+def test_simulator_locality_neutral_default_and_cold_win():
+    sim = LoaderSimulator(coco_profile(80), MachineProfile())
+    kw = dict(batch_size=64, num_batches=8, nworker=4, nprefetch=2)
+    base = sim.simulate(**kw)
+    assert sim.simulate(**kw, locality_chunk=0).seconds == base.seconds
+    assert sim.simulate(**kw, locality_chunk=1).seconds == base.seconds
+    assert sim.simulate(**kw, locality_chunk=64).seconds < base.seconds
+
+
+def test_dpt_cache_roundtrips_locality(tmp_path):
+    path = str(tmp_path / "cache.json")
+    cache = DPTCache(path)
+    res = DPTResult(4, 2, 1.0, [Trial(4, 2, 1.0, locality_chunk=64)],
+                    locality_chunk=64)
+    cache.put("m", "d", 32, res)
+    assert cache.get("m", "d", 32) == (4, 2)        # legacy shape intact
+    assert cache.get_params("m", "d", 32) == (4, 2, 64)
+    assert DPTCache(path).get_params(
+        "m", "d", 32, require_locality=True) == (4, 2, 64)
+    # an entry from a two-axis sweep must not satisfy a three-axis run
+    cache.put("m", "d2", 32, DPTResult(4, 2, 1.0, [Trial(4, 2, 1.0)]))
+    assert cache.get_params("m", "d2", 32) == (4, 2, 0)
+    assert cache.get_params("m", "d2", 32, require_locality=True) is None
+
+
+def test_trainer_locality_axis_ignored_on_sharded_fleet():
+    """Per-host tuned chunks would give hosts different permutations —
+    the startup tune must drop the axis when the sampler is sharded."""
+    from repro.train.trainer import Trainer, TrainerConfig
+    ds = synthetic_image_dataset(64, 8, seed=0)
+    dl = DataLoader(ds, 8, params=LoaderParams(), shuffle=True, seed=0,
+                    host_index=0, host_count=2)
+    cfg = TrainerConfig(autotune=True,
+                        autotune_locality_chunks=(0, 16),
+                        autotune_budget_batches=2, autotune_max_prefetch=1)
+    tr = Trainer.__new__(Trainer)          # tune_loader only needs these
+    tr.loader, tr.cfg = dl, cfg
+    params = tr.tune_loader(force=True)
+    assert params.locality_chunk == 0      # axis dropped, not searched
+
+
+# --------------------------------------------------------------------------
+# counters: TransferStats + the monitor report
+# --------------------------------------------------------------------------
+def test_transfer_stats_surface_locality_counters():
+    ds = _cold_dataset(128, latency_s=1e-5)
+    dl = DataLoader(ds, 16, params=LoaderParams(num_workers=0),
+                    shuffle=True, seed=0)
+    random_stats = dl.measure_transfer_time(4, epoch=0, to_device=False,
+                                            locality_chunk=0)
+    chunked_stats = dl.measure_transfer_time(4, epoch=1, to_device=False,
+                                             locality_chunk=16)
+    assert random_stats.coalesced_requests > 0
+    assert chunked_stats.coalesced_run_len > 4 * random_stats.coalesced_run_len
+    assert chunked_stats.coalesced_requests < random_stats.coalesced_requests
+
+
+def test_loader_io_counters_and_host_report():
+    from repro.tuning.fleet import HostAgent
+    ds = _cold_dataset(64, latency_s=1e-5)
+    dl = DataLoader(ds, 8, params=LoaderParams(num_workers=0,
+                                               locality_chunk=8),
+                    shuffle=True, seed=0)
+    dl.measure_transfer_time(4, epoch=0, to_device=False)
+    agent = HostAgent("h0", dl)
+    agent.observe(data_s=0.01, step_s=0.02)
+    rep = agent.report()
+    assert rep.io is not None
+    assert rep.io["coalesced_requests"] > 0
+    assert rep.io["coalesced_run_len"] > 1.0
+    # a plain (uncounted) storage reports no io block
+    ds2 = synthetic_image_dataset(32, 8, seed=0)
+    dl2 = DataLoader(ds2, 8, params=LoaderParams(), shuffle=True, seed=0)
+    assert HostAgent("h1", dl2).report().io is None
+
+
+# --------------------------------------------------------------------------
+# staging pool
+# --------------------------------------------------------------------------
+def test_staging_pool_acquire_release_retire_resize():
+    pool = StagingPool(2)
+    batch = {"x": np.zeros((4, 3), np.float32)}
+    a = pool.acquire(batch)
+    assert a["x"].shape == (4, 3) and pool.misses == 1
+    pool.release(a)
+    b = pool.acquire(batch)
+    assert b is a and pool.hits == 1                # ring reuse
+    pool.retire(b)
+    assert pool.retired == 1
+    c = pool.acquire(batch)
+    assert c is not b
+    # shape change drops the stale ring and re-establishes the spec
+    pool.release(c)
+    d = pool.acquire({"x": np.zeros((8, 3), np.float32)})
+    assert d["x"].shape == (8, 3) and pool._free == type(pool._free)()
+    pool.release(d)
+    pool.resize(0)                                  # clamped to 1
+    assert pool.capacity == 1
+
+
+def test_staged_transfer_private_and_ordered():
+    """With the staging pool on, zero-copy device batches must be immune
+    to slab recycling (the guarantee _ensure_private used to provide)."""
+    ds = synthetic_image_dataset(96, 8, seed=0)
+    dl = DataLoader(ds, 16, params=LoaderParams(
+        num_workers=2, zero_copy=True, staging_buffers=2),
+        shuffle=False, seed=0)
+    stream = dl.stream(to_device=True)
+    got = [next(stream) for _ in range(6)]          # one epoch
+    for b, dev in enumerate(got):                   # values still intact?
+        ref = ds.get_batch(dl.sampler.local_indices(0, b), fast=False)
+        np.testing.assert_array_equal(np.asarray(dev["image"]),
+                                      ref["image"])
+    assert stream._prefetcher.staging_hit_rate is not None
+    stream.close()
+
+
+def test_staging_disabled_falls_back_to_ensure_private():
+    ds = synthetic_image_dataset(48, 8, seed=0)
+    dl = DataLoader(ds, 16, params=LoaderParams(
+        num_workers=1, zero_copy=True, staging_buffers=0),
+        shuffle=False, seed=0)
+    stream = dl.stream(to_device=True)
+    got = [next(stream) for _ in range(3)]
+    assert stream._prefetcher.staging_hit_rate is None
+    for b, dev in enumerate(got):
+        ref = ds.get_batch(dl.sampler.local_indices(0, b), fast=False)
+        np.testing.assert_array_equal(np.asarray(dev["image"]),
+                                      ref["image"])
+    stream.close()
+
+
+def test_set_staging_hot_swaps_with_depth():
+    ds = synthetic_image_dataset(64, 8, seed=0)
+    dl = DataLoader(ds, 8, params=LoaderParams(num_workers=1,
+                                               zero_copy=True),
+                    shuffle=False, seed=0)
+    stream = dl.stream(to_device=True)
+    next(stream)
+    dl.apply_params(dl.params.replace(device_prefetch=3, staging_buffers=4))
+    for _ in range(6):
+        next(stream)
+    assert stream.swaps == 1
+    assert stream._prefetcher.depth == 3
+    assert stream._prefetcher._staging.capacity == 4
+    stream.close()
+
+
+# --------------------------------------------------------------------------
+# FileStorage fork hygiene
+# --------------------------------------------------------------------------
+@pytest.mark.skipif(not hasattr(os, "fork"), reason="fork-only")
+def test_filestorage_fork_drops_inherited_mmaps(tmp_path):
+    items = [np.arange(i, i + 6, dtype=np.int32) for i in range(4)]
+    fs = FileStorage.create(str(tmp_path / "fs"), items)
+    fs._mmap(0)
+    fs._mmap(1)
+    assert len(fs._mmaps) == 2
+    r, w = mp.Pipe(duplex=False)
+    pid = os.fork()
+    if pid == 0:                                    # child
+        ok = False
+        try:
+            inherited = len(fs._mmaps)              # should be reset to 0
+            data = fs.read_batch([0, 1, 2])         # lazily reopens
+            ok = (inherited == 0
+                  and np.array_equal(data[2], items[2]))
+        finally:
+            w.send(ok)
+            os._exit(0)
+    assert r.poll(10)
+    assert r.recv() is True
+    os.waitpid(pid, 0)
+    # parent cache untouched
+    assert len(fs._mmaps) == 2
