@@ -102,6 +102,51 @@ def adjacent_pair_ceiling(chunk: int) -> float:
     return 2.5 / max(2, chunk)
 
 
+# --------------------------------------------------------------------------
+# multi-host layout gate (DESIGN.md §6): host-major keeps whole chunks on
+# one host; the legacy strided layout dilutes per-host runs toward ~1
+# --------------------------------------------------------------------------
+MULTIHOST_CHUNK = 16       # <= local batch at every gated host count
+MULTIHOST_GATE = 0.5       # host-major per-host run length >= 0.5 * C
+
+
+def per_host_run_len(n: int, *, hosts: int, chunk: int,
+                     layout: str) -> float:
+    """Mean achieved per-host coalesced run length (items per storage
+    request) over one epoch, straight from the sampler's index streams —
+    the quantity LatencyStorage.achieved_run_len measures on real reads."""
+    from repro.data.storage import coalesce_runs
+    shards = [ShardedSampler(n, BATCH, seed=0, locality_chunk=chunk,
+                             host_index=h, host_count=hosts, layout=layout)
+              for h in range(hosts)]
+    requests = sum(len(coalesce_runs(s.local_indices(0, b)))
+                   for s in shards for b in range(n // BATCH))
+    return n / requests
+
+
+def multihost_rows(n: int):
+    """Gate rows: at H in {2, 4}, host-major keeps per-host run length
+    >= 0.5*C while the strided baseline collapses (< 0.5*C)."""
+    rows = []
+    for hosts in (2, 4):
+        major = per_host_run_len(n, hosts=hosts, chunk=MULTIHOST_CHUNK,
+                                 layout="host_major")
+        strided = per_host_run_len(n, hosts=hosts, chunk=MULTIHOST_CHUNK,
+                                   layout="strided")
+        floor = MULTIHOST_GATE * MULTIHOST_CHUNK
+        assert major >= floor, \
+            (f"host-major per-host run length {major:.2f} < {floor} "
+             f"at H={hosts} (C={MULTIHOST_CHUNK})")
+        assert strided < floor, \
+            (f"strided baseline unexpectedly kept locality at H={hosts}: "
+             f"{strided:.2f} >= {floor}")
+        rows.append({"hosts": hosts, "chunk": MULTIHOST_CHUNK,
+                     "host_major_run_len": round(major, 2),
+                     "strided_run_len": round(strided, 2),
+                     "required_min": floor, "passed": major >= floor})
+    return rows
+
+
 def run(quick: bool = False):
     n = 1024 if quick else 2048
     num_batches = n // BATCH
@@ -139,6 +184,9 @@ def run(quick: bool = False):
     assert pick.locality_chunk == CHUNK, \
         f"DPT grid picked locality {pick.locality_chunk}, expected {CHUNK}"
 
+    # --- multi-host layout gate (host-major vs strided, DESIGN.md §6) ------
+    mh_rows = multihost_rows(n)
+
     rows = [{"order": "random", "workers": 2, "prefetch": 2,
              "bps": round(best["random"], 1),
              "run_len": round(run_len["random"], 2)},
@@ -159,6 +207,10 @@ def run(quick: bool = False):
                  "dpt_pick": {"nworker": pick.nworker,
                               "nprefetch": pick.nprefetch,
                               "locality_chunk": pick.locality_chunk}},
+        "multihost": {"chunk": MULTIHOST_CHUNK,
+                      "required_run_len_min": MULTIHOST_GATE
+                      * MULTIHOST_CHUNK,
+                      "rows": mh_rows},
         "rows": rows,
         "host": {"platform": platform.platform(),
                  "python": sys.version.split()[0],

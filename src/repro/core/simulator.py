@@ -119,7 +119,8 @@ class LoaderSimulator:
                  nprefetch: int, epoch: int = 0, device_prefetch: int = 2,
                  device_ram: Optional[float] = None,
                  check_overflow: bool = True,
-                 locality_chunk: int = 0) -> SimResult:
+                 locality_chunk: int = 0, host_count: int = 1,
+                 layout: str = "host_major") -> SimResult:
         sp, mp = self.sp, self.mp
         K = max(1, nworker)
         j = max(1, nprefetch)
@@ -152,9 +153,18 @@ class LoaderSimulator:
         # — the measured effect of ShardedSampler's chunked orders, priced
         # here so DPT grids resolve the locality axis in virtual time.
         # 0/1 leaves the profile's own run length (neutral default).
+        # ``batch_size`` is this HOST's batch: under the host-major shard
+        # layout (DESIGN.md §6) per-host runs stay ~min(chunk, batch) at
+        # any host count.  The legacy strided layout gets NO chunking
+        # benefit at H > 1: every H-th element of a within-chunk-shuffled
+        # run is a near-random value, so strict-contiguity coalescing
+        # (coalesce_runs / achieved_run_len) collapses to ~1 — measured
+        # 1.2-1.7 at C=16, H in {2,4}, which the profile's own run
+        # length already bounds.
         run = max(1.0, sp.coalesced_run_len)
         if locality_chunk and locality_chunk > 1:
-            run = max(run, float(min(locality_chunk, batch_size)))
+            if layout != "strided" or max(1, host_count) == 1:
+                run = max(run, float(min(locality_chunk, batch_size)))
         lat_k = sp.io_latency_s * (1.0 + sp.seek_congestion * K)
         agg_bw = sp.storage_bw / (1.0 + mp.io_congestion
                                   * max(0, K - mp.io_streams))

@@ -133,7 +133,18 @@ class LoaderStream:
         self.reshards = 0
         bpe = loader.sampler.batches_per_epoch()
         self.position = loader.sampler.state.absolute(bpe)
+        # per-yield position log: makeup yields do not advance ``position``,
+        # so a consumer's absolute regular-batch position after its k-th
+        # consumed yield is position_after(k), NOT initial + k.  The fleet
+        # coordinator's makeup accounting for a dead host relies on this
+        # (counting observes as regular batches loses samples as soon as a
+        # host that consumed makeup dies).
+        self.yields = 0
+        self._initial_position = self.position
+        self._pos_log: deque = deque()
+        self._pos_log_base = 0           # yield index of _pos_log[0]
         self._pending: Optional[LoaderParams] = None
+        self._pending_locality_epoch: Optional[int] = None
         self._pending_reshard: Optional[Tuple[int, int, int]] = None
         self._pending_makeup: List[np.ndarray] = []  # held until the barrier
         self._makeup: deque = deque()        # index chunks awaiting delivery
@@ -141,6 +152,17 @@ class LoaderStream:
         # delivery preserves it): True = makeup chunk, whose yield must NOT
         # advance the regular-batch position
         self._pull_kinds: deque = deque()
+        # makeup chunks the current pool pulled but has not delivered yet:
+        # a reshard's discard boundary regenerates regular batches by
+        # rewinding the sampler, but pulled makeup exists nowhere else —
+        # it must be pushed back onto the queue or the samples are lost
+        self._inflight_makeup: deque = deque()
+        # makeup chunks tagged with the yield index that delivered them:
+        # yielded-into-a-prefetcher is not consumed, so a dead host's
+        # coordinator asks for makeup past its CONSUMED yield count
+        # (undelivered_makeup(consumed_yields=...)) — popping at yield
+        # time alone would lose prefetcher-buffered makeup with the host
+        self._yielded_makeup: deque = deque()   # (yield index, chunk)
         self._lock = threading.Lock()
         self._prefetcher: Optional[DevicePrefetcher] = None
         self._host_gen = self._host_stream()
@@ -164,10 +186,17 @@ class LoaderStream:
             self._prefetcher.close()
         self._host_gen.close()
 
-    def apply_params(self, params: LoaderParams) -> None:
-        """Request a hot swap; takes effect at the next batch boundary."""
+    def apply_params(self, params: LoaderParams, *,
+                     locality_epoch: Optional[int] = None) -> None:
+        """Request a hot swap; takes effect at the next batch boundary.
+
+        ``locality_epoch`` pins the epoch the new ``locality_chunk``
+        latches at (fleet-uniform pushes; see ``ShardedSampler
+        .set_locality``); None keeps the per-host natural latch.
+        """
         with self._lock:
             self._pending = params
+            self._pending_locality_epoch = locality_epoch
 
     def apply_reshard(self, num_shards: int, shard: int, *,
                       at_batch: Optional[int] = None,
@@ -194,6 +223,50 @@ class LoaderStream:
                 self._pending_makeup.extend(
                     np.asarray(m) for m in makeup if len(m))
             return boundary
+
+    def undelivered_makeup(self, consumed_yields: Optional[int] = None
+                           ) -> List[np.ndarray]:
+        """Makeup chunks accepted but not yet delivered (queued, pulled
+        in-flight, or parked behind a pending reshard).  A fleet
+        coordinator re-redistributes these when THIS host leaves — makeup
+        parked on a corpse is otherwise lost.
+
+        ``consumed_yields`` additionally recovers makeup the stream
+        *yielded* past that count — batches sitting in a device
+        prefetcher the dead host never consumed (None assumes every
+        yield was consumed, exact for undecorated host streams)."""
+        with self._lock:
+            out = (list(self._inflight_makeup) + list(self._makeup)
+                   + list(self._pending_makeup))
+            if consumed_yields is not None:
+                out = [c for y, c in self._yielded_makeup
+                       if y > consumed_yields] + out
+            return out
+
+    def position_after(self, consumed_yields: int) -> int:
+        """Absolute regular-batch position after this stream's first
+        ``consumed_yields`` yields (makeup yields do not advance it).
+
+        The log is pruned up to the queried point, so callers must query
+        with nondecreasing counts — a consumer tracking its own progress
+        does.  Queries past the log's tail return the current position.
+        """
+        if consumed_yields <= 0:
+            return self._initial_position
+        with self._lock:
+            while len(self._pos_log) > 1 \
+                    and self._pos_log_base < consumed_yields - 1:
+                self._pos_log.popleft()
+                self._pos_log_base += 1
+            if not self._pos_log:
+                return self._initial_position if self.yields == 0 \
+                    else self.position
+            idx = consumed_yields - 1 - self._pos_log_base
+            if idx < 0:                  # pruned past (capped log)
+                return self._pos_log[0]
+            if idx >= len(self._pos_log):  # consumer claims > yielded
+                return self._pos_log[-1]
+            return self._pos_log[idx]
 
     def add_makeup(self, makeup: Sequence[np.ndarray]) -> None:
         """Queue makeup index chunks for delivery.
@@ -222,6 +295,12 @@ class LoaderStream:
         with self._lock:
             num_shards, shard, _ = self._pending_reshard
             self._pending_reshard = None
+            # makeup the discarded pool pulled but never delivered goes
+            # back to the FRONT of the queue (it was next in line); the
+            # chunks are absolute sample indices, so they remain valid
+            # under the new shard map
+            self._makeup.extendleft(reversed(self._inflight_makeup))
+            self._inflight_makeup.clear()
             self._makeup.extend(self._pending_makeup)
             self._pending_makeup = []
             # pulled-but-undelivered flags belong to the discarded pool
@@ -245,9 +324,13 @@ class LoaderStream:
         advance) from a regular one at any interleaving."""
         sampler_it = iter(self.loader.sampler)
         while True:
-            if self._makeup:
-                idx = self._makeup.popleft()
-                self._pull_kinds.append(True)
+            with self._lock:             # pool pump thread vs. consumer /
+                idx = None               # coordinator readers
+                if self._makeup:
+                    idx = self._makeup.popleft()
+                    self._pull_kinds.append(True)
+                    self._inflight_makeup.append(idx)
+            if idx is not None:
                 yield idx
             else:
                 idx = next(sampler_it)
@@ -286,8 +369,24 @@ class LoaderStream:
                     # has advanced past it.  The pull-kind FIFO (ordered
                     # delivery preserves pull order) tells makeup batches —
                     # which never advance the position — from regular ones.
-                    if not (self._pull_kinds and self._pull_kinds.popleft()):
-                        self.position += 1
+                    # under the lock: with to_device=True this loop runs
+                    # on the prefetcher thread while consumed_position /
+                    # undelivered_makeup read the same structures from
+                    # the trainer or coordinator thread
+                    with self._lock:
+                        if self._pull_kinds and self._pull_kinds.popleft():
+                            chunk = self._inflight_makeup.popleft()
+                            self._yielded_makeup.append((self.yields + 1,
+                                                         chunk))
+                            if len(self._yielded_makeup) > 1024:
+                                self._yielded_makeup.popleft()
+                        else:
+                            self.position += 1
+                        self.yields += 1
+                        self._pos_log.append(self.position)
+                        if len(self._pos_log) > 65536:   # unconsulted cap
+                            self._pos_log.popleft()
+                            self._pos_log_base += 1
                     yield batch
             finally:
                 # normal end (drain swap / reshard discard) or the stream
@@ -297,14 +396,18 @@ class LoaderStream:
                 pool.shutdown()
             with self._lock:
                 params, self._pending = self._pending, None
+                latch, self._pending_locality_epoch = \
+                    self._pending_locality_epoch, None
             if params is not None:
                 # re-assert the pending params at the boundary: trial
                 # measurements may have mutated loader.params via
                 # with_params between the request and this drain
                 self.loader.params = params
                 # locality latches at the next epoch boundary — an
-                # in-progress epoch keeps its permutation (coverage)
-                self.loader.sampler.set_locality(params.locality_chunk)
+                # in-progress epoch keeps its permutation (coverage);
+                # a fleet push pins one common latch epoch instead
+                self.loader.sampler.set_locality(params.locality_chunk,
+                                                 epoch=latch)
                 self.swaps += 1
                 if self._prefetcher is not None:
                     self._prefetcher.set_depth(params.device_prefetch)
@@ -366,7 +469,8 @@ class DataLoader:
         self.sampler.set_locality(params.locality_chunk)
         return self
 
-    def apply_params(self, params: LoaderParams) -> LoaderParams:
+    def apply_params(self, params: LoaderParams, *,
+                     locality_epoch: Optional[int] = None) -> LoaderParams:
         """Hot-swap tuned parameters in.
 
         ``self.params`` is set immediately (any future pool — a new
@@ -374,15 +478,36 @@ class DataLoader:
         the current stream was abandoned mid-iteration), and the latest
         live ``stream()`` is asked to swap at its next batch boundary
         (pool drained, sampler position preserved, no batch lost or
-        duplicated).
+        duplicated).  ``locality_epoch`` pins the epoch a changed
+        ``locality_chunk`` latches at (fleet-uniform pushes must land on
+        one common epoch across hosts; see ``locality_latch_epoch``).
         """
         self.params = params
         if self._live_stream is not None:
             # sampler locality syncs when the stream commits the swap
-            self._live_stream.apply_params(params)
+            self._live_stream.apply_params(params,
+                                           locality_epoch=locality_epoch)
         else:
-            self.sampler.set_locality(params.locality_chunk)
+            self.sampler.set_locality(params.locality_chunk,
+                                      epoch=locality_epoch)
         return params
+
+    def locality_latch_epoch(self) -> int:
+        """The earliest epoch a locality change pushed NOW is guaranteed
+        to be latchable at, accounting for producer run-ahead.
+
+        The sampler's producer cursor advances ahead of delivery by at
+        most the pipeline's in-flight capacity (worker queues + device
+        prefetch) before a pending swap pins it, so a chunk pinned to
+        this epoch can always be honoured exactly — the per-host clamp
+        in ``set_locality`` never has to move it.  A fleet coordinator
+        takes the max over hosts and pushes that one epoch everywhere.
+        """
+        p = self.params
+        inflight = p.num_workers * p.prefetch_factor + p.device_prefetch + 1
+        bpe = self.sampler.batches_per_epoch()
+        pos = self.sampler.state.absolute(bpe) + inflight
+        return -(-pos // bpe)
 
     def reshard(self, num_shards: int, shard: int, *,
                 at_batch: Optional[int] = None,
@@ -413,6 +538,15 @@ class DataLoader:
             raise ValueError("makeup delivery needs a live stream; "
                              "start one with stream() first")
         self._live_stream.add_makeup(makeup)
+
+    def undelivered_makeup(self, consumed_yields: Optional[int] = None
+                           ) -> List[np.ndarray]:
+        """Makeup chunks the live stream has accepted but not delivered
+        (empty without a stream; see ``LoaderStream.undelivered_makeup``
+        for ``consumed_yields``)."""
+        if self._live_stream is None:
+            return []
+        return self._live_stream.undelivered_makeup(consumed_yields)
 
     # ---- iteration ----------------------------------------------------------
     def _arena(self, *, for_stream: bool) -> Optional[SlabArena]:

@@ -16,7 +16,19 @@ cold epochs.  Coverage is untouched: a chunked order is still exactly a
 permutation of [0, N), so once-per-epoch delivery — including under
 mid-epoch ``reshard`` — holds unconditionally.  Locality changes are
 epoch-latched (``set_locality``): an in-progress epoch keeps its order, so
-a live hot swap can never split one epoch across two permutations.
+a live hot swap can never split one epoch across two permutations.  A
+coordinated fleet pins the latch epoch explicitly (``set_locality(chunk,
+epoch=E)``) so every host adopts the new chunk for the SAME epoch even
+when their producers straddle an epoch boundary.
+
+Host layout (DESIGN.md §6): hosts take *contiguous* slices of each global
+batch (``host_major``, the default) rather than strided ones.  Any
+deterministic partition of the global batch preserves the coverage
+invariant (the union over hosts is the batch either way), but striding
+dilutes locality — each host gets every H-th element, shrinking per-host
+coalesced runs toward C/H — while host-major slices keep whole chunks on
+one host at any host count.  ``layout="strided"`` keeps the legacy
+behavior for A/B measurement (bench_locality's multi-host gate).
 """
 from __future__ import annotations
 
@@ -62,7 +74,9 @@ class ShardedSampler:
                  shuffle: bool = True, seed: int = 0, drop_last: bool = True,
                  host_index: int = 0, host_count: int = 1,
                  state: Optional[SamplerState] = None,
-                 locality_chunk: int = 0):
+                 locality_chunk: int = 0, layout: str = "host_major"):
+        if layout not in ("host_major", "strided"):
+            raise ValueError(f"unknown shard layout {layout!r}")
         if global_batch % host_count:
             raise ValueError(
                 f"global_batch {global_batch} not divisible by host_count "
@@ -76,6 +90,7 @@ class ShardedSampler:
         self.host_index = host_index
         self.host_count = host_count
         self.state = state or SamplerState()
+        self.layout = layout
         self.locality_chunk = max(0, int(locality_chunk))
         # (first_epoch, chunk) steps; the chunk for epoch e is the last
         # entry with first_epoch <= e — how set_locality defers a change
@@ -99,22 +114,37 @@ class ShardedSampler:
             chunk = c
         return chunk
 
-    def set_locality(self, chunk: int) -> None:
+    def natural_latch_epoch(self) -> int:
+        """The first epoch a locality change could take effect for: the
+        current epoch if it has not produced a batch yet, else the next."""
+        return self.state.epoch + (1 if self.state.batch_offset else 0)
+
+    def set_locality(self, chunk: int, *, epoch: Optional[int] = None) -> int:
         """Change the chunked-shuffle granularity (0/1 = fully random).
 
         Epoch-latched: takes effect for the current epoch only if it has
         not delivered a batch yet, otherwise from the next epoch — an
         in-progress epoch keeps its permutation, so coverage stays exact
-        across a live hot swap.
+        across a live hot swap.  ``epoch`` pins the latch explicitly (a
+        fleet coordinator pushes one common epoch to every host so the
+        whole fleet adopts the new chunk for the SAME epoch); it is
+        clamped up to this sampler's natural latch epoch, never down —
+        an epoch that already produced batches keeps its order.  Returns
+        the effective first epoch of the new chunk.
         """
         chunk = max(0, int(chunk))
-        if chunk == self.locality_chunk:
-            return
-        eff = self.state.epoch + (1 if self.state.batch_offset else 0)
+        eff = self.natural_latch_epoch()
+        if epoch is not None:
+            eff = max(eff, int(epoch))
+        elif chunk == self.locality_chunk:
+            return eff
         self.locality_chunk = chunk
+        # epochs >= eff follow the new chunk; earlier epochs keep whatever
+        # was scheduled (they may already have produced batches)
         self._locality_schedule = [
             (e, c) for e, c in self._locality_schedule if e < eff]
         self._locality_schedule.append((eff, chunk))
+        return eff
 
     def force_locality(self, chunk: int) -> None:
         """Reset the schedule to ``chunk`` for every epoch (restore path)."""
@@ -177,7 +207,13 @@ class ShardedSampler:
         glob = perm[start:start + self.global_batch]
         if len(glob) < self.global_batch and not self.drop_last:
             glob = np.concatenate([glob, perm[:self.global_batch - len(glob)]])
-        return glob[self.host_index::self.host_count]
+        if self.layout == "strided":
+            return glob[self.host_index::self.host_count]
+        # host-major: contiguous slice — whole chunks of a chunked perm
+        # stay on one host (strided slices dilute runs toward C/H).  Both
+        # layouts partition the global batch, so coverage is identical.
+        lb = self.global_batch // self.host_count
+        return glob[self.host_index * lb:(self.host_index + 1) * lb]
 
     def __iter__(self) -> Iterator[np.ndarray]:
         while True:

@@ -202,11 +202,17 @@ class BatchingFrontend:
 
     def __init__(self, engine: ServeEngine, *, max_wait_s: float = 0.01,
                  mix_monitor: Optional[BatchMixMonitor] = None,
-                 agent=None):
+                 agent=None, locality_controller=None):
         self.engine = engine
         self.max_wait_s = max_wait_s
         self.mix_monitor = mix_monitor
         self.agent = agent
+        # the online locality loop's counter-driven side (DESIGN.md §6):
+        # a repro.tuning.AdaptiveLocalityController built over the feature
+        # loader; stepped once per served batch inside the same guarded
+        # block as observe/record (a resize proposal must never kill the
+        # serving thread)
+        self.locality_controller = locality_controller
         self._queue: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -261,6 +267,8 @@ class BatchingFrontend:
                                            step_s=t_form + t_gen)
                     if self.mix_monitor is not None:
                         self.mix_monitor.record((plen, max_new))
+                    if self.locality_controller is not None:
+                        self.locality_controller.step()
                 except Exception:  # noqa: BLE001 - observe/retune must not
                     import traceback  # kill the serving thread
                     traceback.print_exc()

@@ -64,6 +64,15 @@ class TrainerConfig:
     # must slice the SAME epoch permutation, so locality can only change
     # uniformly via the coordinator, never from a per-host tune).
     autotune_locality_chunks: Optional[tuple] = None
+    # the online locality loop (DESIGN.md §6): when True, an
+    # AdaptiveLocalityController watches the live coalesced-run-length
+    # counters and shrinks locality_chunk when the storage stops
+    # achieving it (cache warmed, topology changed) — no search, applied
+    # as an epoch-latched hot swap.  On a fleet the proposal routes to
+    # the coordinator instead (locality must change uniformly).  The
+    # single-host OnlineTuner also sweeps autotune_locality_chunks at
+    # retune time, so the knob can climb back UP when storage slows.
+    adaptive_locality: bool = False
     retune_stall_fraction: float = 0.5   # data-wait/compute drift trigger
     retune_window: int = 8
     retune_cooldown_steps: int = 16
@@ -95,6 +104,7 @@ class Trainer:
         self.state: Optional[TrainState] = None
         self.start_step = 0
         self.online_tuner: Optional[OnlineTuner] = None
+        self.locality_controller = None
         self.history: List[Dict[str, Any]] = []
 
     # ---- DPT integration ----------------------------------------------------
@@ -163,6 +173,11 @@ class Trainer:
         return params
 
     def _make_online_tuner(self) -> OnlineTuner:
+        # the online locality axis follows the startup grid's candidate
+        # set; single-host only (fleet mode never builds a local tuner,
+        # and a sharded loader must change locality via the coordinator)
+        chunks = self.cfg.autotune_locality_chunks \
+            if self.loader.sampler.host_count == 1 else None
         return OnlineTuner(
             self.loader,
             evaluator=LoaderEvaluator(self.loader, to_device=True),
@@ -172,7 +187,28 @@ class Trainer:
                 window=self.cfg.retune_window,
                 cooldown_steps=self.cfg.retune_cooldown_steps,
                 retune_budget_batches=self.cfg.autotune_budget_batches,
-                max_prefetch=self.cfg.autotune_max_prefetch))
+                max_prefetch=self.cfg.autotune_max_prefetch,
+                locality_chunks=(tuple(chunks) if chunks else None)))
+
+    def _make_locality_controller(self):
+        """The counter-driven side of the online locality loop: applies
+        locally on a single host; on a fleet, a proposal only *signals*
+        the coordinator (locality must change uniformly there).  A
+        sharded loader WITHOUT an agent gets no controller at all — a
+        local resize would hand this host a different epoch permutation
+        than its peers (same guard as the startup tune's locality axis).
+        """
+        from repro.tuning import AdaptiveLocalityController
+        if self.agent is None and self.loader.sampler.host_count > 1:
+            return None
+        on_propose = None
+        if self.agent is not None:
+            # the coordinator drops the request when the fleet searches
+            # no locality axis (a search that can't touch the knob would
+            # burn goodput on every repeated proposal)
+            on_propose = self.agent.notify_locality
+        return AdaptiveLocalityController(self.loader,
+                                          on_propose=on_propose)
 
     # ---- checkpoint/restart ---------------------------------------------------
     def _maybe_restore(self) -> None:
@@ -234,6 +270,8 @@ class Trainer:
             self.tune_loader()
             if self.agent is None:
                 self.online_tuner = self._make_online_tuner()
+        if cfg.adaptive_locality:
+            self.locality_controller = self._make_locality_controller()
 
         step = self.start_step
         batches = self._rebuild_stream(step)
@@ -262,6 +300,8 @@ class Trainer:
                 self.agent.observe(data_s=t_data, step_s=dt)
             elif self.online_tuner is not None:
                 self.online_tuner.observe(data_s=t_data, step_s=dt)
+            if self.locality_controller is not None:
+                self.locality_controller.step()
 
             if step % cfg.log_every == 0 or step == cfg.total_steps:
                 rec = {"step": step,

@@ -35,6 +35,12 @@ from repro.tuning.strategies import (  # noqa: F401
     WarmstartHillClimb,
     cost_model_warmstart,
 )
+from repro.tuning.locality import (  # noqa: F401
+    AdaptiveLocalityConfig,
+    AdaptiveLocalityController,
+    locality_win,
+    sweep_locality,
+)
 from repro.tuning.online import (  # noqa: F401
     GoodputMonitor,
     OnlineTuner,

@@ -148,6 +148,16 @@ def t_critical(df: float) -> float:
     return 1.658
 
 
+def steady_samples(samples: Optional[Sequence[float]]) -> List[float]:
+    """Drop a measurement's pipeline-fill prefix (pool spin-up + first
+    reads): the adaptive budget reserves ~1/3 of the batches for fill,
+    and leaving it in inflates variance on both sides of a Welch test,
+    gutting its power.  Shared by every win test that feeds welch_wins."""
+    if not samples:
+        return []
+    return list(samples[len(samples) // 3:])
+
+
 def welch_wins(current: Sequence[float], candidate: Sequence[float]) -> bool:
     """Variance-aware win test: is the candidate's mean per-batch time
     significantly lower than the current config's?

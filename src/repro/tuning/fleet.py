@@ -124,6 +124,13 @@ class FleetConfig:
     max_prefetch: int = 4
     num_cpu_cores: Optional[int] = None
     num_devices: Optional[int] = None
+    # online locality axis (DESIGN.md §6): candidate sampler chunk sizes a
+    # re-consensus may propose.  Locality can only change UNIFORMLY on a
+    # sharded fleet (every host must slice the same epoch permutation), so
+    # the sweep scores candidates by the fleet max and the push pins one
+    # common latch epoch on every host.  None keeps re-consensus on
+    # (workers, prefetch).
+    locality_chunks: Optional[Tuple[int, ...]] = None
     # elastic re-mesh bookkeeping (plan_remesh)
     devices_per_host: int = 1
     model_axis: int = 1
@@ -161,21 +168,39 @@ class HostAgent:
         bpe = loader.sampler.batches_per_epoch()
         self._base = loader.sampler.state.absolute(bpe)
         self.steps = 0
+        # which live stream the consumed-step count refers to: makeup
+        # yields do not advance the regular-batch position, so the count
+        # must be mapped through the stream's per-yield position log
+        # rather than added to a base (see LoaderStream.position_after)
+        self._consume_stream = None
+        self._bind_steps = 0
 
     # ---- observe -----------------------------------------------------------
     def observe(self, *, data_s: float, step_s: float) -> None:
         self.monitor.observe(data_s=data_s, step_s=step_s)
         self.steps += 1
+        if self.consumes_stream:
+            stream = self.loader._live_stream
+            if stream is not None and stream is not self._consume_stream:
+                # first observe against a (re)built stream: the batch just
+                # consumed was that stream's first consumed yield
+                self._consume_stream = stream
+                self._bind_steps = self.steps - 1
         if self.coordinator is not None \
                 and self.steps % self.report_every == 0:
             self.coordinator.ingest(self.report())
 
     def consumed_position(self) -> int:
-        """Absolute global-batch position the CONSUMER reached (one batch
-        per observed step for a training loop; the stream cursor when the
-        observer does not consume the stream batch-per-step)."""
+        """Absolute global-batch position the CONSUMER reached (one stream
+        yield per observed step for a training loop — mapped through the
+        stream's position log because makeup yields do not advance the
+        position; the stream cursor when the observer does not consume
+        the stream batch-per-step)."""
         if not self.consumes_stream:
             return self.stream_position()
+        stream = self._consume_stream
+        if stream is not None and stream is self.loader._live_stream:
+            return stream.position_after(self.steps - self._bind_steps)
         return self._base + self.steps
 
     def stream_position(self) -> int:
@@ -212,10 +237,26 @@ class HostAgent:
         if self.coordinator is not None:
             self.coordinator.request_consensus(reason=reason)
 
+    def notify_locality(self, chunk: int) -> None:
+        """Adaptive-controller proposal (run-length collapse): locality
+        may only change uniformly, so route it to the coordinator, which
+        drops it when the fleet searches no locality axis."""
+        if self.coordinator is not None:
+            self.coordinator.request_locality(chunk, host=self.host)
+
     # ---- act (coordinator-driven) ------------------------------------------
-    def apply_params(self, nworker: int, nprefetch: int) -> LoaderParams:
-        return self.loader.apply_params(self.loader.params.replace(
-            num_workers=nworker, prefetch_factor=nprefetch))
+    def apply_params(self, nworker: int, nprefetch: int,
+                     locality_chunk: Optional[int] = None, *,
+                     locality_epoch: Optional[int] = None) -> LoaderParams:
+        """Push tuned params into the live loader.  ``locality_chunk`` is
+        only ever set by a fleet-uniform push, which also pins the common
+        ``locality_epoch`` every host latches the new chunk at."""
+        params = self.loader.params.replace(
+            num_workers=nworker, prefetch_factor=nprefetch)
+        if locality_chunk is not None:
+            params = params.replace(locality_chunk=locality_chunk)
+        return self.loader.apply_params(params,
+                                        locality_epoch=locality_epoch)
 
     def reshard(self, num_shards: int, shard: int, *,
                 at_batch: Optional[int] = None,
@@ -225,6 +266,17 @@ class HostAgent:
 
     def add_makeup(self, makeup: Sequence[np.ndarray]) -> None:
         self.loader.add_makeup(makeup)
+
+    def undelivered_makeup(self) -> List[np.ndarray]:
+        """Makeup this host accepted but never CONSUMED — including
+        batches its device prefetcher held at death (the stream's
+        yield-side accounting alone would count those as delivered)."""
+        stream = self._consume_stream
+        if self.consumes_stream and stream is not None \
+                and stream is self.loader._live_stream:
+            return stream.undelivered_makeup(
+                consumed_yields=self.steps - self._bind_steps)
+        return self.loader.undelivered_makeup()
 
     def align_to(self, position: int) -> None:
         """Point a FRESH loader (no live stream yet) at an absolute
@@ -236,6 +288,8 @@ class HostAgent:
             position, sampler.batches_per_epoch())
         self._base = position
         self.steps = 0
+        self._consume_stream = None
+        self._bind_steps = 0
 
 
 # --------------------------------------------------------------------------
@@ -301,6 +355,18 @@ class FleetCoordinator:
         new_count = len(incumbents) + 1
         barrier = self._negotiate_barrier(incumbents, new_count, 0)
         agent.align_to(barrier)
+        if incumbents:
+            # locality is runtime-mutable now: the joiner's construction-
+            # time chunk can be stale, and a host slicing a different
+            # epoch permutation than its peers silently loses/duplicates
+            # samples.  Copy an incumbent's full (epoch -> chunk)
+            # schedule — including any pending latch — before the stream
+            # starts.
+            src = incumbents[0].loader
+            agent.loader.sampler.load_locality(
+                src.sampler.locality_state())
+            agent.loader.params = agent.loader.params.replace(
+                locality_chunk=src.params.locality_chunk)
         agent.loader.reshard(new_count, new_count - 1)
         self.register(agent)
         self.reshards += 1
@@ -333,6 +399,18 @@ class FleetCoordinator:
         """Out-of-band drift signal (serving batch-mix, operator): run a
         re-consensus at the next ``poll`` regardless of cooldown."""
         self._forced_reason = reason
+
+    def request_locality(self, chunk: int, *, host: str = "?") -> None:
+        """A host's adaptive locality controller observed a run-length
+        collapse.  Locality can only change uniformly, so this requests a
+        locality re-consensus — and is DROPPED when the fleet searches no
+        locality axis (``FleetConfig.locality_chunks`` unset): a forced
+        search that cannot touch the knob would just burn goodput on
+        every repeated proposal."""
+        if not self.cfg.locality_chunks:
+            return
+        self.request_consensus(
+            reason=f"locality-run-len-collapse:{host}->{int(chunk)}")
 
     # ---- decide ------------------------------------------------------------
     @property
@@ -413,27 +491,97 @@ class FleetCoordinator:
                 a.loader.with_params(orig)
         self.consensus_runs += 1
         won = self._is_fleet_win(fleet, agents)
-        self._backoff = 1 if won else min(self.cfg.max_backoff,
-                                          self._backoff * 2)
+        # the online locality axis: sweep chunk candidates at the cell the
+        # fleet will actually run (the winner if it won, else the current
+        # majority cell), scored by the fleet max
+        cell = fleet.uniform_params if won \
+            else self._majority_cell(agents)
+        chunk_win = self._locality_consensus(agents, cell)
+        applied = won or chunk_win is not None
+        self._backoff = 1 if applied else min(self.cfg.max_backoff,
+                                              self._backoff * 2)
         event = {"kind": "consensus", "reason": reason,
                  "params": fleet.uniform_params,
                  "fleet_time": fleet.fleet_time, "hosts": hosts,
-                 "applied": won}
+                 # "applied" = anything changed; "cell_applied" = the
+                 # uniform (workers, prefetch) winner itself rolled out
+                 # (False for a locality-only apply: hosts keep their
+                 # current cells and only the chunk changes)
+                 "cell_applied": won,
+                 "locality_chunk": chunk_win,
+                 "applied": applied}
         self.events.append(event)
-        if won:
+        if applied:
+            # one common latch epoch: every host adopts the new chunk for
+            # the SAME epoch even when producers straddle a boundary
+            latch = max(a.loader.locality_latch_epoch()
+                        for a in agents) if chunk_win is not None else None
             for a in agents:
-                a.apply_params(*fleet.uniform_params)
+                nw, npf = fleet.uniform_params if won else (
+                    a.loader.params.num_workers,
+                    a.loader.params.prefetch_factor)
+                a.apply_params(nw, npf, locality_chunk=chunk_win,
+                               locality_epoch=latch)
         return event
+
+    @staticmethod
+    def _current_cells(agents: Sequence[HostAgent]
+                       ) -> Dict[Tuple[int, int], int]:
+        counts: Dict[Tuple[int, int], int] = {}
+        for a in agents:
+            p = a.loader.params
+            key = (p.num_workers, p.prefetch_factor)
+            counts[key] = counts.get(key, 0) + 1
+        return counts
+
+    @classmethod
+    def _majority_cell(cls, agents: Sequence[HostAgent]) -> Tuple[int, int]:
+        counts = cls._current_cells(agents)
+        return max(counts, key=counts.get)
+
+    def _locality_consensus(self, agents: Sequence[HostAgent],
+                            cell: Tuple[int, int]) -> Optional[int]:
+        """Uniform locality decision: per-host chunk sweeps at ``cell``,
+        aggregated by the fleet max; the winner must beat the current
+        chunk's own fleet time by ``min_improvement`` and be feasible on
+        every host.  Returns the winning chunk or None (keep)."""
+        if not self.cfg.locality_chunks:
+            return None
+        from repro.tuning.locality import sweep_locality
+        cfg = self._search_config()
+        cur = agents[0].loader.params.locality_chunk
+        originals = [a.loader.params for a in agents]
+        try:
+            per_host = [sweep_locality(
+                a.evaluator, nworker=cell[0], nprefetch=cell[1],
+                chunks=self.cfg.locality_chunks, current_chunk=cur,
+                num_batches=cfg.num_batches) for a in agents]
+        finally:
+            for a, orig in zip(agents, originals):
+                a.loader.with_params(orig)
+        fleet_time: Dict[int, float] = {}
+        for trials in per_host:
+            for chunk, t in trials.items():
+                fleet_time[chunk] = max(fleet_time.get(chunk, 0.0),
+                                        t.seconds)
+        feasible = {c: s for c, s in fleet_time.items()
+                    if math.isfinite(s)}
+        if not feasible:
+            return None
+        best = min(feasible, key=feasible.get)
+        if best == cur:
+            return None
+        if cur not in feasible:
+            return best                   # current chunk infeasible somewhere
+        if feasible[best] <= (1.0 - self.cfg.min_improvement) * feasible[cur]:
+            return best
+        return None
 
     def _is_fleet_win(self, fleet, agents: Sequence[HostAgent]) -> bool:
         """Anti-churn at fleet scope: the uniform winner must differ from
         the current (majority) config and beat that config's own measured
         fleet time by ``min_improvement``."""
-        current: Dict[Tuple[int, int], int] = {}
-        for a in agents:
-            p = a.loader.params
-            key = (p.num_workers, p.prefetch_factor)
-            current[key] = current.get(key, 0) + 1
+        current = self._current_cells(agents)
         cur_cell = max(current, key=current.get)
         if fleet.uniform_params == cur_cell and len(current) == 1:
             return False
@@ -484,7 +632,9 @@ class FleetCoordinator:
             old_global_batch=departed[0].loader.sampler.global_batch,
             restore_step=barrier)
         # makeup: every departed host's undelivered slices up to the
-        # settled barrier, re-chunked to the NEW local batch size (so the
+        # settled barrier, PLUS any makeup chunks a previous reshard dealt
+        # to it that it never delivered (makeup parked on a corpse is
+        # otherwise lost), re-chunked to the NEW local batch size (so the
         # chunks share the regular batch shape and can use the re-specced
         # arena; at most one ragged tail chunk bypasses it) and dealt
         # round-robin over survivors
@@ -496,6 +646,9 @@ class FleetCoordinator:
             for b in range(consumed[d.host], barrier):
                 missing.append(sampler.local_indices(b // bpe, b % bpe))
                 makeup_batches += 1
+            inherited = d.undelivered_makeup()
+            missing.extend(inherited)
+            makeup_batches += len(inherited)
         if missing:
             flat = np.concatenate(missing)
             new_local = survivors[0].loader.sampler.global_batch // new_count

@@ -41,7 +41,8 @@ from repro.core.cache import DPTCache
 from repro.core.dpt import DPTConfig, DPTResult, Trial
 from repro.core.monitor import MemoryOverflow
 from repro.data.loader import DataLoader, LoaderParams
-from repro.tuning.base import adaptive_budget, tune, welch_wins
+from repro.tuning.base import (adaptive_budget, steady_samples, tune,
+                               welch_wins)
 from repro.utils.fingerprint import machine_fingerprint
 
 
@@ -64,6 +65,12 @@ class OnlineTunerConfig:
     max_backoff: int = 8             # cooldown multiplier cap on no-win
     num_cpu_cores: Optional[int] = None   # override DPTConfig.resolve()
     num_devices: Optional[int] = None
+    # online locality axis (DESIGN.md §6): candidate sampler chunk sizes a
+    # retune may propose.  None keeps retunes on (workers, prefetch) — the
+    # startup grid owns the knob.  When set, each retune prices the
+    # candidates at the winning cell through the measurement-only override
+    # and a significant winner rides the same hot swap (epoch-latched).
+    locality_chunks: Optional[Tuple[int, ...]] = None
 
 
 class GoodputMonitor:
@@ -180,22 +187,14 @@ class RetunePolicy:
             return True                      # nothing measured to defend
         winner = next((t for t in result.trials
                        if (t.nworker, t.nprefetch) == win_cell), None)
-        # drop each cell's pipeline-fill prefix (pool spin-up + first
-        # reads): the adaptive budget reserves ~1/3 of the measurements
-        # for fill, and leaving it in inflates variance on both sides,
-        # gutting the test's power
-        ref_samples = self._steady(ref.batch_seconds)
-        win_samples = self._steady(winner.batch_seconds) if winner else []
+        # drop each cell's pipeline-fill prefix before the Welch test
+        # (see tuning.base.steady_samples)
+        ref_samples = steady_samples(ref.batch_seconds)
+        win_samples = steady_samples(winner.batch_seconds) if winner else []
         if len(ref_samples) >= 2 and len(win_samples) >= 2:
             return welch_wins(ref_samples, win_samples)
         return result.optimal_time \
             <= (1.0 - self.cfg.min_improvement) * ref.seconds
-
-    @staticmethod
-    def _steady(samples) -> List[float]:
-        if not samples:
-            return []
-        return list(samples[len(samples) // 3:])
 
 
 class RetuneExecutor:
@@ -242,14 +241,73 @@ class RetuneExecutor:
         finally:
             self.loader.with_params(orig)
 
-    def apply(self, result: DPTResult) -> LoaderParams:
-        """Hot-swap the winner into the live stream and persist it."""
-        params = self.loader.params.replace(num_workers=result.nworker,
-                                            prefetch_factor=result.nprefetch)
+    def sweep_locality(self, nworker: int, nprefetch: int
+                       ) -> Tuple[Optional[int], List[Trial]]:
+        """Price the configured chunk candidates at one cell.
+
+        Returns ``(winner, trials)``: the significant winning chunk (None
+        = keep the current one) plus the sweep's trials, so the caller
+        can fold them into the retune's DPTResult (the cache reads them
+        to tell a searched axis from a blind one).  Trials run through
+        the measurement-only override, so the live epoch schedule is
+        never perturbed; loader params are restored afterwards.
+        """
+        if not self.cfg.locality_chunks:
+            return None, []
+        from repro.tuning.locality import locality_win, sweep_locality
+        orig = self.loader.params
+        cfg = self.search_config()
+        try:
+            trials = sweep_locality(
+                self.evaluator, nworker=nworker, nprefetch=nprefetch,
+                chunks=self.cfg.locality_chunks,
+                current_chunk=orig.locality_chunk,
+                num_batches=cfg.num_batches, epoch=cfg.epoch)
+        finally:
+            self.loader.with_params(orig)
+        win = locality_win(trials, orig.locality_chunk,
+                           min_improvement=self.cfg.min_improvement)
+        return win, list(trials.values())
+
+    def apply(self, result: DPTResult,
+              params: Optional[LoaderParams] = None) -> LoaderParams:
+        """Hot-swap the winner into the live stream and persist it.
+
+        ``params`` is the full target (a locality-aware retune may keep
+        the current cell and change only the chunk); None applies the
+        result's (nworker, nprefetch) over the current params.
+        """
+        if params is None:
+            params = self.loader.params.replace(
+                num_workers=result.nworker,
+                prefetch_factor=result.nprefetch)
         self.loader.apply_params(params)
         if self.cache is not None:
+            # cache what was APPLIED, not the raw argmin (the policy may
+            # have kept the current cell and taken only the chunk) — and
+            # pair the cell with ITS OWN measured time, not the rejected
+            # argmin cell's (the locality sweep measured the applied
+            # combination when the cell was kept)
+            opt = result.optimal_time
+            applied_cell = (params.num_workers, params.prefetch_factor)
+            # an exact (cell, chunk) trial exists whenever the locality
+            # sweep changed the chunk (it measured every candidate at
+            # the applied cell) or the policy kept the current cell
+            t = next((t for t in result.trials
+                      if (t.nworker, t.nprefetch) == applied_cell
+                      and t.locality_chunk == params.locality_chunk
+                      and math.isfinite(t.seconds)), None)
+            if t is not None and (
+                    applied_cell != (result.nworker, result.nprefetch)
+                    or params.locality_chunk != result.locality_chunk):
+                opt = t.seconds
+            cached = dataclasses.replace(
+                result, nworker=params.num_workers,
+                nprefetch=params.prefetch_factor,
+                locality_chunk=params.locality_chunk,
+                optimal_time=opt)
             self.cache.put(self.machine_fp, self.dataset_fp,
-                           self.loader.global_batch, result)
+                           self.loader.global_batch, cached)
         return params
 
 
@@ -331,23 +389,37 @@ class OnlineTuner:
             self.policy.record_outcome(won=False)
             return None
         won = self.policy.is_win(result, orig)
-        self.policy.record_outcome(won=won)
-        if not won:
+        # the online locality axis (DESIGN.md §6): price chunk candidates
+        # at the cell the fleet will actually run — the search winner if
+        # it won, else the current cell — and let a significant chunk win
+        # ride the same hot swap (epoch-latched by the sampler)
+        cell = (result.nworker, result.nprefetch) if won \
+            else (orig.num_workers, orig.prefetch_factor)
+        chunk_win, chunk_trials = self.executor.sweep_locality(*cell)
+        result.trials.extend(chunk_trials)
+        self.policy.record_outcome(won=won or chunk_win is not None)
+        if not won and chunk_win is None:
             self.history.append({
                 "step": self.monitor.steps, "reason": reason,
                 "outcome": "kept",
                 "params": (orig.num_workers, orig.prefetch_factor),
+                "locality_chunk": orig.locality_chunk,
                 "optimal_time": result.optimal_time,
                 "measurements": len(result.trials),
                 "search_s": time.perf_counter() - t0,
             })
             return None
-        params = self.executor.apply(result)
+        params = orig if not won else orig.replace(
+            num_workers=result.nworker, prefetch_factor=result.nprefetch)
+        if chunk_win is not None:
+            params = params.replace(locality_chunk=chunk_win)
+        params = self.executor.apply(result, params)
         self.retunes += 1
         self.history.append({
             "step": self.monitor.steps, "reason": reason,
             "outcome": "applied",
-            "params": (result.nworker, result.nprefetch),
+            "params": (params.num_workers, params.prefetch_factor),
+            "locality_chunk": params.locality_chunk,
             "optimal_time": result.optimal_time,
             "measurements": len(result.trials),
             "search_s": time.perf_counter() - t0,

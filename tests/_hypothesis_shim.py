@@ -2,44 +2,113 @@
 
 A bare ``import hypothesis`` at test-module top level turns a missing dev
 dependency into a collection *error* that takes the whole module's tests
-down.  ``pytest.importorskip`` at module level is no better — it would
-skip every test in the module, property-based or not.  This shim keeps
-the property tests first-class when hypothesis is installed and collects
-them as *skipped* (everything else still runs) when it is not::
+down.  When hypothesis IS installed (requirements-dev.txt, so CI), the
+real library is used unchanged.  When it is not, a miniature fallback
+engine runs instead of skipping: each ``@given`` test executes
+``max_examples`` deterministic seeded draws (seeded by the test's own
+name, so runs are reproducible and example N is stable across sessions),
+and a failing example is re-raised with the drawn arguments in the
+message.  The fallback covers the strategy surface this suite actually
+uses — ``integers``, ``booleans``, ``sampled_from``, ``tuples``,
+``lists``, ``just`` and ``.map``/``.filter`` — no shrinking, no example
+database::
 
     from _hypothesis_shim import given, settings, st
 """
-import pytest
+import zlib
 
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
+    import random
+
     HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+    _FILTER_TRIES = 1000
 
-    class _AnyStrategy:
-        """Stands in for ``hypothesis.strategies`` at decoration time:
-        any attribute access, call, or chain returns itself."""
+    class _Strategy:
+        """A draw function rng -> value with hypothesis-ish combinators."""
 
-        def __getattr__(self, name):
-            return self
+        def __init__(self, draw):
+            self._draw = draw
 
-        def __call__(self, *args, **kwargs):
-            return self
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
 
-    st = _AnyStrategy()
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(_FILTER_TRIES):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise AssertionError("filter predicate never satisfied")
+            return _Strategy(draw)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            choices = list(seq)
+            return _Strategy(lambda rng: choices[rng.randrange(len(choices))])
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def tuples(*ss):
+            return _Strategy(lambda rng: tuple(s._draw(rng) for s in ss))
+
+        @staticmethod
+        def lists(s, min_size=0, max_size=8):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [s._draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
 
     def settings(*args, **kwargs):
-        return lambda fn: fn
+        max_examples = kwargs.get("max_examples", _DEFAULT_EXAMPLES)
 
-    def given(*args, **kwargs):
         def deco(fn):
-            @pytest.mark.skip(reason="hypothesis not installed")
-            def _skipped():
-                pass  # pragma: no cover
+            fn._max_examples = max_examples
+            return fn
 
-            _skipped.__name__ = fn.__name__
-            _skipped.__doc__ = fn.__doc__
-            return _skipped
+        return deco
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                # deterministic per-test seed: reruns draw the same examples
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = tuple(s._draw(rng) for s in gargs)
+                    kdrawn = {k: s._draw(rng) for k, s in gkwargs.items()}
+                    try:
+                        fn(*args, *drawn, **{**kdrawn, **kwargs})
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example {i + 1}/{n}: "
+                            f"args={drawn} kwargs={kdrawn}") from e
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            # @settings may be applied outside @given; it then tags the
+            # runner, which reads the attribute at call time (above)
+            if hasattr(fn, "_max_examples"):
+                runner._max_examples = fn._max_examples
+            return runner
 
         return deco

@@ -1,0 +1,42 @@
+"""CI per-test duration budget gate.
+
+The tier-1 run writes per-test call durations to the JSON named by
+``REPRO_DURATIONS_JSON`` (see conftest.py); this script fails when any
+single test exceeds the budget — so a slow-test regression in the data
+pipeline shows up red in the PR instead of silently inflating CI time.
+
+Usage: python tests/check_durations.py durations.json --budget 90
+"""
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="durations JSON written by the test run")
+    ap.add_argument("--budget", type=float, default=90.0,
+                    help="max seconds any single test may take")
+    ap.add_argument("--top", type=int, default=10,
+                    help="how many slowest tests to print")
+    args = ap.parse_args(argv)
+
+    with open(args.path) as f:
+        durations = json.load(f)
+    ranked = sorted(durations.items(), key=lambda kv: -kv[1])
+    print(f"{len(durations)} tests timed; slowest {args.top}:")
+    for nodeid, secs in ranked[:args.top]:
+        print(f"  {secs:8.2f}s  {nodeid}")
+    over = [(n, s) for n, s in ranked if s > args.budget]
+    if over:
+        print(f"\nFAIL: {len(over)} test(s) over the {args.budget:.0f}s "
+              "per-test budget:")
+        for nodeid, secs in over:
+            print(f"  {secs:8.2f}s  {nodeid}")
+        return 1
+    print(f"\nOK: all tests within the {args.budget:.0f}s per-test budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

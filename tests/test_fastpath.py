@@ -8,6 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core.simulator import LoaderSimulator, MachineProfile
+from conftest import make_index_dataset
+
 from repro.data import (ArenaBatch, ArrayStorage, DataLoader, Dataset,
                         FileStorage, LatencyStorage, LoaderParams, SlabArena,
                         ShardedSampler, cifar10_profile, coalesce_runs,
@@ -190,7 +192,6 @@ def test_arena_hot_swap_no_slot_leaked_no_batch_lost():
     """Index accounting (as in test_tuning) through the zero-copy path, plus
     slab accounting: after each drain the arena has every slot back."""
     n, gb = 512, 8
-    items = [np.full((4,), i, np.int32) for i in range(n)]
 
     def transform(a):
         return {"x": a}
@@ -203,7 +204,7 @@ def test_arena_hot_swap_no_slot_leaked_no_batch_lost():
 
     transform.batch_aware = True
     transform.batch_variant = batch_transform
-    ds = Dataset(ArrayStorage(items), transform=transform)
+    ds = make_index_dataset(n, transform=transform)
     dl = DataLoader(ds, gb, shuffle=False, seed=0,
                     params=FAST.replace(num_workers=2, prefetch_factor=2))
     stream = dl.stream(to_device=False)
@@ -327,14 +328,12 @@ def test_ordered_delivery_at_any_worker_count(workers):
     """With ordered=True (the default) delivery matches sampler order even
     when per-batch latency varies wildly across workers."""
     n, gb = 256, 8
-    items = [np.full((2,), i, np.int32) for i in range(n)]
-    rng_sleep = {"t": 0}
 
     def transform(a):
         time.sleep(0.0005 * (int(a[0]) % 5))   # skewed per-batch cost
         return {"x": a}
 
-    ds = Dataset(ArrayStorage(items), transform=transform)
+    ds = make_index_dataset(n, width=2, transform=transform)
     dl = DataLoader(ds, gb, shuffle=False, seed=0,
                     params=LoaderParams(num_workers=workers, ordered=True))
     got = [int(b["x"][0, 0]) for b in dl.host_batches(epoch=0)]
@@ -345,14 +344,13 @@ def test_ordered_pool_raises_promptly_when_one_worker_errors():
     """A died worker leaves a sequence hole; the ordered consumer must get
     the error via the sentinel instead of parking batches forever."""
     n, gb = 512, 8
-    items = [np.full((2,), i, np.int32) for i in range(n)]
 
     def transform(a):
         if int(a[0]) == 40:            # one poisoned index-batch
             raise ValueError("poisoned sample")
         return {"x": a}
 
-    ds = Dataset(ArrayStorage(items), transform=transform)
+    ds = make_index_dataset(n, width=2, transform=transform)
     idx = ShardedSampler(n, gb, shuffle=False, seed=0).epoch_iter(0)
     pool = ThreadWorkerPool(ds, idx, num_workers=3, prefetch_factor=2,
                             ordered=True)
@@ -386,7 +384,6 @@ def test_ordered_straggler_does_not_defeat_backpressure():
     whole epoch into the reordering buffer: pulls are bounded by the
     sequence window (queue depth + workers)."""
     n, gb = 800, 8
-    items = [np.full((2,), i, np.int32) for i in range(n)]
     event = threading.Event()
 
     def transform(a):
@@ -394,7 +391,7 @@ def test_ordered_straggler_does_not_defeat_backpressure():
             event.wait(1.5)
         return {"x": a}
 
-    ds = Dataset(ArrayStorage(items), transform=transform)
+    ds = make_index_dataset(n, width=2, transform=transform)
     idx = ShardedSampler(n, gb, shuffle=False, seed=0).epoch_iter(0)
     pool = ThreadWorkerPool(ds, idx, num_workers=4, prefetch_factor=2,
                             ordered=True)

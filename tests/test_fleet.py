@@ -3,70 +3,26 @@ adaptive-budget / variance-aware-win satellites.
 
 The coverage tests assert the reshard invariant EXACTLY (every index once,
 as a multiset over everything every host delivered) — any lost sample
-leaves a hole, any duplicate a repeat.
+leaves a hole, any duplicate a repeat.  Randomized reshard-coverage
+sweeps (the hand-enumerated case lists that used to sit here) moved to
+test_properties.py; randomized fleet fault timelines live there too.
 """
 import math
 
 import numpy as np
 import pytest
 
+from conftest import (flat_indices as _flat_indices,
+                      make_index_dataset as _index_dataset,
+                      make_table_evaluator as _table_evaluator)
+
 from repro.core.cluster import FleetEvent, FleetSchedule
 from repro.core.dpt import DPTConfig, DPTResult, Trial
-from repro.data import DataLoader, Dataset, LoaderParams
-from repro.data.loader import TransferStats
+from repro.data import DataLoader, LoaderParams
 from repro.data.sampler import SamplerState, ShardedSampler
-from repro.data.storage import ArrayStorage
 from repro.tuning import (FleetConfig, FleetCoordinator, HostAgent,
                           OnlineTuner, OnlineTunerConfig, RetunePolicy,
                           adaptive_budget, uniform_consensus, welch_wins)
-
-
-def _index_dataset(n):
-    items = [np.full((4,), i, np.int32) for i in range(n)]
-    return Dataset(ArrayStorage(items), transform=lambda a: {"x": a})
-
-
-def _flat_indices(batches):
-    return sorted(np.concatenate(
-        [np.asarray(b["x"])[:, 0] for b in batches]).tolist())
-
-
-def _table_evaluator(fn):
-    def ev(i, j, *, num_batches=16, epoch=0):
-        ev.calls += 1
-        ev.budgets.append(num_batches)
-        return TransferStats(fn(i, j), num_batches, 0)
-    ev.calls = 0
-    ev.budgets = []
-    return ev
-
-
-# --------------------------------------------------------------------------
-# ShardedSampler.reshard: determinism + exact coverage
-# --------------------------------------------------------------------------
-def _epoch_coverage(num_items, global_batch, old_count, new_count,
-                    barrier):
-    """Old-shard slices of batches [0, barrier) + new-shard slices of
-    [barrier, end), unioned over the (changing) host set."""
-    bpe = num_items // global_batch
-    out = []
-    for h in range(old_count):
-        s = ShardedSampler(num_items, global_batch, shuffle=True, seed=9,
-                           host_index=h, host_count=old_count)
-        out.extend(s.local_indices(0, b).tolist() for b in range(barrier))
-    for h in range(new_count):
-        s = ShardedSampler(num_items, global_batch, shuffle=True, seed=9,
-                           host_index=0, host_count=old_count)
-        s.reshard(new_count, h)
-        out.extend(s.local_indices(0, b).tolist()
-                   for b in range(barrier, bpe))
-    return sorted(x for chunk in out for x in chunk)
-
-
-@pytest.mark.parametrize("old,new", [(4, 3), (3, 4)])
-def test_sampler_reshard_exact_coverage_mid_epoch(old, new):
-    n, gb = 480, 12          # divisible by 3 and 4
-    assert _epoch_coverage(n, gb, old, new, barrier=17) == list(range(n))
 
 
 def test_sampler_reshard_validates():
@@ -167,32 +123,13 @@ def test_device_prefetch_depth_hot_swap():
 
 
 # --------------------------------------------------------------------------
-# FleetCoordinator: death, drift, join
+# FleetCoordinator: death, drift, join  (fleet_factory lives in conftest)
 # --------------------------------------------------------------------------
-def _fleet(n=480, gb=12, hosts=3, timeout=5.0):
-    clock = [0.0]
-    coord = FleetCoordinator(
-        config=FleetConfig(heartbeat_timeout_s=timeout, warmup_steps=2,
-                           cooldown_steps=4, num_cpu_cores=4, num_devices=1,
-                           max_prefetch=2, retune_budget_batches=2),
-        clock=lambda: clock[0])
-    agents, streams = [], []
-    for h in range(hosts):
-        dl = DataLoader(_index_dataset(n), gb, shuffle=True, seed=5,
-                        params=LoaderParams(num_workers=2,
-                                            prefetch_factor=2),
-                        host_index=h, host_count=hosts)
-        agent = coord.register(HostAgent(
-            f"host{h}", dl,
-            evaluator=_table_evaluator(lambda i, j: 4.0 / i + 0.1 * j)))
-        agents.append(agent)
-        streams.append(dl.stream(to_device=False))
-    return clock, coord, agents, streams
-
-
-def test_coordinator_death_reshards_with_exact_coverage():
+def test_coordinator_death_reshards_with_exact_coverage(fleet_factory):
     n, gb = 480, 12
-    clock, coord, agents, streams = _fleet(n, gb)
+    fleet = fleet_factory(n, gb)
+    clock, coord = fleet.clock, fleet.coord
+    agents, streams = fleet.agents, fleet.streams
     delivered = {h: [] for h in range(3)}
     for rnd in range(12):
         clock[0] += 1.0
@@ -222,27 +159,16 @@ def test_coordinator_death_reshards_with_exact_coverage():
     assert "host2" not in coord.agents
 
 
-def test_coordinator_correlated_deaths_one_reshard_exact_coverage():
+def test_coordinator_correlated_deaths_one_reshard_exact_coverage(
+        fleet_factory):
     """Two hosts dying in the same detection window (a rack failure) are
     handled as ONE reshard: neither dead host is treated as a survivor of
     the other's reshard, and no makeup share is parked on a corpse."""
     n, gb = 480, 12
-    clock = [0.0]
-    coord = FleetCoordinator(
-        config=FleetConfig(heartbeat_timeout_s=5.0, warmup_steps=2,
-                           cooldown_steps=1000, num_cpu_cores=4,
-                           num_devices=1, max_prefetch=2,
-                           retune_budget_batches=2),
-        clock=lambda: clock[0])
-    agents, streams = [], []
-    for h in range(4):
-        dl = DataLoader(_index_dataset(n), gb, shuffle=True, seed=5,
-                        params=LoaderParams(num_workers=2,
-                                            prefetch_factor=2),
-                        host_index=h, host_count=4)
-        agents.append(coord.register(HostAgent(
-            f"host{h}", dl, evaluator=_table_evaluator(lambda i, j: 1.0))))
-        streams.append(dl.stream(to_device=False))
+    fleet = fleet_factory(n, gb, hosts=4, cooldown_steps=1000,
+                          evaluator_fn=lambda i, j: 1.0)
+    clock, coord = fleet.clock, fleet.coord
+    agents, streams = fleet.agents, fleet.streams
     delivered = {h: [] for h in range(4)}
     for rnd in range(10):
         clock[0] += 1.0
@@ -286,8 +212,11 @@ def test_arena_respec_expected_leading_rejects_ragged_first_batch():
     assert arena.acquire() is not None
 
 
-def test_coordinator_drift_pushes_uniform_params_to_all_hosts():
-    clock, coord, agents, streams = _fleet()
+def test_coordinator_drift_pushes_uniform_params_to_all_hosts(
+        fleet_factory):
+    fleet = fleet_factory()
+    clock, coord = fleet.clock, fleet.coord
+    agents, streams = fleet.agents, fleet.streams
     # stalled fleet: data-wait dominates compute on every host
     for _ in range(6):
         clock[0] += 1.0
@@ -305,8 +234,10 @@ def test_coordinator_drift_pushes_uniform_params_to_all_hosts():
         s.close()
 
 
-def test_coordinator_straggler_triggers_consensus():
-    clock, coord, agents, streams = _fleet()
+def test_coordinator_straggler_triggers_consensus(fleet_factory):
+    fleet = fleet_factory()
+    clock, coord = fleet.clock, fleet.coord
+    agents, streams = fleet.agents, fleet.streams
     for _ in range(6):
         clock[0] += 1.0
         for i, a in enumerate(agents):
@@ -321,11 +252,13 @@ def test_coordinator_straggler_triggers_consensus():
         s.close()
 
 
-def test_coordinator_join_expands_fleet_with_exact_coverage():
+def test_coordinator_join_expands_fleet_with_exact_coverage(fleet_factory):
     """3 -> 4 hosts mid-epoch: incumbents reshard at the barrier, the
     newcomer aligns to it and takes the last shard."""
     n, gb = 480, 12
-    clock, coord, agents, streams = _fleet(n, gb)
+    fleet = fleet_factory(n, gb)
+    clock, coord = fleet.clock, fleet.coord
+    agents, streams = fleet.agents, fleet.streams
     delivered = []
     for rnd in range(6):
         clock[0] += 1.0
@@ -352,8 +285,9 @@ def test_coordinator_join_expands_fleet_with_exact_coverage():
     assert len(coord.agents) == 4
 
 
-def test_coordinator_no_win_consensus_backs_off():
-    clock, coord, agents, streams = _fleet()
+def test_coordinator_no_win_consensus_backs_off(fleet_factory):
+    fleet = fleet_factory()
+    coord, agents, streams = fleet.coord, fleet.agents, fleet.streams
     for a in agents:                 # flat objective: nothing to win
         a.evaluator = _table_evaluator(lambda i, j: 1.0)
     before = [a.loader.params for a in agents]
@@ -390,6 +324,114 @@ def test_uniform_consensus_requires_universal_feasibility():
     best, fleet_time = uniform_consensus([res_a, res_b])
     assert best == (2, 1)            # (4,1) is faster but overflows on b
     assert fleet_time == 2.0
+
+
+# --------------------------------------------------------------------------
+# makeup accounting regressions (found by the fault-injection matrix in
+# test_properties.py): consumed-position vs makeup yields, and makeup
+# surviving a later reshard / a recipient's death
+# --------------------------------------------------------------------------
+def test_consumed_position_not_inflated_by_makeup_yields():
+    """A host that consumed makeup batches must not over-report its
+    regular-batch position — one-observe-per-step counting loses samples
+    the moment that host dies (its makeup window starts too late)."""
+    n, gb = 240, 12
+    dl = DataLoader(_index_dataset(n), gb, shuffle=True, seed=3,
+                    params=LoaderParams(num_workers=1, prefetch_factor=1))
+    agent = HostAgent("h0", dl, evaluator=_table_evaluator(lambda i, j: 1.0))
+    stream = dl.stream(to_device=False)
+    for _ in range(3):
+        next(stream)
+        agent.observe(data_s=0.0, step_s=0.1)
+    assert agent.consumed_position() == 3
+    # two makeup chunks arrive (another host died elsewhere)
+    dl.add_makeup([np.array([7, 8]), np.array([9, 10])])
+    for _ in range(4):                   # 2 makeup + 2 regular, any order
+        next(stream)
+        agent.observe(data_s=0.0, step_s=0.1)
+    assert agent.consumed_position() == 5    # NOT 7: makeup doesn't count
+    assert stream.position == 5
+    stream.close()
+
+
+def test_reshard_recovers_pulled_but_undelivered_makeup():
+    """A reshard's discard boundary regenerates regular batches by
+    rewinding the sampler — makeup the pool had pulled but not delivered
+    must go back on the queue, not die with the pool."""
+    n, gb = 240, 12
+    dl = DataLoader(_index_dataset(n), gb, shuffle=True, seed=3,
+                    params=LoaderParams(num_workers=2, prefetch_factor=2))
+    stream = dl.stream(to_device=False)
+    delivered = [next(stream) for _ in range(4)]
+    makeup = [np.arange(12), np.arange(12, 24)]
+    dl.add_makeup(makeup)
+    # reshard lands immediately: the pool likely pulled the makeup already
+    dl.reshard(2, 0, at_batch=stream.position)
+    while stream.position < n // gb:
+        delivered.append(next(stream))
+    got = [x for b in delivered for x in np.asarray(b["x"])[:, 0].tolist()]
+    # both makeup chunks arrived exactly once despite the discard
+    for idx in range(24):
+        assert got.count(idx) >= 1
+    assert stream.reshards == 1
+    stream.close()
+
+
+def test_undelivered_makeup_counts_unconsumed_yields():
+    """Makeup yielded into a device prefetcher is not CONSUMED: querying
+    with the consumer's yield count must recover it (a dead host's
+    prefetcher-held makeup is otherwise lost)."""
+    n, gb = 120, 12
+    dl = DataLoader(_index_dataset(n), gb, shuffle=True, seed=3,
+                    params=LoaderParams(num_workers=1, prefetch_factor=1))
+    stream = dl.stream(to_device=False)
+    next(stream)
+    chunks = [np.array([1, 2, 3]), np.array([4, 5])]
+    dl.add_makeup(chunks)
+    # drain until both makeup chunks have been YIELDED
+    while stream.position < 4:
+        next(stream)
+    consumed_all = stream.yields
+    # consumer kept up: nothing undelivered
+    assert dl.undelivered_makeup(consumed_yields=consumed_all) == []
+    # consumer died one yield behind (prefetcher held the last batch):
+    # any makeup among the unconsumed suffix is recovered
+    recovered = stream.undelivered_makeup(consumed_yields=1)
+    assert sorted(np.concatenate(recovered).tolist()) == [1, 2, 3, 4, 5]
+    stream.close()
+
+
+def test_dead_hosts_undelivered_makeup_redistributed(fleet_factory):
+    """Makeup dealt to a host that later dies is re-redistributed by the
+    next reshard (no makeup parked on a corpse)."""
+    n, gb = 480, 12
+    fleet = fleet_factory(n, gb, hosts=3, cooldown_steps=1000)
+    clock, coord = fleet.clock, fleet.coord
+    agents, streams = fleet.agents, fleet.streams
+    delivered = []
+    # host2 dies first; its window becomes makeup on host0/host1
+    for rnd in range(6):
+        clock[0] += 1.0
+        for h in range(3):
+            if h == 2 and rnd >= 3:
+                continue
+            delivered.append(next(streams[h]))
+            agents[h].observe(data_s=0.001, step_s=0.1)
+        coord.poll()
+    clock[0] += 10.0
+    for h in (0, 1):
+        agents[h].heartbeat()
+    assert any(a["kind"] == "reshard" for a in coord.poll())
+    # host1 dies immediately after — likely still holding makeup
+    clock[0] += 1.0
+    delivered.append(next(streams[0]))
+    agents[0].observe(data_s=0.001, step_s=0.1)
+    clock[0] += 10.0
+    agents[0].heartbeat()
+    assert any(a["kind"] == "reshard" for a in coord.poll())
+    while streams[0].position < n // gb:
+        delivered.append(next(streams[0]))
+    assert _flat_indices(delivered) == list(range(n))
 
 
 # --------------------------------------------------------------------------

@@ -1,6 +1,13 @@
-"""IO-locality fast path: chunked sampling coverage/quality, the DPT
-locality axis, the pinned staging-buffer pool, counter surfacing, and the
-FileStorage fork hygiene fix (DESIGN.md §5)."""
+"""IO-locality fast path: chunked sampling quality, the DPT locality
+axis, the ONLINE locality loop (retune sweep + adaptive controller,
+DESIGN.md §6), the pinned staging-buffer pool, counter surfacing, and the
+FileStorage fork hygiene fix (DESIGN.md §5).
+
+Coverage/permutation invariants across randomized (chunk, shard count,
+reshard, checkpoint) configurations live in test_properties.py — the
+hand-enumerated case lists that used to sit here were replaced by that
+property suite.
+"""
 import dataclasses
 import multiprocessing as mp
 import os
@@ -8,74 +15,18 @@ import os
 import numpy as np
 import pytest
 
+from conftest import make_cold_dataset as _cold_dataset
+
 from repro.core.cache import DPTCache
 from repro.core.dpt import DPTConfig, DPTResult, Trial
 from repro.core.evaluators import LoaderEvaluator, SimulatorEvaluator
 from repro.core.simulator import LoaderSimulator, MachineProfile
-from repro.data import (ArrayStorage, DataLoader, Dataset, FileStorage,
-                        LatencyStorage, LoaderParams, ShardedSampler,
-                        coco_profile, synthetic_image_dataset)
-from repro.data.dataset import image_transform
+from repro.data import (DataLoader, FileStorage, LoaderParams,
+                        ShardedSampler, coco_profile,
+                        synthetic_image_dataset)
 from repro.data.prefetcher import DevicePrefetcher, StagingPool
 from repro.data.storage import coalesce_runs, storage_io_counters
 from repro.tuning import tune
-
-
-def _cold_dataset(n, *, latency_s=1e-3, cache_bytes=0):
-    rng = np.random.default_rng(0)
-    items = [rng.integers(0, 255, (8, 8, 3), dtype=np.uint8)
-             for _ in range(n)]
-    storage = LatencyStorage(ArrayStorage(items), latency_s=latency_s,
-                             bandwidth=1e9, cache_bytes=cache_bytes)
-    return Dataset(storage, transform=image_transform)
-
-
-# --------------------------------------------------------------------------
-# chunked orders are permutations: exact once-per-epoch coverage
-# --------------------------------------------------------------------------
-@pytest.mark.parametrize("chunk", [0, 1, 3, 16, 64, 200, 777])
-def test_chunked_perm_is_permutation(chunk):
-    s = ShardedSampler(200, 20, seed=5, locality_chunk=chunk)
-    for epoch in (0, 1):
-        perm = s._epoch_perm(epoch)
-        assert sorted(perm.tolist()) == list(range(200))
-    # reseeded per epoch
-    if chunk != 200:   # a single chunk containing everything can collide
-        assert s._epoch_perm(0).tolist() != s._epoch_perm(1).tolist()
-
-
-@pytest.mark.parametrize("chunk", [0, 4, 16])
-@pytest.mark.parametrize("hosts", [1, 2, 4])
-def test_coverage_every_chunk_and_shard_count(chunk, hosts):
-    shards = [ShardedSampler(128, 16, seed=2, host_index=h, host_count=hosts,
-                             locality_chunk=chunk) for h in range(hosts)]
-    seen = []
-    for b in range(shards[0].batches_per_epoch()):
-        for s in shards:
-            seen.extend(s.local_indices(0, b).tolist())
-    assert sorted(seen) == list(range(128))
-
-
-def test_coverage_exact_across_midepoch_reshard_chunked():
-    """Old-shard slices before the barrier + new-shard slices after it must
-    cover the chunked epoch exactly (the PR 3 invariant, now under chunked
-    orders)."""
-    n, gb, barrier = 96, 12, 4
-    old = [ShardedSampler(n, gb, seed=7, host_index=h, host_count=2,
-                          locality_chunk=8) for h in range(2)]
-    seen = []
-    for b in range(barrier):
-        for s in old:
-            seen.extend(s.local_indices(0, b).tolist())
-    for h, s in enumerate(old):
-        s.reshard(3, h)
-    extra = ShardedSampler(n, gb, seed=7, host_index=2, host_count=3,
-                           locality_chunk=8)
-    new = old + [extra]
-    for b in range(barrier, new[0].batches_per_epoch()):
-        for s in new:
-            seen.extend(s.local_indices(0, b).tolist())
-    assert sorted(seen) == list(range(n))
 
 
 def test_chunked_batches_coalesce_into_runs():
@@ -277,6 +228,330 @@ def test_trainer_locality_axis_ignored_on_sharded_fleet():
     tr.loader, tr.cfg = dl, cfg
     params = tr.tune_loader(force=True)
     assert params.locality_chunk == 0      # axis dropped, not searched
+
+
+# --------------------------------------------------------------------------
+# the online locality loop (DESIGN.md §6)
+# --------------------------------------------------------------------------
+def test_online_retune_converges_to_grid_optimal_chunk_real_loader():
+    """Acceptance: an online retune started with a deliberately bad
+    locality_chunk (0 = random on cold seek-bound storage) converges to
+    the grid-optimal chunk WITHOUT restarting the live stream."""
+    from repro.tuning import OnlineTuner, OnlineTunerConfig
+    ds = _cold_dataset(256, latency_s=1e-3)
+    dl = DataLoader(ds, 32, params=LoaderParams(num_workers=1,
+                                                prefetch_factor=1),
+                    shuffle=True, seed=0)
+    bpe = dl.sampler.batches_per_epoch()            # 8
+    stream = dl.stream(to_device=False)
+    seen = [next(stream) for _ in range(2)]         # live, mid-epoch 0
+
+    cfg = OnlineTunerConfig(num_cpu_cores=2, num_devices=2, max_prefetch=1,
+                            retune_budget_batches=4,
+                            locality_chunks=(0, 32))
+    tuner = OnlineTuner(dl, evaluator=LoaderEvaluator(dl, to_device=False),
+                        config=cfg, machine_fp="m", dataset_fp="d")
+    params = tuner.force_retune()
+    assert params is not None and params.locality_chunk == 32
+    assert tuner.retunes == 1
+    assert tuner.history[-1]["locality_chunk"] == 32
+
+    # the grid (same axis, same budget) agrees: the retune converged to
+    # the grid-optimal chunk
+    grid = tune(evaluator=LoaderEvaluator(dl, to_device=False),
+                strategy="grid",
+                config=DPTConfig(num_cpu_cores=2, num_devices=2,
+                                 max_prefetch=1, num_batches=4,
+                                 locality_chunks=(0, 32)),
+                measure_default=False)
+    assert grid.locality_chunk == params.locality_chunk
+
+    # the stream was never rebuilt: the swap latches mid-flight, epoch 0
+    # keeps its order and the chunk engages at the next epoch boundary
+    seen += [next(stream) for _ in range(2 * bpe - 2)]
+    assert stream.swaps == 1
+    assert dl.sampler.chunk_for_epoch(0) == 0
+    assert dl.sampler.locality_chunk == 32
+    # epoch 0's delivered multiset is exact despite the mid-epoch swap
+    rows = [r.tobytes() for b in seen[:bpe] for r in np.asarray(b["image"])]
+    all_images = ds.get_batch(np.arange(256), fast=False)["image"]
+    ref = sorted(all_images[i].tobytes() for i in range(256))
+    assert sorted(rows) == ref
+    stream.close()
+
+
+def test_online_retune_converges_to_grid_optimal_chunk_simulator():
+    """Same convergence through the virtual-time evaluator: the online
+    sweep resolves the locality axis exactly where the grid does."""
+    from repro.tuning import OnlineTuner, OnlineTunerConfig
+    sim = LoaderSimulator(coco_profile(80), MachineProfile())
+    ds = synthetic_image_dataset(64, 8, seed=0)
+    dl = DataLoader(ds, 64, params=LoaderParams(num_workers=4,
+                                                prefetch_factor=2),
+                    shuffle=True, seed=0)
+    cfg = OnlineTunerConfig(num_cpu_cores=4, num_devices=2, max_prefetch=2,
+                            retune_budget_batches=8, strategy="grid",
+                            locality_chunks=(0, 64))
+    tuner = OnlineTuner(dl, evaluator=SimulatorEvaluator(sim, batch_size=64),
+                        config=cfg, machine_fp="m", dataset_fp="d")
+    params = tuner.force_retune()
+    assert params is not None and params.locality_chunk == 64
+
+    grid = tune(evaluator=SimulatorEvaluator(sim, batch_size=64),
+                strategy="grid",
+                config=DPTConfig(num_cpu_cores=4, num_devices=2,
+                                 max_prefetch=2, num_batches=8,
+                                 locality_chunks=(0, 64)),
+                measure_default=False)
+    assert grid.locality_chunk == 64 == params.locality_chunk
+
+
+def test_online_retune_keeps_good_chunk():
+    """Anti-churn: when the current chunk is already optimal, the sweep
+    must not thrash it (and a no-win retune backs off as before)."""
+    from repro.tuning import OnlineTuner, OnlineTunerConfig
+    ds = _cold_dataset(128, latency_s=5e-4)
+    dl = DataLoader(ds, 32, params=LoaderParams(num_workers=1,
+                                                prefetch_factor=1,
+                                                locality_chunk=32),
+                    shuffle=True, seed=0)
+    cfg = OnlineTunerConfig(num_cpu_cores=2, num_devices=2, max_prefetch=1,
+                            retune_budget_batches=4,
+                            locality_chunks=(0, 32))
+    tuner = OnlineTuner(dl, evaluator=LoaderEvaluator(dl, to_device=False),
+                        config=cfg, machine_fp="m", dataset_fp="d")
+    assert tuner.force_retune() is None
+    assert dl.params.locality_chunk == 32
+
+
+def test_adaptive_controller_triggers_resize_on_run_len_collapse():
+    """Acceptance: the adaptive controller proposes a resize when the
+    live coalesced_run_len falls below half the active chunk — applied as
+    an epoch-latched hot swap on the live stream."""
+    from repro.tuning import (AdaptiveLocalityConfig,
+                              AdaptiveLocalityController)
+    ds = synthetic_image_dataset(96, 8, seed=0)
+    dl = DataLoader(ds, 16, params=LoaderParams(num_workers=1,
+                                                locality_chunk=16),
+                    shuffle=True, seed=0)
+    stream = dl.stream(to_device=False)
+    next(stream)                                    # live, mid-epoch
+    ctl = AdaptiveLocalityController(
+        dl, AdaptiveLocalityConfig(patience=2, min_requests=4,
+                                   cooldown_steps=0))
+    # counters: healthy window first (run_len 16 = the chunk), then the
+    # cache warms / topology changes and runs collapse to ~5 (< 8 = C/2)
+    io = {"coalesced_requests": 10, "reads": 160, "cache_hits": 0}
+    assert ctl.observe(dict(io)) is None            # baseline snapshot
+    io = {"coalesced_requests": 20, "reads": 320, "cache_hits": 0}
+    assert ctl.observe(dict(io)) is None            # healthy: run 16
+    io = {"coalesced_requests": 30, "reads": 420, "cache_hits": 50}
+    assert ctl.observe(dict(io)) is None            # low window 1 (run 5)
+    io = {"coalesced_requests": 40, "reads": 520, "cache_hits": 100}
+    proposal = ctl.observe(dict(io))                # low window 2 -> fire
+    assert proposal == 4                            # 2^floor(log2(5))
+    assert ctl.proposals == 1
+    assert dl.params.locality_chunk == 4
+    # epoch-latched on the live stream: current epoch keeps its order
+    for _ in range(8):
+        next(stream)
+    assert stream.swaps == 1
+    assert dl.sampler.chunk_for_epoch(0) == 16
+    assert dl.sampler.locality_chunk == 4
+    stream.close()
+
+
+def test_adaptive_controller_healthy_run_never_fires():
+    from repro.tuning import (AdaptiveLocalityConfig,
+                              AdaptiveLocalityController)
+    ds = synthetic_image_dataset(32, 8, seed=0)
+    dl = DataLoader(ds, 8, params=LoaderParams(locality_chunk=8),
+                    shuffle=True, seed=0)
+    ctl = AdaptiveLocalityController(
+        dl, AdaptiveLocalityConfig(patience=1, min_requests=4,
+                                   cooldown_steps=0))
+    ctl.observe({"coalesced_requests": 10, "reads": 80, "cache_hits": 0})
+    for k in range(2, 6):       # run length stays ~8 = the chunk
+        out = ctl.observe({"coalesced_requests": 10 * k,
+                           "reads": 80 * k, "cache_hits": 0})
+        assert out is None
+    assert ctl.proposals == 0
+    assert dl.params.locality_chunk == 8
+
+
+def test_adaptive_controller_routes_to_fleet_not_local():
+    """On a sharded fleet the controller must never change locality
+    locally — the proposal routes to on_propose (the coordinator)."""
+    from repro.tuning import (AdaptiveLocalityConfig,
+                              AdaptiveLocalityController)
+    ds = synthetic_image_dataset(64, 8, seed=0)
+    dl = DataLoader(ds, 16, params=LoaderParams(locality_chunk=16),
+                    shuffle=True, seed=0, host_index=0, host_count=2)
+    routed = []
+    ctl = AdaptiveLocalityController(
+        dl, AdaptiveLocalityConfig(patience=1, min_requests=4,
+                                   cooldown_steps=0),
+        on_propose=routed.append)
+    ctl.observe({"coalesced_requests": 10, "reads": 160, "cache_hits": 0})
+    ctl.observe({"coalesced_requests": 20, "reads": 260, "cache_hits": 50})
+    assert routed == [4]                            # run 50/10 -> snap 4
+    assert dl.params.locality_chunk == 16           # untouched locally
+
+
+def test_fleet_locality_reconsensus_uniform_push(fleet_factory):
+    """The fleet path: re-consensus sweeps the locality axis uniformly,
+    pushes the winner to every host, and pins ONE common latch epoch."""
+    from repro.tuning import FleetConfig
+
+    def fn(i, j, chunk):
+        return (4.0 / i + 0.1 * j) * (0.4 if chunk == 8 else 1.0)
+
+    fleet = fleet_factory(
+        config=FleetConfig(heartbeat_timeout_s=5.0, warmup_steps=2,
+                           cooldown_steps=4, num_cpu_cores=4, num_devices=1,
+                           max_prefetch=2, retune_budget_batches=2,
+                           locality_chunks=(0, 8)))
+    for a in fleet.agents:
+        from conftest import make_table_evaluator
+        a.evaluator = make_table_evaluator(fn, locality=True)
+    fleet.coord.request_consensus(reason="forced")
+    actions = fleet.coord.poll()
+    consensus = next(a for a in actions if a["kind"] == "consensus")
+    assert consensus["applied"] and consensus["locality_chunk"] == 8
+    for a in fleet.agents:
+        assert a.loader.params.locality_chunk == 8
+    # the swap commits when each stream drains its pre-pulled batches;
+    # afterwards every host's schedule pins the SAME latch epoch
+    for s in fleet.streams:
+        while s.swaps == 0:
+            next(s)
+    latches = {tuple(a.loader.sampler._locality_schedule[-1])
+               for a in fleet.agents}
+    assert len(latches) == 1                        # one common (epoch, 8)
+    assert latches.pop()[1] == 8
+
+
+def test_trainer_wires_adaptive_locality_by_mode():
+    """TrainerConfig.adaptive_locality: single-host controllers apply
+    locally; fleet-mode controllers route proposals to the agent's
+    coordinator (notify_drift) and never touch params themselves."""
+    from repro.train.trainer import Trainer, TrainerConfig
+    ds = synthetic_image_dataset(32, 8, seed=0)
+    dl = DataLoader(ds, 8, params=LoaderParams(locality_chunk=16),
+                    shuffle=True, seed=0)
+    tr = Trainer.__new__(Trainer)
+    tr.loader, tr.cfg, tr.agent = dl, TrainerConfig(), None
+    ctl = tr._make_locality_controller()
+    assert ctl.on_propose is None and ctl.loader is dl
+
+    class FakeAgent:
+        def __init__(self):
+            self.proposals = []
+
+        def notify_locality(self, chunk):
+            self.proposals.append(chunk)
+
+    tr.agent = FakeAgent()
+    ctl = tr._make_locality_controller()
+    ctl.observe({"coalesced_requests": 10, "reads": 160, "cache_hits": 0})
+    for _ in range(2):
+        ctl.observe({"coalesced_requests": ctl._last[0] + 10,
+                     "reads": 160, "cache_hits": 0})
+    assert tr.agent.proposals == [0]
+    assert dl.params.locality_chunk == 16       # untouched locally
+
+
+def test_coordinator_drops_locality_request_without_axis(fleet_factory):
+    """An adaptive proposal on a fleet with no locality axis must NOT
+    force a re-consensus — the search could never touch the knob, so the
+    repeated proposals would burn goodput forever."""
+    fleet = fleet_factory()                     # locality_chunks unset
+    fleet.agents[0].notify_locality(4)
+    assert fleet.coord.poll() == []             # nothing forced
+    # with the axis configured the same signal IS honoured
+    from repro.tuning import FleetConfig
+    from conftest import make_table_evaluator
+    fleet2 = fleet_factory(
+        config=FleetConfig(heartbeat_timeout_s=5.0, warmup_steps=2,
+                           cooldown_steps=4, num_cpu_cores=4, num_devices=1,
+                           max_prefetch=2, retune_budget_batches=2,
+                           locality_chunks=(0, 8)))
+    for a in fleet2.agents:
+        a.evaluator = make_table_evaluator(lambda i, j, c: 1.0,
+                                           locality=True)
+    fleet2.agents[0].notify_locality(4)
+    actions = fleet2.coord.poll()
+    assert any(a["kind"] == "consensus"
+               and a["reason"].startswith("locality-run-len-collapse")
+               for a in actions)
+
+
+def test_join_syncs_fleet_locality_to_newcomer(fleet_factory):
+    """Locality is runtime-mutable, so a joiner built with a stale chunk
+    must inherit the fleet's (epoch -> chunk) schedule at join — or it
+    would slice different permutations than its peers."""
+    from repro.data import DataLoader
+    from repro.tuning import HostAgent
+    from conftest import make_index_dataset, make_table_evaluator
+    fleet = fleet_factory(480, 12)
+    # fleet-wide chunk applied earlier (simulate: set schedule directly)
+    for a in fleet.agents:
+        a.loader.params = a.loader.params.replace(locality_chunk=8)
+        a.loader.sampler.load_locality([[0, 0], [1, 8]])
+    for _ in range(2):
+        for s in fleet.streams:
+            next(s)
+    dl_new = DataLoader(make_index_dataset(480), 12, shuffle=True, seed=5)
+    newcomer = HostAgent("host3", dl_new,
+                         evaluator=make_table_evaluator(lambda i, j: 1.0))
+    fleet.coord.join(newcomer)
+    assert dl_new.params.locality_chunk == 8
+    assert dl_new.sampler.locality_state() == \
+        fleet.agents[0].loader.sampler.locality_state()
+
+
+def test_adaptive_controller_never_applies_locally_on_sharded_loader():
+    """Library-level guard: a sharded loader with no coordinator route
+    must not resize locality locally (permutation divergence)."""
+    from repro.tuning import (AdaptiveLocalityConfig,
+                              AdaptiveLocalityController)
+    ds = synthetic_image_dataset(64, 8, seed=0)
+    dl = DataLoader(ds, 16, params=LoaderParams(locality_chunk=16),
+                    shuffle=True, seed=0, host_index=0, host_count=2)
+    ctl = AdaptiveLocalityController(
+        dl, AdaptiveLocalityConfig(patience=1, min_requests=4,
+                                   cooldown_steps=0))
+    ctl.observe({"coalesced_requests": 10, "reads": 160, "cache_hits": 0})
+    assert ctl.observe({"coalesced_requests": 20, "reads": 180,
+                        "cache_hits": 0}) is None
+    assert ctl.proposals == 0
+    assert dl.params.locality_chunk == 16
+    # and the trainer refuses to build one at all in that topology
+    from repro.train.trainer import Trainer, TrainerConfig
+    tr = Trainer.__new__(Trainer)
+    tr.loader, tr.cfg, tr.agent = dl, TrainerConfig(), None
+    assert tr._make_locality_controller() is None
+
+
+def test_fleet_locality_keeps_chunk_when_flat(fleet_factory):
+    from repro.tuning import FleetConfig
+    from conftest import make_table_evaluator
+
+    fleet = fleet_factory(
+        config=FleetConfig(heartbeat_timeout_s=5.0, warmup_steps=2,
+                           cooldown_steps=4, num_cpu_cores=4, num_devices=1,
+                           max_prefetch=2, retune_budget_batches=2,
+                           locality_chunks=(0, 8)))
+    for a in fleet.agents:
+        a.evaluator = make_table_evaluator(lambda i, j, c: 1.0,
+                                           locality=True)
+    fleet.coord.request_consensus(reason="forced")
+    actions = fleet.coord.poll()
+    consensus = next(a for a in actions if a["kind"] == "consensus")
+    assert consensus["locality_chunk"] is None
+    assert not consensus["applied"]
+    for a in fleet.agents:
+        assert a.loader.params.locality_chunk == 0
 
 
 # --------------------------------------------------------------------------

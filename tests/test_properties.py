@@ -1,0 +1,301 @@
+"""Property-based suite for the whole data pipeline (ISSUE 5).
+
+Replaces the hand-enumerated coverage/permutation case lists that used to
+live in test_locality.py / test_fleet.py with randomized configurations:
+for arbitrary (dataset size, shard counts, locality_chunk, global batch,
+reshard point, checkpoint point, layout) tuples the pipeline must hold
+
+* **permutation-ness** — every epoch order is exactly a permutation;
+* **exact once-per-epoch coverage** — including across a mid-epoch
+  reshard (old-shard slices before the barrier + new-shard slices after
+  union to the epoch, for any chunk size and either host layout);
+* **checkpoint determinism** — a sampler restored mid-epoch with the new
+  topology reproduces the live continuation exactly;
+* **byte-identical multisets** — a chunked epoch delivers the same
+  sample bytes as the random epoch, through the real loader machinery;
+
+plus a seeded fault-injection matrix for the fleet control plane:
+randomized join/leave/degrade/correlated-death timelines must lose and
+duplicate zero batches, with exactly one reshard per correlated-death
+group.
+
+Runs under real hypothesis when installed (CI) and under the shim's
+deterministic fallback engine otherwise — either way the suite executes
+well over 100 randomized pipeline configurations.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from conftest import flat_indices, make_index_dataset
+
+from repro.core.cluster import FleetEvent, FleetSchedule
+from repro.data import DataLoader, LoaderParams
+from repro.data.sampler import SamplerState, ShardedSampler
+
+# chunk candidates deliberately include 0/1 (random), odd sizes, sizes
+# around the batch, and sizes past the dataset
+_CHUNKS = (0, 1, 3, 8, 16, 64, 200, 777)
+
+
+def _shards(n, gb, hosts, *, chunk, layout, seed):
+    return [ShardedSampler(n, gb, seed=seed, host_index=h, host_count=hosts,
+                           locality_chunk=chunk, layout=layout)
+            for h in range(hosts)]
+
+
+# --------------------------------------------------------------------------
+# the core pipeline property: permutation + exact coverage across a
+# mid-epoch reshard + checkpoint determinism, randomized
+# --------------------------------------------------------------------------
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4),
+       st.sampled_from(_CHUNKS), st.integers(2, 6), st.integers(1, 3),
+       st.sampled_from(["host_major", "strided"]),
+       st.integers(0, 99), st.integers(0, 10**6))
+def test_pipeline_coverage_reshard_checkpoint_property(
+        old_hosts, new_hosts, chunk, bpe, gb_scale, layout, cut, seed):
+    """For ANY randomized pipeline config: exact once-per-epoch coverage
+    across a mid-epoch reshard, permutation-ness, and checkpoint
+    round-trip determinism."""
+    gb = 12 * gb_scale                  # divisible by every host count <= 4
+    n = gb * bpe
+    barrier = cut % (bpe + 1)           # reshard point, 0..bpe inclusive
+    ckpt = (cut * 7 + seed) % bpe       # checkpoint point within the epoch
+
+    # permutation-ness (both epochs; chunked or not, either layout)
+    probe = ShardedSampler(n, gb, seed=seed, locality_chunk=chunk,
+                           layout=layout)
+    for epoch in (0, 1):
+        assert sorted(probe._epoch_perm(epoch).tolist()) == list(range(n))
+
+    # exact coverage across the reshard barrier
+    old = _shards(n, gb, old_hosts, chunk=chunk, layout=layout, seed=seed)
+    seen = []
+    for b in range(barrier):
+        for s in old:
+            seen.extend(s.local_indices(0, b).tolist())
+    for h, s in enumerate(old[:min(old_hosts, new_hosts)]):
+        s.reshard(new_hosts, h)
+    survivors = old[:min(old_hosts, new_hosts)]
+    joined = _shards(n, gb, new_hosts, chunk=chunk, layout=layout,
+                     seed=seed)[len(survivors):]
+    for b in range(barrier, bpe):
+        for s in survivors + joined:
+            seen.extend(s.local_indices(0, b).tolist())
+    assert sorted(seen) == list(range(n))
+
+    # checkpoint round-trip: a fresh sampler restored at ``ckpt`` with the
+    # NEW topology continues exactly like the live one
+    live = ShardedSampler(n, gb, seed=seed, host_index=0,
+                          host_count=old_hosts, locality_chunk=chunk,
+                          layout=layout)
+    it = iter(live)
+    for _ in range(ckpt):
+        next(it)
+    saved = live.state.to_dict()
+    live.reshard(new_hosts, 0)
+    expect = [next(it).tolist() for _ in range(3)]
+    restored = ShardedSampler(n, gb, seed=seed, host_index=0,
+                              host_count=new_hosts, locality_chunk=chunk,
+                              layout=layout,
+                              state=SamplerState.from_dict(saved))
+    again = [next(iter(restored)).tolist() for _ in range(3)]
+    assert expect == again
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.sampled_from(_CHUNKS), st.integers(0, 3),
+       st.integers(0, 10**6))
+def test_host_layouts_partition_identically_property(hosts, chunk, epoch,
+                                                     seed):
+    """Host-major and strided layouts partition every global batch into
+    the SAME set — layout changes locality, never coverage."""
+    gb, n = 24, 24 * 4
+    major = _shards(n, gb, hosts, chunk=chunk, layout="host_major",
+                    seed=seed)
+    strided = _shards(n, gb, hosts, chunk=chunk, layout="strided",
+                      seed=seed)
+    for b in range(n // gb):
+        a = np.concatenate([s.local_indices(epoch, b) for s in major])
+        d = np.concatenate([s.local_indices(epoch, b) for s in strided])
+        assert sorted(a.tolist()) == sorted(d.tolist())
+
+
+@pytest.mark.parametrize("hosts", [2, 4])
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_host_major_preserves_per_host_run_length(hosts, chunk):
+    """The PR-4 fleet degradation, fixed: under host striding per-host
+    coalesced runs collapse (the within-chunk shuffle makes every H-th
+    position a near-random value, runs -> ~1), while the host-major
+    layout keeps whole chunks on one host — per-host runs stay ~C
+    whenever the chunk fits the local batch (C <= B/H, which the
+    per-host-measuring DPT grid selects for naturally)."""
+    from repro.data.storage import coalesce_runs
+    gb, n = 64, 64 * 8                       # C <= lb at every H here
+
+    def mean_run(layout):
+        shards = _shards(n, gb, hosts, chunk=chunk, layout=layout, seed=1)
+        runs = [len(coalesce_runs(s.local_indices(0, b)))
+                for s in shards for b in range(n // gb)]
+        lb = gb // hosts
+        return lb * len(runs) / sum(runs)    # mean items per request
+
+    assert mean_run("host_major") >= 0.5 * chunk
+    assert mean_run("strided") <= 0.5 * mean_run("host_major")
+
+
+# --------------------------------------------------------------------------
+# byte-identical multisets through the real loader machinery
+# --------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from((1, 3, 8, 16, 200)), st.integers(1, 2),
+       st.integers(0, 10**6))
+def test_chunked_epoch_byte_identical_multiset_property(chunk, hosts, seed):
+    """A chunked epoch delivers exactly the random epoch's sample bytes
+    (chunking reorders, never re-samples) — through the real worker-pool
+    delivery path, at any shard count."""
+    n, gb = 96, 24
+
+    def epoch_bytes(locality_chunk):
+        out = []
+        for h in range(hosts):
+            dl = DataLoader(make_index_dataset(n), gb,
+                            params=LoaderParams(
+                                num_workers=1,
+                                locality_chunk=locality_chunk),
+                            shuffle=True, seed=seed,
+                            host_index=h, host_count=hosts)
+            for batch in dl.host_batches(epoch=0, num_batches=n // gb):
+                out.extend(r.tobytes() for r in np.asarray(batch["x"]))
+        return out
+
+    a = sorted(epoch_bytes(0))
+    b = sorted(epoch_bytes(chunk))
+    assert a == b
+
+
+# --------------------------------------------------------------------------
+# seeded fault-injection matrix: the fleet under randomized timelines
+# --------------------------------------------------------------------------
+def _build_timeline(rng, *, max_step, timeout_rounds):
+    """Random join/leave/degrade events, spaced > heartbeat timeout so
+    correlated-death groups resolve to distinct detection windows.  Every
+    timeline contains at least one death group (the matrix must exercise
+    the reshard path on every seed)."""
+    events, step = [], 2
+    hosts_alive, next_host = 3, 3
+    groups = []                          # correlated-death groups emitted
+    while step < max_step:
+        kind = rng.choice(["death", "join", "degrade", "none"],
+                          p=[0.45, 0.25, 0.2, 0.1])
+        if not groups and step + timeout_rounds + 3 >= max_step:
+            kind = "death"               # last slot: force the guarantee
+        if kind == "death" and hosts_alive >= 2:
+            size = int(rng.integers(1, min(2, hosts_alive - 1) + 1))
+            events.append(("death", step, size))
+            groups.append(size)
+            hosts_alive -= size
+        elif kind == "join" and hosts_alive < 4:
+            events.append(("join", step, next_host))
+            next_host += 1
+            hosts_alive += 1
+        elif kind == "degrade":
+            events.append(("degrade", step, None))
+        step += timeout_rounds + 3
+    return events, groups
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fleet_fault_injection_matrix(seed):
+    """Randomized fleet timelines (correlated deaths, joins, degrades at
+    seeded random steps): zero lost/duplicated batches over the epoch and
+    exactly one reshard emitted per correlated-death group."""
+    from repro.data import DataLoader, LoaderParams
+    from repro.tuning import FleetConfig, FleetCoordinator, HostAgent
+    from conftest import make_table_evaluator
+
+    rng = np.random.default_rng(seed)
+    gb, bpe = 12, 48
+    n = gb * bpe
+    timeout, rounds = 4.0, 40
+    events, groups = _build_timeline(rng, max_step=rounds - 12,
+                                     timeout_rounds=int(timeout))
+    sched = FleetSchedule()
+    for kind, step, arg in events:
+        if kind == "death":
+            sched.add(FleetEvent(step=step, kind="leave", host=f"g{arg}"))
+        elif kind == "join":
+            sched.add(FleetEvent(step=step, kind="join", host=f"host{arg}"))
+        else:
+            sched.add(FleetEvent(step=step, kind="degrade", host="host0",
+                                 io_scale=4.0))
+
+    clock = [0.0]
+    coord = FleetCoordinator(
+        config=FleetConfig(heartbeat_timeout_s=timeout, warmup_steps=2,
+                           cooldown_steps=8, num_cpu_cores=4, num_devices=1,
+                           max_prefetch=2, retune_budget_batches=2),
+        clock=lambda: clock[0])
+
+    def spawn(h, host_count):
+        dl = DataLoader(make_index_dataset(n), gb, shuffle=True, seed=7,
+                        params=LoaderParams(num_workers=2,
+                                            prefetch_factor=2),
+                        host_index=h, host_count=host_count)
+        return HostAgent(f"host{h}", dl,
+                         evaluator=make_table_evaluator(
+                             lambda i, j: 4.0 / i + 0.1 * j))
+
+    agents = {f"host{h}": coord.register(spawn(h, 3)) for h in range(3)}
+    streams = {name: a.loader.stream(to_device=False)
+               for name, a in agents.items()}
+    alive = set(agents)
+    degraded = set()
+    delivered = []
+    death_steps = []
+
+    try:
+        for step in range(rounds):
+            for ev in sched.at(step):
+                if ev.kind == "leave":       # a correlated-death group
+                    size = int(ev.host[1:])
+                    victims = sorted(alive)[:size]
+                    for v in victims:
+                        alive.discard(v)
+                    death_steps.append(step)
+                elif ev.kind == "join":
+                    h = int(ev.host[4:])
+                    agent = spawn(h, 1)      # coord.join reshards it in
+                    coord.join(agent)
+                    agents[ev.host] = agent
+                    streams[ev.host] = agent.loader.stream(to_device=False)
+                    alive.add(ev.host)
+                else:
+                    degraded.add(ev.host)
+            clock[0] += 1.0
+            for name in sorted(alive):
+                delivered.append(next(streams[name]))
+                scale = 4.0 if name in degraded else 1.0
+                agents[name].observe(data_s=0.001, step_s=0.05 * scale)
+            coord.poll()
+
+        for name in sorted(alive):
+            s = streams[name]
+            while s.position < bpe:
+                delivered.append(next(s))
+    finally:
+        for s in streams.values():
+            s.close()
+
+    # zero lost, zero duplicated — the epoch's exact multiset
+    assert flat_indices(delivered) == list(range(n))
+    # exactly ONE reshard per correlated-death group
+    death_reshards = [e for e in coord.events
+                      if e["kind"] == "reshard" and e["reason"] == "dead"]
+    assert len(death_reshards) == len(groups), coord.events
+    for event, size in zip(death_reshards, groups):
+        assert len(event["lost"]) == size
+    # joins each emitted their own reshard
+    joins = [e for e in coord.events if e["kind"] == "join"]
+    assert len(joins) == sum(1 for k, _, _ in events if k == "join")
