@@ -43,14 +43,21 @@ class DPTCache:
         return (v["nworker"], v["nprefetch"]) if v else None
 
     def get_params(self, machine_fp: str, dataset_fp: str, batch_size: int,
-                   epoch: int = 0, *, require_locality: bool = False
-                   ) -> Optional[Tuple[int, int, int]]:
+                   epoch: int = 0, *, require_locality: bool = False,
+                   require_cache: bool = False, with_cache: bool = False
+                   ) -> Optional[Tuple[int, ...]]:
         """Like ``get`` but with the locality axis: (nworker, nprefetch,
         locality_chunk).  Entries written before the axis existed read
         back as locality 0 (random order).  ``require_locality=True``
         treats entries whose search never swept the axis as misses — a
         run that newly enables the axis must not be satisfied by a stale
-        two-axis result."""
+        two-axis result.
+
+        The cache axis (DESIGN.md §7) is opt-in, so the 3-tuple contract
+        above is unchanged for existing callers: ``with_cache=True``
+        appends ``cache_budget_bytes`` as a fourth element;
+        ``require_cache=True`` treats entries whose search never swept
+        the budget axis as misses (same staleness rule as locality)."""
         with self._lock:
             v = self._store.get(self._key(machine_fp, dataset_fp,
                                           batch_size, epoch))
@@ -58,8 +65,13 @@ class DPTCache:
             return None
         if require_locality and not v.get("locality_searched", False):
             return None
-        return (v["nworker"], v["nprefetch"],
-                int(v.get("locality_chunk", 0)))
+        if require_cache and not v.get("cache_searched", False):
+            return None
+        out = (v["nworker"], v["nprefetch"],
+               int(v.get("locality_chunk", 0)))
+        if with_cache:
+            out = out + (int(v.get("cache_budget_bytes", 0)),)
+        return out
 
     def put(self, machine_fp: str, dataset_fp: str, batch_size: int,
             result: DPTResult, epoch: int = 0) -> None:
@@ -74,6 +86,9 @@ class DPTCache:
             # searched axis always includes one)
             "locality_searched": any(
                 getattr(t, "locality_chunk", 0) for t in result.trials),
+            "cache_budget_bytes": getattr(result, "cache_budget_bytes", 0),
+            "cache_searched": any(
+                getattr(t, "cache_budget_bytes", 0) for t in result.trials),
         }
         with self._lock:
             prev = self._store.get(key)
@@ -85,6 +100,13 @@ class DPTCache:
                 # locality — keep it instead of clobbering it to 0
                 entry["locality_chunk"] = prev.get("locality_chunk", 0)
                 entry["locality_searched"] = True
+            if (not entry["cache_searched"] and prev
+                    and prev.get("cache_searched")):
+                # same protection for the cache axis: a budget-blind
+                # refinement must not clobber a searched budget to 0
+                entry["cache_budget_bytes"] = prev.get(
+                    "cache_budget_bytes", 0)
+                entry["cache_searched"] = True
             self._store[key] = entry
             if self.path:
                 tmp = self.path + ".tmp"

@@ -44,6 +44,10 @@ class DPTConfig:
     # the paper's (nWorker, nPrefetch) plane and never passes the kwarg to
     # the evaluator — existing two-argument evaluators are untouched.
     locality_chunks: Optional[Tuple[int, ...]] = None
+    # beyond-paper fourth grid axis (DESIGN.md §7): candidate cross-epoch
+    # cache budgets in bytes (0 = cache off).  Same contract: None keeps
+    # the kwarg away from the evaluator entirely.
+    cache_budgets: Optional[Tuple[int, ...]] = None
 
     def resolve(self) -> Tuple[int, int]:
         n = self.num_cpu_cores
@@ -72,6 +76,9 @@ class Trial:
     # sampler locality the cell was measured with (0 = random order / the
     # locality axis was not searched)
     locality_chunk: int = 0
+    # cross-epoch cache budget the cell was measured with (0 = cache off /
+    # the cache axis was not searched)
+    cache_budget_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -82,6 +89,7 @@ class DPTResult:
     trials: List[Trial]
     default_time: Optional[float] = None
     locality_chunk: int = 0
+    cache_budget_bytes: int = 0
 
     @property
     def speedup_vs_default(self) -> Optional[float]:

@@ -27,19 +27,22 @@ class LoaderEvaluator:
 
     def __call__(self, nworker: int, nprefetch: int, *, num_batches: int = 16,
                  epoch: int = 0,
-                 locality_chunk: Optional[int] = None) -> TransferStats:
+                 locality_chunk: Optional[int] = None,
+                 cache_budget_bytes: Optional[int] = None) -> TransferStats:
         self.calls += 1
         # replace() keeps the loader's delivery knobs (fast_path, zero_copy,
         # ordered, use_processes, ...) so trials measure the same machinery
-        # the live stream runs.  The locality axis is passed as a
-        # measurement-only override — candidate chunk sizes must not touch
-        # the shared sampler's live epoch schedule.
+        # the live stream runs.  The locality and cache axes are passed as
+        # measurement-only overrides — candidate chunk sizes / budgets must
+        # not touch the shared sampler's live schedule or the live tier.
         self.loader.with_params(self.loader.params.replace(
             num_workers=nworker, prefetch_factor=nprefetch,
             device_prefetch=self.device_prefetch))
+        kw = {} if cache_budget_bytes is None \
+            else {"cache_budget_bytes": cache_budget_bytes}
         return self.loader.measure_transfer_time(
             num_batches, epoch=epoch, to_device=self.to_device,
-            locality_chunk=locality_chunk)
+            locality_chunk=locality_chunk, **kw)
 
 
 class SimulatorEvaluator:
@@ -57,7 +60,8 @@ class SimulatorEvaluator:
 
     def __call__(self, nworker: int, nprefetch: int, *, num_batches: int = 16,
                  epoch: int = 0,
-                 locality_chunk: Optional[int] = None) -> TransferStats:
+                 locality_chunk: Optional[int] = None,
+                 cache_budget_bytes: Optional[int] = None) -> TransferStats:
         self.calls += 1
         if self.num_batches_cap is not None:
             num_batches = min(num_batches, self.num_batches_cap)
@@ -65,7 +69,8 @@ class SimulatorEvaluator:
             batch_size=self.batch_size, num_batches=num_batches,
             nworker=nworker, nprefetch=nprefetch, epoch=epoch,
             device_prefetch=self.device_prefetch, device_ram=self.device_ram,
-            locality_chunk=locality_chunk or 0)
+            locality_chunk=locality_chunk or 0,
+            cache_budget_bytes=cache_budget_bytes or 0)
         return TransferStats(r.seconds, num_batches,
                              int(num_batches * self.sim.batch_bytes(
                                  self.batch_size)),

@@ -51,6 +51,12 @@ class MachineProfile:
     thrash_exp: float = 1.35         # oversubscription (ctx-switch) penalty
     io_congestion: float = 0.08      # bw loss per reader beyond io_streams
     device_bw: float = 12e9          # host->device interconnect
+    # fraction of the free-RAM page cache that actually serves warm-epoch
+    # reads (1.0 = the neutral legacy model: every free byte caches
+    # perfectly).  Real hosts evict under competing pressure; a value < 1
+    # is what makes an EXPLICITLY pinned cache tier (cache_budget_bytes)
+    # worth its footprint on the warm-epoch grid (DESIGN.md §7).
+    page_cache_eff: float = 1.0
 
     @property
     def effective_cores(self) -> float:
@@ -120,12 +126,15 @@ class LoaderSimulator:
                  device_ram: Optional[float] = None,
                  check_overflow: bool = True,
                  locality_chunk: int = 0, host_count: int = 1,
-                 layout: str = "host_major") -> SimResult:
+                 layout: str = "host_major",
+                 cache_budget_bytes: float = 0.0) -> SimResult:
         sp, mp = self.sp, self.mp
         K = max(1, nworker)
         j = max(1, nprefetch)
+        budget = max(0.0, float(cache_budget_bytes))
 
         foot = self.footprint(batch_size, nworker, nprefetch, device_prefetch)
+        foot += budget                 # the pinned tier is loader memory
         avail_ram = mp.host_ram - mp.os_reserved - self.model_host_bytes
         if check_overflow and foot > avail_ram:
             raise MemoryOverflow(
@@ -135,9 +144,19 @@ class LoaderSimulator:
             if self.device_bytes(batch_size, device_prefetch) > device_ram:
                 raise MemoryOverflow("simulated device memory overflow")
 
-        # page cache: what's left after the loader's own memory
+        # page cache: what's left after the loader's own memory (which now
+        # includes the pinned cache tier).  The tier serves its hot set
+        # with certainty on epochs >= 1; the page cache serves a
+        # page_cache_eff fraction of what fits in the REMAINING free RAM —
+        # the two are disjoint (hit-ratio x latency-delta pricing of the
+        # cache axis: warm-fraction gain vs the footprint it pins).
         cache_cap = max(0.0, avail_ram - foot)
-        warm = 0.0 if epoch == 0 else min(1.0, cache_cap / sp.dataset_bytes)
+        if epoch == 0:
+            warm = 0.0
+        else:
+            tier_warm = min(1.0, budget / sp.dataset_bytes)
+            warm = min(1.0, tier_warm + mp.page_cache_eff
+                       * cache_cap / sp.dataset_bytes)
 
         items = num_batches * batch_size
 

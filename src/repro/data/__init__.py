@@ -1,4 +1,9 @@
 from repro.data.arena import ArenaBatch, SlabArena, SlabSlot  # noqa: F401
+from repro.data.cache import (  # noqa: F401
+    CachedStorage,
+    CacheTier,
+    plan_hot_chunks,
+)
 from repro.data.dataset import (  # noqa: F401
     Dataset,
     default_collate,

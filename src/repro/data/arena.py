@@ -136,6 +136,21 @@ class SlabArena:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def nbytes_in_use(self) -> int:
+        """Bytes currently pinned by allocated slots.
+
+        This is the number the cache tier deducts from its own budget so
+        arena + cache share one memory budget without double-counting
+        (DESIGN.md §7).  Asserts the arena itself never exceeds its
+        capacity-implied byte budget — ``resize`` shrinks lazily, so a
+        transient over-allocation is legal only while every surplus slot is
+        in use (frees drain immediately, on resize and on release)."""
+        with self._cond:
+            assert (self._allocated <= self.capacity
+                    or not self._free), \
+                (self._allocated, self.capacity, len(self._free))
+            return self._allocated * self._spec_nbytes
+
     # ---- spec --------------------------------------------------------------
     def matches(self, batch: Dict[str, np.ndarray]) -> bool:
         spec = {k: (np.asarray(v).shape, np.asarray(v).dtype)

@@ -82,6 +82,14 @@ class Dataset:
             return self.collate([self.transform(r) for r in raw])
         return self.collate([self.get(int(i)) for i in indices])
 
+    def with_storage(self, storage: Storage) -> "Dataset":
+        """Same transform/collate pipeline over a different storage — how
+        the loader derives its cache-tier read view (``CachedStorage``)
+        without copying transform wiring."""
+        return Dataset(storage, transform=self.transform,
+                       collate=self.collate,
+                       batch_transform=self._batch_transform)
+
     def fingerprint(self) -> str:
         p = self.storage.profile()
         return dataset_fingerprint(item_bytes=p.item_bytes,

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core.monitor import (MemoryBudget, MemoryMonitor, MemoryOverflow,
                                 estimate_loader_footprint)
 from repro.data.arena import SlabArena
+from repro.data.cache import CachedStorage, CacheTier
 from repro.data.dataset import Dataset
 from repro.data.prefetcher import DevicePrefetcher
 from repro.data.sampler import SamplerState, ShardedSampler
@@ -53,6 +54,13 @@ class LoaderParams:
     the per-batch verify-and-re-put).  Both hot-swap via ``apply_params``
     (locality latches at the next epoch boundary — see
     ``ShardedSampler.set_locality``).
+
+    Cache knob (DESIGN.md §7): ``cache_budget_bytes`` (0 = off) bounds the
+    host-level cross-epoch ``CacheTier`` that retains raw items so epochs
+    2+ stream at memory speed — the fourth DPT axis.  Hot-swaps via
+    ``apply_params`` like locality (the cache *plan* — the sampler's
+    hot/cold interleave — latches at an epoch boundary; the tier itself
+    is resized in place, never dropped).
     """
     num_workers: int = 0
     prefetch_factor: int = 2
@@ -65,6 +73,7 @@ class LoaderParams:
     donate_transfer: bool = False
     locality_chunk: int = 0
     staging_buffers: int = 2
+    cache_budget_bytes: int = 0
 
     def replace(self, **kw) -> "LoaderParams":
         return dataclasses.replace(self, **kw)
@@ -93,6 +102,11 @@ class TransferStats:
     coalesced_requests: int = 0
     coalesced_run_len: float = 0.0
     staging_hit_rate: Optional[float] = None
+    # cache effectiveness over the window (DESIGN.md §7): items served
+    # from a cache (the cross-epoch tier and/or the storage's own page
+    # cache) vs items that paid real IO.  Zero when nothing caches.
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     @property
     def bytes_per_second(self) -> float:
@@ -314,6 +328,9 @@ class LoaderStream:
             # spec — a ragged makeup chunk must not pin the arena shape
             self.loader._stream_arena.respec(
                 expected_leading=sampler.local_batch)
+        # the cache tier keys on ABSOLUTE sample indices, so a shard remap
+        # leaves every resident item valid: re-spec, never drop
+        self.loader._sync_cache_plan()
         self.reshards += 1
 
     def _indices(self):
@@ -408,6 +425,9 @@ class LoaderStream:
                 # a fleet push pins one common latch epoch instead
                 self.loader.sampler.set_locality(params.locality_chunk,
                                                  epoch=latch)
+                # the cache tier survives the swap (resized in place); the
+                # sampler's hot/cold interleave latches at the same epoch
+                self.loader._sync_cache_plan(epoch=latch)
                 self.swaps += 1
                 if self._prefetcher is not None:
                     self._prefetcher.set_depth(params.device_prefetch)
@@ -435,16 +455,82 @@ class DataLoader:
         self.sharding = sharding
         self._live_stream: Optional[LoaderStream] = None
         self._stream_arena: Optional[SlabArena] = None
+        self._cache_tier: Optional[CacheTier] = None
+        self._mean_item_nbytes: Optional[float] = None
         self.sampler = ShardedSampler(
             len(dataset), global_batch, shuffle=shuffle, seed=seed,
             host_index=host_index, host_count=host_count,
             state=sampler_state, locality_chunk=params.locality_chunk)
+        if params.cache_budget_bytes > 0:
+            self._sync_cache_plan()
+
+    # ---- cache tier (DESIGN.md §7) -----------------------------------------
+    @property
+    def cache_tier(self) -> Optional[CacheTier]:
+        return self._cache_tier
+
+    def _item_nbytes_mean(self) -> float:
+        if self._mean_item_nbytes is None:
+            st = self.dataset.storage
+            n = min(len(st), 16)
+            sizes = [st.item_nbytes(i) for i in range(n)] or [0]
+            self._mean_item_nbytes = float(np.mean(sizes))
+        return self._mean_item_nbytes
+
+    def _ensure_tier(self) -> int:
+        """Create or re-spec the cross-epoch cache tier from the current
+        params; returns the planned hot-chunk count.  The tier is owned by
+        the loader and persists across hot swaps and reshards — a budget
+        change is a resize (trim/grow), never a flush."""
+        p = self.params
+        budget = max(0, p.cache_budget_bytes)
+        chunk = max(1, p.locality_chunk)
+        if budget <= 0:
+            if self._cache_tier is not None:
+                self._cache_tier.reconfigure(budget_bytes=0, chunk=chunk)
+            return 0
+        if self._cache_tier is None:
+            # the live stream's slab arena shares the budget: its in-use
+            # bytes are deducted from the tier's effective budget (late
+            # bound — the arena is created lazily by the first stream)
+            def arena_bytes() -> int:
+                arena = self._stream_arena
+                return arena.nbytes_in_use() if arena is not None else 0
+
+            self._cache_tier = CacheTier(
+                budget, chunk=chunk, num_items=len(self.dataset),
+                item_nbytes=self._item_nbytes_mean(),
+                arena_bytes=arena_bytes)
+        else:
+            self._cache_tier.reconfigure(
+                budget_bytes=budget, chunk=chunk,
+                num_items=len(self.dataset),
+                item_nbytes=self._item_nbytes_mean())
+        return self._cache_tier.hot_chunks
+
+    def _sync_cache_plan(self, *, epoch: Optional[int] = None) -> None:
+        """Re-derive the tier spec AND the sampler's hot/cold interleave
+        from the current params.  Called wherever ``set_locality`` is —
+        the plan changes the epoch permutation, so it rides the exact same
+        epoch latch (a fleet pins one common epoch for both)."""
+        self.sampler.set_cache_plan(self._ensure_tier(), epoch=epoch)
+
+    def _cached_dataset(self, *, admit: bool) -> Dataset:
+        """The dataset as read through the cache tier (identity when the
+        tier is off or a process pool would fork it away)."""
+        if (self._cache_tier is None or self._cache_tier.budget_bytes <= 0
+                or self._uses_processes()):
+            return self.dataset
+        return self.dataset.with_storage(
+            CachedStorage(self.dataset.storage, self._cache_tier,
+                          admit=admit))
 
     # ---- checkpointable state ---------------------------------------------
     def state_dict(self):
         return {"sampler": self.sampler.state.to_dict(),
                 "params": dataclasses.asdict(self.params),
-                "locality": self.sampler.locality_state()}
+                "locality": self.sampler.locality_state(),
+                "cache_plan": self.sampler.cache_state()}
 
     def load_state_dict(self, d):
         self.sampler.state = SamplerState.from_dict(d["sampler"])
@@ -454,6 +540,11 @@ class DataLoader:
             self.sampler.load_locality(d["locality"])
         else:                          # pre-locality checkpoint
             self.sampler.force_locality(self.params.locality_chunk)
+        hot_k = self._ensure_tier()    # re-spec (never flush) the tier
+        if "cache_plan" in d:
+            self.sampler.load_cache_plan(d["cache_plan"])
+        else:                          # pre-cache checkpoint
+            self.sampler.force_cache_plan(hot_k)
 
     def with_params(self, params: LoaderParams) -> "DataLoader":
         """Set params for *future* pools (trial measurements, restarts).
@@ -467,6 +558,7 @@ class DataLoader:
         override.)"""
         self.params = params
         self.sampler.set_locality(params.locality_chunk)
+        self._sync_cache_plan()
         return self
 
     def apply_params(self, params: LoaderParams, *,
@@ -490,6 +582,7 @@ class DataLoader:
         else:
             self.sampler.set_locality(params.locality_chunk,
                                       epoch=locality_epoch)
+            self._sync_cache_plan(epoch=locality_epoch)
         return params
 
     def locality_latch_epoch(self) -> int:
@@ -572,12 +665,19 @@ class DataLoader:
             self._stream_arena.resize(p.arena_capacity())
         return self._stream_arena
 
-    def _pool(self, index_iter, *, for_stream: bool = False):
+    def _pool(self, index_iter, *, for_stream: bool = False,
+              dataset: Optional[Dataset] = None):
         monitor = MemoryMonitor(self.memory_budget)
         cls = ProcessWorkerPool if (self.params.use_processes
                                     and self.params.num_workers > 0) \
             else ThreadWorkerPool
-        pool = cls(self.dataset, index_iter,
+        if dataset is None:
+            # the live stream reads (and admits) through the cache tier;
+            # side-channel pools default to the plain dataset unless the
+            # caller hands in its own view (trial isolation)
+            dataset = self._cached_dataset(admit=True) if for_stream \
+                else self.dataset
+        pool = cls(dataset, index_iter,
                    num_workers=self.params.num_workers,
                    prefetch_factor=self.params.prefetch_factor,
                    monitor=monitor,
@@ -629,6 +729,17 @@ class DataLoader:
             out["coalesced_run_len"] = (
                 misses / c["coalesced_requests"]
                 if c["coalesced_requests"] else 0.0)
+        tier = self._cache_tier
+        if tier is not None and not self._uses_processes():
+            out.update(tier.counters())
+            if c is not None:
+                # tier hits never reach the storage at all; fold them into
+                # the request totals so cache effectiveness reads out of
+                # the same reads/cache_hits split controllers already use
+                # (reads - cache_hits, the true-IO miss count, is
+                # unchanged: tier hits add to both sides)
+                out["reads"] = c["reads"] + tier.hits
+                out["cache_hits"] = c["cache_hits"] + tier.hits
         stream = self._live_stream
         if stream is not None and stream._prefetcher is not None:
             hr = stream._prefetcher.staging_hit_rate
@@ -638,10 +749,25 @@ class DataLoader:
             out["arena_hit_rate"] = self._stream_arena.hit_rate
         return out
 
+    def _prewarm_tier(self, tier: CacheTier) -> None:
+        """Fill ``tier``'s hot set as a warm epoch would find it.
+
+        Reads bypass a latency-injecting wrapper's delay (via its
+        ``inner``) — the pre-warm models "these items were admitted in a
+        PREVIOUS epoch", whose IO cost was already paid there, so it must
+        not charge this trial's measurement window either."""
+        src = getattr(self.dataset.storage, "inner", self.dataset.storage)
+        n = min(tier.hot_chunks * tier.chunk, len(self.dataset.storage))
+        for start in range(0, n, 256):
+            idx = list(range(start, min(start + 256, n)))
+            for i, item in zip(idx, src.read_batch(idx)):
+                tier.admit(i, np.asarray(item))
+
     def measure_transfer_time(self, num_batches: int, *,
                               epoch: int = 0,
                               to_device: bool = True,
-                              locality_chunk: Optional[int] = None
+                              locality_chunk: Optional[int] = None,
+                              cache_budget_bytes: Optional[int] = None
                               ) -> TransferStats:
         """Wall-clock time to deliver ``num_batches`` (storage->host[->HBM]).
 
@@ -650,6 +776,13 @@ class DataLoader:
         overrides the sampler's scheduled chunking for this measurement
         only (how DPT trials price the locality axis without perturbing a
         live stream's epoch order).
+
+        ``cache_budget_bytes`` is the cache axis's measurement-only
+        override: ``None`` (default) reads through the LIVE tier without
+        admitting (hits are real, the trial never pollutes the cache);
+        ``0`` bypasses the tier entirely; ``B > 0`` measures a throwaway
+        tier of budget B — pre-warmed when ``epoch >= 1``, since a warm
+        epoch finds the hot set already resident.
         """
         # static pre-check (the paper's N/A cells fail before running)
         if self.memory_budget is not None:
@@ -662,6 +795,28 @@ class DataLoader:
             if est > self.memory_budget.loader_bytes * 4:
                 return TransferStats(float("inf"), 0, 0, overflowed=True)
 
+        # the trial's read view (cache axis): live tier read-only, plain
+        # dataset, or a throwaway tier — never admit into the live tier
+        trial_tier: Optional[CacheTier] = None
+        if self._uses_processes() or (cache_budget_bytes is not None
+                                      and cache_budget_bytes <= 0):
+            trial_dataset = self.dataset
+        elif cache_budget_bytes is None:
+            trial_dataset = self._cached_dataset(admit=False)
+            if trial_dataset is not self.dataset:
+                trial_tier = self._cache_tier
+        else:
+            chunk = locality_chunk if locality_chunk is not None \
+                else self.params.locality_chunk
+            trial_tier = CacheTier(int(cache_budget_bytes),
+                                   chunk=max(1, chunk),
+                                   num_items=len(self.dataset),
+                                   item_nbytes=self._item_nbytes_mean())
+            if epoch >= 1:     # a warm epoch finds the hot set resident
+                self._prewarm_tier(trial_tier)
+            trial_dataset = self.dataset.with_storage(
+                CachedStorage(self.dataset.storage, trial_tier, admit=True))
+
         idx_iter = _take(self.sampler.epoch_iter(epoch, locality_chunk),
                          num_batches)
         # snapshot BEFORE _pool(): worker threads start reading the moment
@@ -670,7 +825,9 @@ class DataLoader:
         # counters never move, so skip attribution rather than report 0.
         io_before = None if self._uses_processes() \
             else storage_io_counters(self.dataset.storage)
-        pool, monitor = self._pool(idx_iter)
+        tier_before = (trial_tier.hits, trial_tier.misses) \
+            if trial_tier is not None else (0, 0)
+        pool, monitor = self._pool(idx_iter, dataset=trial_dataset)
         total_bytes = 0
         n = 0
 
@@ -716,6 +873,17 @@ class DataLoader:
                       - (io_before["reads"] - io_before["cache_hits"]))
             stats.coalesced_requests = req
             stats.coalesced_run_len = misses / req if req else 0.0
+            stats.cache_hits = int(io_after["cache_hits"]
+                                   - io_before["cache_hits"])
+            stats.cache_misses = int(io_after.get("cache_misses", 0)
+                                     - io_before.get("cache_misses", 0))
+        if trial_tier is not None:
+            # tier hits never reach the storage counters; add them on top.
+            # Tier MISSES do (they forward to the inner storage), so only
+            # count them here when the storage kept no counters itself.
+            stats.cache_hits += trial_tier.hits - tier_before[0]
+            if io_before is None or io_after is None:
+                stats.cache_misses += trial_tier.misses - tier_before[1]
         if prefetcher is not None:
             stats.staging_hit_rate = prefetcher.staging_hit_rate
         return stats

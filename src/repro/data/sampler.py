@@ -97,6 +97,12 @@ class ShardedSampler:
         # to the next epoch boundary without forgetting the old order
         self._locality_schedule: List[Tuple[int, int]] = [
             (0, self.locality_chunk)]
+        # (first_epoch, hot_k) steps for the cache-aware order (DESIGN.md
+        # §7): hot_k > 0 interleaves the first hot_k index-space chunks
+        # (the cache tier's deterministic hot set) evenly among the cold
+        # ones, so cached hits are consumed while the prefetcher fills
+        # misses.  Same latch semantics as the locality schedule.
+        self._cache_schedule: List[Tuple[int, int]] = [(0, 0)]
         self._perm_cache: dict = {}
 
     def batches_per_epoch(self) -> int:
@@ -158,6 +164,49 @@ class ShardedSampler:
         self._locality_schedule = [(int(e), int(c)) for e, c in schedule]
         self.locality_chunk = self._locality_schedule[-1][1]
 
+    # ---- cache plan --------------------------------------------------------
+    @property
+    def cache_hot_chunks(self) -> int:
+        return self._cache_schedule[-1][1]
+
+    def hot_k_for_epoch(self, epoch: int) -> int:
+        """The cache hot-chunk count in effect for ``epoch``."""
+        hot_k = self._cache_schedule[0][1]
+        for e, k in self._cache_schedule:
+            if e > epoch:
+                break
+            hot_k = k
+        return hot_k
+
+    def set_cache_plan(self, hot_k: int, *,
+                       epoch: Optional[int] = None) -> int:
+        """Change the cache-aware interleave (0 = plan-blind order).
+
+        Epoch-latched exactly like ``set_locality`` — the plan changes the
+        epoch permutation, so an in-progress epoch must keep its order and
+        a fleet pins one common latch epoch for every host.  Returns the
+        effective first epoch of the new plan."""
+        hot_k = max(0, int(hot_k))
+        eff = self.natural_latch_epoch()
+        if epoch is not None:
+            eff = max(eff, int(epoch))
+        elif hot_k == self.cache_hot_chunks:
+            return eff
+        self._cache_schedule = [
+            (e, k) for e, k in self._cache_schedule if e < eff]
+        self._cache_schedule.append((eff, hot_k))
+        return eff
+
+    def force_cache_plan(self, hot_k: int) -> None:
+        """Reset the plan to ``hot_k`` for every epoch (restore path)."""
+        self._cache_schedule = [(0, max(0, int(hot_k)))]
+
+    def cache_state(self) -> List[List[int]]:
+        return [[int(e), int(k)] for e, k in self._cache_schedule]
+
+    def load_cache_plan(self, schedule: Sequence[Sequence[int]]) -> None:
+        self._cache_schedule = [(int(e), int(k)) for e, k in schedule]
+
     # ---- epoch orders -----------------------------------------------------
     @staticmethod
     def _chunked_perm(rng: np.random.Generator, n: int,
@@ -174,19 +223,54 @@ class ShardedSampler:
         # the padded tail chunk carries out-of-range slots: drop them
         return perm[perm < n] if n_chunks * chunk != n else perm
 
+    @staticmethod
+    def _interleaved_perm(rng: np.random.Generator, n: int, chunk: int,
+                          hot_k: int) -> np.ndarray:
+        """Chunked permutation whose first ``hot_k`` index-space chunks
+        (the cache tier's hot set) land at evenly spaced positions among
+        the cold chunks: cached hits are consumed throughout the epoch
+        while the prefetcher fills the cold misses between them.  Hot and
+        cold chunks are each shuffled, so this is still exactly a
+        permutation of [0, n) — coverage is untouched."""
+        n_chunks = -(-n // chunk)
+        hot_k = min(hot_k, n_chunks)
+        hot = rng.permutation(hot_k)
+        cold = hot_k + rng.permutation(n_chunks - hot_k)
+        order = np.empty(n_chunks, dtype=np.int64)
+        pos = (np.arange(hot_k) * n_chunks) // hot_k
+        mask = np.zeros(n_chunks, dtype=bool)
+        mask[pos] = True
+        order[pos] = hot
+        order[~mask] = cold
+        keys = rng.random((n_chunks, chunk))
+        base = np.arange(n_chunks * chunk).reshape(n_chunks, chunk)
+        within = np.take_along_axis(base, np.argsort(keys, axis=1), axis=1)
+        perm = within[order].reshape(-1)
+        return perm[perm < n] if n_chunks * chunk != n else perm
+
     def _epoch_perm(self, epoch: int,
                     chunk: Optional[int] = None) -> np.ndarray:
         if not self.shuffle:
             return np.arange(self.num_items)
         if chunk is None:
             chunk = self.chunk_for_epoch(epoch)
+            hot_k = self.hot_k_for_epoch(epoch)
+        else:
+            # explicit override = a DPT trial measuring a candidate chunk:
+            # plan-blind, so trials never depend on the live cache plan
+            hot_k = 0
         chunk = max(0, int(chunk))
-        key = (epoch, chunk, self.seed, self.num_items)
+        if chunk <= 1:
+            hot_k = 0   # a fully random order already interleaves hot/cold
+        key = (epoch, chunk, hot_k, self.seed, self.num_items)
         perm = self._perm_cache.get(key)
         if perm is None:
             rng = np.random.default_rng((self.seed, epoch))
             if chunk <= 1:
                 perm = rng.permutation(self.num_items)
+            elif hot_k > 0:
+                perm = self._interleaved_perm(rng, self.num_items, chunk,
+                                              hot_k)
             else:
                 perm = self._chunked_perm(rng, self.num_items, chunk)
             if len(self._perm_cache) >= 4:   # tiny memo: streams touch at

@@ -282,6 +282,7 @@ class LatencyStorage(Storage):
         self._sem = threading.Semaphore(concurrent_streams)
         self.reads = 0
         self.cache_hits = 0
+        self.cache_misses = 0
         self.batched_reads = 0
         self.coalesced_requests = 0
 
@@ -305,6 +306,8 @@ class LatencyStorage(Storage):
             cached = idx in self._cache
             if cached:
                 self.cache_hits += 1
+            else:
+                self.cache_misses += 1
         if cached:
             return self._cache[idx]
         nbytes = self.inner.item_nbytes(idx)
@@ -321,6 +324,7 @@ class LatencyStorage(Storage):
             self.batched_reads += 1
             hits = {i for i in indices if i in self._cache}
             self.cache_hits += len(hits)
+            self.cache_misses += len(indices) - len(hits)
         misses = [i for i in indices if i not in hits]
         runs = coalesce_runs(misses)
         for start, length in runs:
@@ -348,8 +352,8 @@ class LatencyStorage(Storage):
         return (self.reads - self.cache_hits) / self.coalesced_requests
 
 
-_IO_COUNTER_FIELDS = ("reads", "cache_hits", "batched_reads",
-                      "coalesced_requests")
+_IO_COUNTER_FIELDS = ("reads", "cache_hits", "cache_misses",
+                      "batched_reads", "coalesced_requests")
 
 
 def storage_io_counters(storage) -> Optional[Dict[str, float]]:

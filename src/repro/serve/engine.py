@@ -198,7 +198,11 @@ class BatchingFrontend:
     hookup becomes
     ``BatchMixMonitor(on_drift=lambda mix: agent.notify_drift("batch-mix"))``
     — the coordinator then runs the fleet-wide re-consensus instead of a
-    host-local retune."""
+    host-local retune.  A re-consensus may also carry the cross-epoch
+    cache budget (DESIGN.md §7): the push arrives through the same
+    ``agent.apply_params`` hot swap and resizes the feature loader's
+    cache tier in place — a long-lived serving host keeps its warm
+    entries across the retune."""
 
     def __init__(self, engine: ServeEngine, *, max_wait_s: float = 0.01,
                  mix_monitor: Optional[BatchMixMonitor] = None,

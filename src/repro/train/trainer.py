@@ -64,6 +64,12 @@ class TrainerConfig:
     # must slice the SAME epoch permutation, so locality can only change
     # uniformly via the coordinator, never from a per-host tune).
     autotune_locality_chunks: Optional[tuple] = None
+    # candidate cache_budget_bytes values for the startup grid's fourth
+    # axis (DESIGN.md §7).  None keeps the cache tier off the search;
+    # include 0 in the tuple so "no cache" stays a candidate.  Single-host
+    # startup only, same as locality: on a fleet the budget changes
+    # uniformly through the coordinator (FleetConfig.cache_budgets).
+    autotune_cache_budgets: Optional[tuple] = None
     # the online locality loop (DESIGN.md §6): when True, an
     # AdaptiveLocalityController watches the live coalesced-run-length
     # counters and shrinks locality_chunk when the storage stops
@@ -128,9 +134,19 @@ class Trainer:
             # any other strategy the axis is unsearched and the result's
             # locality_chunk=0 must not be force-applied over the user's
             locality_axis = None
+        cache_axis = self.cfg.autotune_cache_budgets
+        if cache_axis and (self.loader.sampler.host_count > 1
+                           or strategy != "grid"):
+            # same guards as locality: the cache plan shapes the epoch
+            # permutation (interleaved hot chunks), so a sharded fleet
+            # changes the budget uniformly via the coordinator; and only
+            # the grid strategy sweeps the axis
+            cache_axis = None
         cached = None if force else cache.get_params(
             mfp, dfp, self.loader.global_batch,
-            require_locality=bool(locality_axis))
+            require_locality=bool(locality_axis),
+            require_cache=bool(cache_axis),
+            with_cache=bool(cache_axis))
         if cached is not None:
             rep = {"num_workers": cached[0], "prefetch_factor": cached[1]}
             if locality_axis:
@@ -138,13 +154,17 @@ class Trainer:
                 # axis — a 2-axis run must not silently reset a user-set
                 # locality_chunk to a stale cached value
                 rep["locality_chunk"] = cached[2]
+            if cache_axis:
+                rep["cache_budget_bytes"] = cached[3]
             params = self.loader.params.replace(**rep)
             self.loader.with_params(params)
             return params
         ev = LoaderEvaluator(self.loader, to_device=True)
         search_cfg = DPTConfig(max_prefetch=self.cfg.autotune_max_prefetch,
                                locality_chunks=(tuple(locality_axis)
-                                                if locality_axis else None))
+                                                if locality_axis else None),
+                               cache_budgets=(tuple(cache_axis)
+                                              if cache_axis else None))
         search_cfg = dataclasses.replace(search_cfg, num_batches=(
             adaptive_budget(search_cfg, self.cfg.autotune_budget_batches)))
         if strategy == "grid":
@@ -168,6 +188,8 @@ class Trainer:
                "prefetch_factor": result.nprefetch}
         if locality_axis:
             rep["locality_chunk"] = result.locality_chunk
+        if cache_axis:
+            rep["cache_budget_bytes"] = result.cache_budget_bytes
         params = self.loader.params.replace(**rep)
         self.loader.with_params(params)
         return params
@@ -177,6 +199,8 @@ class Trainer:
         # set; single-host only (fleet mode never builds a local tuner,
         # and a sharded loader must change locality via the coordinator)
         chunks = self.cfg.autotune_locality_chunks \
+            if self.loader.sampler.host_count == 1 else None
+        budgets = self.cfg.autotune_cache_budgets \
             if self.loader.sampler.host_count == 1 else None
         return OnlineTuner(
             self.loader,
@@ -188,7 +212,8 @@ class Trainer:
                 cooldown_steps=self.cfg.retune_cooldown_steps,
                 retune_budget_batches=self.cfg.autotune_budget_batches,
                 max_prefetch=self.cfg.autotune_max_prefetch,
-                locality_chunks=(tuple(chunks) if chunks else None)))
+                locality_chunks=(tuple(chunks) if chunks else None),
+                cache_budgets=(tuple(budgets) if budgets else None)))
 
     def _make_locality_controller(self):
         """The counter-driven side of the online locality loop: applies

@@ -38,7 +38,9 @@ from repro.tuning.strategies import (  # noqa: F401
 from repro.tuning.locality import (  # noqa: F401
     AdaptiveLocalityConfig,
     AdaptiveLocalityController,
+    cache_win,
     locality_win,
+    sweep_cache,
     sweep_locality,
 )
 from repro.tuning.online import (  # noqa: F401

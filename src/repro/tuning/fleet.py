@@ -131,6 +131,13 @@ class FleetConfig:
     # common latch epoch on every host.  None keeps re-consensus on
     # (workers, prefetch).
     locality_chunks: Optional[Tuple[int, ...]] = None
+    # online cache axis (DESIGN.md §7): candidate cross-epoch cache budgets
+    # a re-consensus may propose.  The budget changes UNIFORMLY too — not
+    # for correctness (each host's tier only serves its own shard) but for
+    # goodput: a lockstep fleet runs at the max host time, so a budget only
+    # helps when every host carries it.  Scored by the fleet max at a warm
+    # epoch; None keeps re-consensus off the axis.
+    cache_budgets: Optional[Tuple[int, ...]] = None
     # elastic re-mesh bookkeeping (plan_remesh)
     devices_per_host: int = 1
     model_axis: int = 1
@@ -247,14 +254,20 @@ class HostAgent:
     # ---- act (coordinator-driven) ------------------------------------------
     def apply_params(self, nworker: int, nprefetch: int,
                      locality_chunk: Optional[int] = None, *,
-                     locality_epoch: Optional[int] = None) -> LoaderParams:
-        """Push tuned params into the live loader.  ``locality_chunk`` is
-        only ever set by a fleet-uniform push, which also pins the common
-        ``locality_epoch`` every host latches the new chunk at."""
+                     locality_epoch: Optional[int] = None,
+                     cache_budget_bytes: Optional[int] = None
+                     ) -> LoaderParams:
+        """Push tuned params into the live loader.  ``locality_chunk`` and
+        ``cache_budget_bytes`` are only ever set by a fleet-uniform push,
+        which also pins the common ``locality_epoch`` every host latches
+        the new chunk (and cache plan) at.  A budget push resizes the
+        host's live tier in place — warm entries survive the swap."""
         params = self.loader.params.replace(
             num_workers=nworker, prefetch_factor=nprefetch)
         if locality_chunk is not None:
             params = params.replace(locality_chunk=locality_chunk)
+        if cache_budget_bytes is not None:
+            params = params.replace(cache_budget_bytes=cache_budget_bytes)
         return self.loader.apply_params(params,
                                         locality_epoch=locality_epoch)
 
@@ -366,7 +379,17 @@ class FleetCoordinator:
             agent.loader.sampler.load_locality(
                 src.sampler.locality_state())
             agent.loader.params = agent.loader.params.replace(
-                locality_chunk=src.params.locality_chunk)
+                locality_chunk=src.params.locality_chunk,
+                cache_budget_bytes=src.params.cache_budget_bytes)
+            # same staleness risk for the cache plan: the interleaved
+            # epoch order depends on (chunk, hot_k), so the joiner must
+            # slice the same permutation as its peers — copy the full
+            # (epoch -> hot_k) schedule, then size the joiner's own
+            # (empty) tier to the copied budget.  The sync is a schedule
+            # no-op when the computed hot_k matches the copied plan.
+            agent.loader.sampler.load_cache_plan(
+                src.sampler.cache_state())
+            agent.loader._sync_cache_plan()
         agent.loader.reshard(new_count, new_count - 1)
         self.register(agent)
         self.reshards += 1
@@ -497,7 +520,8 @@ class FleetCoordinator:
         cell = fleet.uniform_params if won \
             else self._majority_cell(agents)
         chunk_win = self._locality_consensus(agents, cell)
-        applied = won or chunk_win is not None
+        budget_win = self._cache_consensus(agents, cell)
+        applied = won or chunk_win is not None or budget_win is not None
         self._backoff = 1 if applied else min(self.cfg.max_backoff,
                                               self._backoff * 2)
         event = {"kind": "consensus", "reason": reason,
@@ -509,19 +533,23 @@ class FleetCoordinator:
                  # current cells and only the chunk changes)
                  "cell_applied": won,
                  "locality_chunk": chunk_win,
+                 "cache_budget_bytes": budget_win,
                  "applied": applied}
         self.events.append(event)
         if applied:
-            # one common latch epoch: every host adopts the new chunk for
-            # the SAME epoch even when producers straddle a boundary
-            latch = max(a.loader.locality_latch_epoch()
-                        for a in agents) if chunk_win is not None else None
+            # one common latch epoch: every host adopts the new chunk AND
+            # the new cache plan for the SAME epoch even when producers
+            # straddle a boundary (the interleaved order depends on both)
+            latch = max(a.loader.locality_latch_epoch() for a in agents) \
+                if (chunk_win is not None or budget_win is not None) \
+                else None
             for a in agents:
                 nw, npf = fleet.uniform_params if won else (
                     a.loader.params.num_workers,
                     a.loader.params.prefetch_factor)
                 a.apply_params(nw, npf, locality_chunk=chunk_win,
-                               locality_epoch=latch)
+                               locality_epoch=latch,
+                               cache_budget_bytes=budget_win)
         return event
 
     @staticmethod
@@ -573,6 +601,47 @@ class FleetCoordinator:
             return None
         if cur not in feasible:
             return best                   # current chunk infeasible somewhere
+        if feasible[best] <= (1.0 - self.cfg.min_improvement) * feasible[cur]:
+            return best
+        return None
+
+    def _cache_consensus(self, agents: Sequence[HostAgent],
+                         cell: Tuple[int, int]) -> Optional[int]:
+        """Uniform cache-budget decision (DESIGN.md §7): per-host budget
+        sweeps at ``cell`` measured at a WARM epoch (a cross-epoch cache
+        prices at 0 cold), aggregated by the fleet max; the winner must
+        beat the current budget's own fleet time by ``min_improvement``
+        and be feasible on every host.  Returns the winning budget or
+        None (keep)."""
+        if not self.cfg.cache_budgets:
+            return None
+        from repro.tuning.locality import sweep_cache
+        cfg = self._search_config()
+        cur = agents[0].loader.params.cache_budget_bytes
+        originals = [a.loader.params for a in agents]
+        try:
+            per_host = [sweep_cache(
+                a.evaluator, nworker=cell[0], nprefetch=cell[1],
+                budgets=self.cfg.cache_budgets, current_budget=cur,
+                num_batches=cfg.num_batches,
+                epoch=max(1, cfg.epoch)) for a in agents]
+        finally:
+            for a, orig in zip(agents, originals):
+                a.loader.with_params(orig)
+        fleet_time: Dict[int, float] = {}
+        for trials in per_host:
+            for budget, t in trials.items():
+                fleet_time[budget] = max(fleet_time.get(budget, 0.0),
+                                         t.seconds)
+        feasible = {b: s for b, s in fleet_time.items()
+                    if math.isfinite(s)}
+        if not feasible:
+            return None
+        best = min(feasible, key=feasible.get)
+        if best == cur:
+            return None
+        if cur not in feasible:
+            return best                  # current budget infeasible somewhere
         if feasible[best] <= (1.0 - self.cfg.min_improvement) * feasible[cur]:
             return best
         return None

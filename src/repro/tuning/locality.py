@@ -94,6 +94,62 @@ def locality_win(trials: Dict[int, Trial], current_chunk: int, *,
     return None
 
 
+def sweep_cache(evaluator, *, nworker: int, nprefetch: int,
+                budgets: Sequence[int], current_budget: int,
+                num_batches: int, epoch: int = 1) -> Dict[int, Trial]:
+    """Price candidate ``cache_budget_bytes`` values at one (worker,
+    prefetch) cell — the cache analogue of :func:`sweep_locality`.
+
+    Measured at a WARM epoch by default: a cross-epoch cache only pays off
+    from epoch 1 on, so pricing it cold would always pick 0.  Candidates
+    go through the evaluator's measurement-only override (throwaway tiers;
+    the live tier is never polluted).
+    """
+    trials: Dict[int, Trial] = {}
+    for budget in dict.fromkeys([max(0, int(current_budget)),
+                                 *(max(0, int(b)) for b in budgets)]):
+        try:
+            stats = evaluator(nworker, nprefetch, num_batches=num_batches,
+                              epoch=epoch, cache_budget_bytes=budget)
+            if stats.overflowed:
+                raise MemoryOverflow("overflowed")
+            trials[budget] = Trial(
+                nworker, nprefetch, stats.seconds,
+                peak_bytes=stats.peak_loader_bytes,
+                batch_seconds=getattr(stats, "batch_seconds", None),
+                cache_budget_bytes=budget)
+        except MemoryOverflow:
+            trials[budget] = Trial(nworker, nprefetch, math.inf,
+                                   overflowed=True,
+                                   cache_budget_bytes=budget)
+    return trials
+
+
+def cache_win(trials: Dict[int, Trial], current_budget: int, *,
+              min_improvement: float = 0.05) -> Optional[int]:
+    """The cache-axis win test — same contract as :func:`locality_win`:
+    the argmin budget must beat the CURRENT budget's own measured trial
+    (Welch over per-batch samples when available, else the relative
+    threshold).  Returns the winning budget, or None."""
+    current_budget = max(0, int(current_budget))
+    finite = {b: t for b, t in trials.items() if math.isfinite(t.seconds)}
+    if not finite:
+        return None
+    best = min(finite, key=lambda b: finite[b].seconds)
+    ref = trials.get(current_budget)
+    if best == current_budget:
+        return None
+    if ref is None or not math.isfinite(ref.seconds):
+        return best                       # nothing measured to defend
+    ref_s = steady_samples(ref.batch_seconds)
+    win_s = steady_samples(finite[best].batch_seconds)
+    if len(ref_s) >= 2 and len(win_s) >= 2:
+        return best if welch_wins(ref_s, win_s) else None
+    if finite[best].seconds <= (1.0 - min_improvement) * ref.seconds:
+        return best
+    return None
+
+
 # --------------------------------------------------------------------------
 # counter-driven adaptive chunk sizing
 # --------------------------------------------------------------------------

@@ -71,6 +71,12 @@ class OnlineTunerConfig:
     # candidates at the winning cell through the measurement-only override
     # and a significant winner rides the same hot swap (epoch-latched).
     locality_chunks: Optional[Tuple[int, ...]] = None
+    # online cache axis (DESIGN.md §7): candidate cross-epoch cache budgets
+    # a retune may propose.  Same ownership split as locality: None leaves
+    # the knob to the startup grid.  Candidates are priced at a WARM epoch
+    # through throwaway measurement tiers (the live tier is never polluted)
+    # and a winner resizes the live tier in place via apply_params.
+    cache_budgets: Optional[Tuple[int, ...]] = None
 
 
 class GoodputMonitor:
@@ -269,6 +275,34 @@ class RetuneExecutor:
                            min_improvement=self.cfg.min_improvement)
         return win, list(trials.values())
 
+    def sweep_cache(self, nworker: int, nprefetch: int
+                    ) -> Tuple[Optional[int], List[Trial]]:
+        """Price the configured cache budgets at one cell (DESIGN.md §7).
+
+        Same contract as :meth:`sweep_locality`, one difference: budgets
+        are measured at a WARM epoch (max(1, cfg.epoch)) because a
+        cross-epoch cache only pays off once it has something to serve —
+        cold pricing would always pick 0.  Trials run on throwaway tiers
+        (the evaluator's measurement-only override), so the live tier's
+        contents are never perturbed; loader params are restored.
+        """
+        if not self.cfg.cache_budgets:
+            return None, []
+        from repro.tuning.locality import cache_win, sweep_cache
+        orig = self.loader.params
+        cfg = self.search_config()
+        try:
+            trials = sweep_cache(
+                self.evaluator, nworker=nworker, nprefetch=nprefetch,
+                budgets=self.cfg.cache_budgets,
+                current_budget=orig.cache_budget_bytes,
+                num_batches=cfg.num_batches, epoch=max(1, cfg.epoch))
+        finally:
+            self.loader.with_params(orig)
+        win = cache_win(trials, orig.cache_budget_bytes,
+                        min_improvement=self.cfg.min_improvement)
+        return win, list(trials.values())
+
     def apply(self, result: DPTResult,
               params: Optional[LoaderParams] = None) -> LoaderParams:
         """Hot-swap the winner into the live stream and persist it.
@@ -305,6 +339,7 @@ class RetuneExecutor:
                 result, nworker=params.num_workers,
                 nprefetch=params.prefetch_factor,
                 locality_chunk=params.locality_chunk,
+                cache_budget_bytes=params.cache_budget_bytes,
                 optimal_time=opt)
             self.cache.put(self.machine_fp, self.dataset_fp,
                            self.loader.global_batch, cached)
@@ -397,13 +432,20 @@ class OnlineTuner:
             else (orig.num_workers, orig.prefetch_factor)
         chunk_win, chunk_trials = self.executor.sweep_locality(*cell)
         result.trials.extend(chunk_trials)
-        self.policy.record_outcome(won=won or chunk_win is not None)
-        if not won and chunk_win is None:
+        # the online cache axis (DESIGN.md §7): price budget candidates at
+        # the same cell — a winner resizes the live tier in place via the
+        # same hot swap (the tier survives apply_params)
+        budget_win, budget_trials = self.executor.sweep_cache(*cell)
+        result.trials.extend(budget_trials)
+        self.policy.record_outcome(won=won or chunk_win is not None
+                                   or budget_win is not None)
+        if not won and chunk_win is None and budget_win is None:
             self.history.append({
                 "step": self.monitor.steps, "reason": reason,
                 "outcome": "kept",
                 "params": (orig.num_workers, orig.prefetch_factor),
                 "locality_chunk": orig.locality_chunk,
+                "cache_budget_bytes": orig.cache_budget_bytes,
                 "optimal_time": result.optimal_time,
                 "measurements": len(result.trials),
                 "search_s": time.perf_counter() - t0,
@@ -413,6 +455,8 @@ class OnlineTuner:
             num_workers=result.nworker, prefetch_factor=result.nprefetch)
         if chunk_win is not None:
             params = params.replace(locality_chunk=chunk_win)
+        if budget_win is not None:
+            params = params.replace(cache_budget_bytes=budget_win)
         params = self.executor.apply(result, params)
         self.retunes += 1
         self.history.append({
@@ -420,6 +464,7 @@ class OnlineTuner:
             "outcome": "applied",
             "params": (params.num_workers, params.prefetch_factor),
             "locality_chunk": params.locality_chunk,
+            "cache_budget_bytes": params.cache_budget_bytes,
             "optimal_time": result.optimal_time,
             "measurements": len(result.trials),
             "search_s": time.perf_counter() - t0,

@@ -42,8 +42,10 @@ class GridSearch:
 
     Beyond paper: when ``config.locality_chunks`` is set, the same sweep
     repeats per candidate sampler chunk size — a third, outermost axis
-    (DESIGN.md §5).  Left unset (the default), the loop is exactly
-    Algorithm 1 and the evaluator never sees a locality kwarg.
+    (DESIGN.md §5).  ``config.cache_budgets`` adds the fourth axis the
+    same way (DESIGN.md §7), outermost of all.  Left unset (the default),
+    the loop is exactly Algorithm 1 and the evaluator never sees a
+    locality or cache kwarg.
     """
 
     def tune(self, rec: TrialRecorder, *,
@@ -51,28 +53,33 @@ class GridSearch:
         cfg = rec.config
         N, G = cfg.resolve()
         chunks = cfg.locality_chunks if cfg.locality_chunks else (None,)
-        n_worker, n_prefetch, n_chunk = 0, 0, 0
+        budgets = cfg.cache_budgets if cfg.cache_budgets else (None,)
+        n_worker, n_prefetch, n_chunk, n_budget = 0, 0, 0, 0
         optimal_time = math.inf
-        for c in chunks:                               # beyond-paper axis
-            for i in worker_rungs(N, G):               # lines 4-5
-                j = cfg.min_prefetch                   # line 6
-                while j <= cfg.max_prefetch:           # line 7
-                    t = rec.seconds(i, j,              # lines 8, 12
-                                    locality_chunk=c)
-                    if not math.isfinite(t):           # lines 9-10
-                        break
-                    if t < optimal_time:               # lines 14-17
-                        optimal_time = t
-                        n_worker, n_prefetch = i, j
-                        n_chunk = c or 0
-                    j += 1                             # line 19
+        for b in budgets:                              # beyond-paper axis 4
+            for c in chunks:                           # beyond-paper axis 3
+                for i in worker_rungs(N, G):           # lines 4-5
+                    j = cfg.min_prefetch               # line 6
+                    while j <= cfg.max_prefetch:       # line 7
+                        t = rec.seconds(i, j,          # lines 8, 12
+                                        locality_chunk=c,
+                                        cache_budget_bytes=b)
+                        if not math.isfinite(t):       # lines 9-10
+                            break
+                        if t < optimal_time:           # lines 14-17
+                            optimal_time = t
+                            n_worker, n_prefetch = i, j
+                            n_chunk = c or 0
+                            n_budget = b or 0
+                        j += 1                         # line 19
         default_time = None
         if measure_default:
             dw, dp = default_params(N)
             default_time = rec.seconds(dw, dp, record=False)
         return rec.result(n_worker, n_prefetch, optimal_time,
                           default_time=default_time,
-                          locality_chunk=n_chunk)
+                          locality_chunk=n_chunk,
+                          cache_budget_bytes=n_budget)
 
 
 @register_strategy("successive_halving")

@@ -49,12 +49,24 @@ def make_cold_dataset(n, *, latency_s=1e-3, cache_bytes=0, bandwidth=1e9,
     return Dataset(storage, transform=image_transform)
 
 
-def make_table_evaluator(fn, *, locality=False):
+def make_table_evaluator(fn, *, locality=False, cache=False):
     """Synthetic evaluator over a (nworker, nprefetch[, chunk]) table;
-    records call count and per-call budgets like the real ones."""
+    records call count and per-call budgets like the real ones.  The
+    ``cache`` variant takes the full 4-axis cell plus the epoch —
+    ``fn(i, j, chunk, budget, epoch)`` — so tests can price the cache
+    axis warm vs cold."""
     from repro.data.loader import TransferStats
 
-    if locality:
+    if cache:
+        def ev(i, j, *, num_batches=16, epoch=0, locality_chunk=None,
+               cache_budget_bytes=None):
+            ev.calls += 1
+            ev.budgets.append(num_batches)
+            ev.epochs.append(epoch)
+            return TransferStats(fn(i, j, locality_chunk or 0,
+                                    cache_budget_bytes or 0, epoch),
+                                 num_batches, 0)
+    elif locality:
         def ev(i, j, *, num_batches=16, epoch=0, locality_chunk=None):
             ev.calls += 1
             ev.budgets.append(num_batches)
@@ -67,6 +79,7 @@ def make_table_evaluator(fn, *, locality=False):
             return TransferStats(fn(i, j), num_batches, 0)
     ev.calls = 0
     ev.budgets = []
+    ev.epochs = []
     return ev
 
 

@@ -176,6 +176,151 @@ def test_chunked_epoch_byte_identical_multiset_property(chunk, hosts, seed):
 
 
 # --------------------------------------------------------------------------
+# the cache dimension (DESIGN.md §7): the cross-epoch tier and the
+# cache-aware interleaved order must never touch coverage or bytes
+# --------------------------------------------------------------------------
+# off / a few hot chunks / everything fits
+_BUDGETS = (0, 16 * 1024, 1 << 40)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.sampled_from((4, 16, 64)),
+       st.integers(0, 12), st.integers(2, 5),
+       st.sampled_from(["host_major", "strided"]),
+       st.integers(0, 99), st.integers(0, 10**6))
+def test_cache_plan_coverage_reshard_checkpoint_property(
+        old_hosts, new_hosts, chunk, hot_k, bpe, layout, cut, seed):
+    """The cache-aware interleaved order holds the same invariants as the
+    plain chunked order: permutation-ness, exact once-per-epoch coverage
+    across a mid-epoch reshard, and checkpoint determinism — for ANY
+    (chunk, hot_k) plan, including hot_k past the chunk count."""
+    gb = 12
+    n = gb * bpe
+    barrier = cut % (bpe + 1)
+
+    def shards(hosts):
+        out = _shards(n, gb, hosts, chunk=chunk, layout=layout, seed=seed)
+        for s in out:
+            s.force_cache_plan(hot_k)
+        return out
+
+    probe = shards(1)[0]
+    for epoch in (0, 1):
+        assert sorted(probe._epoch_perm(epoch).tolist()) == list(range(n))
+    # a trial override stays plan-blind: same order as a plan-free sampler
+    plain = _shards(n, gb, 1, chunk=chunk, layout=layout, seed=seed)[0]
+    assert probe._epoch_perm(0, chunk).tolist() \
+        == plain._epoch_perm(0, chunk).tolist()
+
+    old = shards(old_hosts)
+    seen = []
+    for b in range(barrier):
+        for s in old:
+            seen.extend(s.local_indices(0, b).tolist())
+    for h, s in enumerate(old[:min(old_hosts, new_hosts)]):
+        s.reshard(new_hosts, h)
+    survivors = old[:min(old_hosts, new_hosts)]
+    joined = shards(new_hosts)[len(survivors):]
+    for b in range(barrier, bpe):
+        for s in survivors + joined:
+            seen.extend(s.local_indices(0, b).tolist())
+    assert sorted(seen) == list(range(n))
+
+    # checkpoint round-trip with the plan in effect
+    live = shards(old_hosts)[0]
+    it = iter(live)
+    for _ in range((cut * 7 + seed) % bpe):
+        next(it)
+    saved = live.state.to_dict()
+    plan = live.cache_state()
+    live.reshard(new_hosts, 0)
+    expect = [next(it).tolist() for _ in range(3)]
+    restored = ShardedSampler(n, gb, seed=seed, host_index=0,
+                              host_count=new_hosts, locality_chunk=chunk,
+                              layout=layout,
+                              state=SamplerState.from_dict(saved))
+    restored.load_cache_plan(plan)
+    again = [next(iter(restored)).tolist() for _ in range(3)]
+    assert expect == again
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from((0, 8, 16)), st.sampled_from(_BUDGETS[1:]),
+       st.integers(0, 10**6))
+def test_cached_stream_byte_identical_multiset_property(chunk, budget, seed):
+    """A cache-tier stream (any budget) delivers exactly the cache-off
+    stream's sample bytes in EVERY epoch — cold (admitting) and warm
+    (serving hits).  The interleave reorders an epoch; it never
+    re-samples, drops, or serves stale items."""
+    n, gb = 96, 24
+    bpe = n // gb
+
+    def stream_bytes(cache_budget):
+        dl = DataLoader(make_index_dataset(n), gb,
+                        params=LoaderParams(
+                            num_workers=1, locality_chunk=chunk,
+                            cache_budget_bytes=cache_budget),
+                        shuffle=True, seed=seed)
+        out = {0: [], 1: []}
+        s = dl.stream(to_device=False)
+        try:
+            for epoch in (0, 1):
+                for _ in range(bpe):
+                    out[epoch].extend(r.tobytes()
+                                      for r in np.asarray(next(s)["x"]))
+        finally:
+            s.close()
+        return out
+
+    base = stream_bytes(0)
+    cached = stream_bytes(budget)
+    for epoch in (0, 1):
+        assert sorted(base[epoch]) == sorted(cached[epoch])
+
+
+def test_cached_loader_checkpoint_roundtrip_warm():
+    """Checkpoint + restore with a WARM cache tier: the restored loader
+    reproduces the live continuation exactly (the cache plan rides the
+    state dict; the restored tier starts cold and only changes timing,
+    never order or bytes)."""
+    n, gb = 96, 24
+    bpe = n // gb
+
+    def make():
+        return DataLoader(make_index_dataset(n), gb,
+                          params=LoaderParams(
+                              num_workers=1, locality_chunk=8,
+                              cache_budget_bytes=1 << 40),
+                          shuffle=True, seed=3)
+
+    live = make()
+    s = live.stream(to_device=False)
+    try:
+        for _ in range(bpe + 1):         # into epoch 1: the tier is warm
+            next(s)
+        assert live.cache_tier is not None and len(live.cache_tier) > 0
+        saved = live.state_dict()
+        # the producer runs ahead of the consumer (prefetch): checkpoint
+        # the CONSUMED position, like the trainer does
+        saved["sampler"] = SamplerState.from_absolute(
+            s.position, bpe).to_dict()
+        expect = [sorted(np.asarray(next(s)["x"]).reshape(-1).tolist())
+                  for _ in range(3)]
+    finally:
+        s.close()
+
+    restored = make()
+    restored.load_state_dict(saved)
+    s2 = restored.stream(to_device=False)
+    try:
+        again = [sorted(np.asarray(next(s2)["x"]).reshape(-1).tolist())
+                 for _ in range(3)]
+    finally:
+        s2.close()
+    assert expect == again
+
+
+# --------------------------------------------------------------------------
 # seeded fault-injection matrix: the fleet under randomized timelines
 # --------------------------------------------------------------------------
 def _build_timeline(rng, *, max_step, timeout_rounds):
