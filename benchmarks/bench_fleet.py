@@ -27,6 +27,22 @@ uploads it as a workflow artifact):
   epoch spanning the elastic transition: the dead host's pre-death
   deliveries + survivors' old-shard batches + makeup + new-shard batches.
   Asserted over the full index multiset, not sampled.
+
+Two further scenarios ride the transport-mode control plane (ISSUE 7,
+DESIGN.md §8), gated under ``FLEET_HA_GATE_MIN``:
+
+* **failover** — the same real-machinery fleet attached over a faulty
+  message transport, with a lease-backed standby.  The leader crashes
+  mid-epoch; during an outage of 2x the heartbeat timeout the hosts keep
+  streaming on latched params (goodput gate: >= 90% of steady state), the
+  standby promotes with a fresh fencing epoch, every post-failover
+  command carries the new fence, the deposed leader's commands are
+  rejected, and the epoch still covers exactly once.
+* **128-host stress** — a FleetSchedule run at 128 transport-attached
+  hosts (degrade events + a 64-host correlated power loss) completes its
+  reshard, while steady-state heartbeat traffic stays O(hosts): one
+  report per host per round, delta-encoded smaller than the full report
+  after the first beat.
 """
 from __future__ import annotations
 
@@ -45,11 +61,16 @@ from repro.core.dpt import DPTConfig, MultiHostDPT
 from repro.core.evaluators import LoaderEvaluator
 from repro.data import DataLoader, Dataset, LoaderParams
 from repro.data.storage import ArrayStorage, LatencyStorage
-from repro.tuning import FleetConfig, FleetCoordinator, HostAgent
+from repro.tuning import (FaultSpec, FaultyTransport, FleetConfig,
+                          FleetCoordinator, HostAgent, LeaderLease,
+                          LinkConfig, LocalTransport, SnapshotStore,
+                          StaleLeaderError, connect_host)
+from repro.tuning.fleet import CoordinatorReplica, CoordinatorServer
 
-TITLE = "Elastic fleet: degrade + kill a host mid-run (recovery gate)"
-PAPER_REF = "beyond paper (fleet control plane, DESIGN.md §4)"
+TITLE = "Elastic fleet: degrade/kill + coordinator failover (HA gates)"
+PAPER_REF = "beyond paper (fleet control plane, DESIGN.md §4, §8)"
 GATE_RECOVERY = 0.80
+GATE_FAILOVER = 0.90                # outage goodput vs steady state
 ROOT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json")
 
 GLOBAL_BATCH = 12
@@ -141,11 +162,216 @@ def _reference_rate(n_items: int, quick: bool, window: int) -> Dict:
     return {"rate": rate, "params": fleet.uniform_params}
 
 
+def _ha_failover(quick: bool) -> Dict:
+    """Leader crash mid-epoch over a faulty transport: hosts must keep
+    streaming through an outage of 2x the heartbeat timeout, the standby
+    must promote with a fresh fence, and the epoch must still cover
+    exactly once.  Returns the measured facts; the caller gates them."""
+    n_items = 720 if quick else 1440
+    bpe = n_items // GLOBAL_BATCH
+    warm = 6 if quick else 10
+    window = 12 if quick else 24
+    outage = int(2 * HEARTBEAT_TIMEOUT)
+
+    clock = [0.0]
+    ck = lambda: clock[0]  # noqa: E731
+    transport = FaultyTransport(FaultSpec(drop=0.02, delay=0.01,
+                                          duplicate=0.02, reply_drop=0.02,
+                                          seed=3))
+    lease = LeaderLease(ttl_s=HEARTBEAT_TIMEOUT, clock=ck)
+    store = SnapshotStore()
+    coord = FleetCoordinator(
+        config=FleetConfig(heartbeat_timeout_s=HEARTBEAT_TIMEOUT,
+                           cooldown_steps=8, warmup_steps=4,
+                           **_search_cfg(quick)),
+        clock=ck)
+    server = [CoordinatorServer(coord, transport, owner="coord-0",
+                                lease=lease, store=store)]
+    replica = CoordinatorReplica(transport, lease, store,
+                                 owner="coord-standby", clock=ck)
+
+    loaders = [_make_host(n_items, h, 3, BASE_LATENCY_S) for h in range(3)]
+    agents, streams = [], []
+    for h, dl in enumerate(loaders):
+        agents.append(connect_host(
+            transport, f"host{h}", dl,
+            evaluator=LoaderEvaluator(dl, to_device=False),
+            clock=ck, link_config=LinkConfig(seed=h, jitter=0.0)))
+        s = dl.stream(to_device=False)
+        s._bench_host = f"host{h}"
+        streams.append(s)
+    delivered: Dict[str, List[np.ndarray]] = {
+        f"host{h}": [] for h in range(3)}
+
+    def rounds(k: int, *, poll: bool) -> float:
+        """Lockstep rounds; returns HOST-side global batches/s.  Only the
+        hosts' section of each round is timed (pulls, observes — which is
+        where the link's failed-send/backoff path runs during an outage —
+        and the synthetic compute): the coordinator/standby work this
+        single-threaded driver interleaves runs on other machines in a
+        real deployment and must not be billed to fleet goodput."""
+        host_s = 0.0
+        for _ in range(k):
+            clock[0] += 1.0
+            t0 = time.perf_counter()
+            for i, stream in enumerate(streams):
+                t1 = time.perf_counter()
+                batch = next(stream)
+                data_s = time.perf_counter() - t1
+                delivered[stream._bench_host].append(
+                    np.asarray(batch["x"])[:, 0].copy())
+                agents[i].observe(data_s=data_s, step_s=data_s + COMPUTE_S)
+            time.sleep(COMPUTE_S)
+            host_s += time.perf_counter() - t0
+            transport.pump()
+            server[0].tick()
+            if poll:
+                server[0].poll()
+            promoted = replica.tick()
+            if promoted is not None:
+                server[0] = promoted
+        return k / host_s
+
+    coord.request_consensus(reason="startup")
+    server[0].poll()
+    rounds(warm, poll=True)
+    rate_steady = rounds(window, poll=False)
+
+    old_server = server[0]
+    old_fence = old_server.fence
+    old_server.crash()
+    # the outage window: no leader for ttl rounds, then the standby
+    # promotes mid-window and catches the fleet up — all of that cost
+    # lands inside the gated rate
+    rate_outage = rounds(outage, poll=True)
+    assert replica.promoted, "standby never promoted during the outage"
+    rounds(3, poll=True)                   # links re-sync, catch-up pushes
+
+    new_fence = server[0].fence
+    fence_fresh = (new_fence > old_fence and not server[0].deposed
+                   and all(a.link.fence == new_fence for a in agents))
+    try:
+        old_server.send("host0", "ping", {})
+        stale_rejected = False
+    except StaleLeaderError:
+        stale_rejected = True
+
+    rate_after = rounds(window, poll=False)
+    for stream in streams:
+        while stream.position < bpe:
+            batch = next(stream)
+            delivered[stream._bench_host].append(
+                np.asarray(batch["x"])[:, 0].copy())
+        stream.close()
+    counts = np.bincount(
+        np.concatenate([np.concatenate(c) for c in delivered.values() if c]),
+        minlength=n_items)
+    return {
+        "rate_steady": rate_steady, "rate_outage": rate_outage,
+        "rate_after": rate_after,
+        "failover_goodput": rate_outage / rate_steady,
+        "fence_fresh": bool(fence_fresh), "stale_rejected": stale_rejected,
+        "coverage_exact": bool((counts == 1).all()),
+        "lost": int((counts == 0).sum()), "dup": int((counts > 1).sum()),
+        "n_items": n_items, "outage_rounds": outage,
+        "old_fence": old_fence, "new_fence": new_fence,
+    }
+
+
+def _stress_128(quick: bool) -> Dict:
+    """128 transport-attached hosts through a FleetSchedule (degrades +
+    a 64-host correlated power loss).  The hosts carry real DataLoaders
+    but never open streams — the stress is the control plane: steady
+    heartbeat traffic must stay one report per host per round with the
+    delta encoding smaller than the full report, and the 128->64 reshard
+    must complete over the wire."""
+    from repro.data.loader import TransferStats
+
+    hosts, gb = 128, 128
+    n_items = gb * 16
+    clock = [0.0]
+    ck = lambda: clock[0]  # noqa: E731
+    transport = LocalTransport()
+    coord = FleetCoordinator(
+        config=FleetConfig(heartbeat_timeout_s=HEARTBEAT_TIMEOUT,
+                           warmup_steps=10_000, cooldown_steps=8,
+                           **_search_cfg(True)),
+        clock=ck)
+    server = CoordinatorServer(coord, transport, owner="coord-0")
+
+    def table_eval(i, j, *, num_batches=16, epoch=0):
+        return TransferStats(4.0 / i + 0.1 * j, num_batches, 0)
+
+    items = [np.full((2,), i, np.int32) for i in range(n_items)]
+    ds = Dataset(ArrayStorage(items), transform=lambda a: {"x": a})
+    agents = [connect_host(
+        transport, f"host{h}",
+        DataLoader(ds, gb, shuffle=True, seed=13,
+                   params=LoaderParams(num_workers=1, prefetch_factor=1),
+                   host_index=h, host_count=hosts),
+        evaluator=table_eval, clock=ck,
+        link_config=LinkConfig(seed=h, jitter=0.0),
+        consumes_stream=False) for h in range(hosts)]
+
+    schedule = FleetSchedule([
+        FleetEvent(step=2, kind="degrade", host="host0", io_scale=4.0),
+        FleetEvent(step=6, kind="leave", host="g64"),
+    ])
+    alive = list(range(hosts))
+    degraded: set = set()
+    traffic_mark = None
+    t0 = time.perf_counter()
+    for step in range(24):
+        for e in schedule.at(step):
+            if e.kind == "degrade":
+                degraded.update(range(8))
+            else:                      # half the rack loses power at once
+                alive = alive[:hosts // 2]
+        if step == 2:                  # steady window start (post-warmup)
+            traffic_mark = (dict(transport.kind_msgs), clock[0])
+        if step == 6:                  # steady window end, pre-failure
+            steady = (transport.kind_msgs.get("report", 0)
+                      - traffic_mark[0].get("report", 0),
+                      clock[0] - traffic_mark[1])
+        clock[0] += 1.0
+        for h in alive:
+            scale = 4.0 if h in degraded else 1.0
+            agents[h].observe(data_s=0.001, step_s=0.02 * scale)
+        transport.pump()
+        server.tick()
+        server.poll()
+        if any(e["kind"] == "reshard" for e in coord.events):
+            break
+    wall_s = time.perf_counter() - t0
+
+    reshard = next((e for e in coord.events if e["kind"] == "reshard"), None)
+    assert reshard is not None, "128-host reshard never completed"
+    reports_per_host_round = steady[0] / (hosts * steady[1])
+    full_avg = (server.report_full_bytes / max(1, server.report_full_msgs))
+    delta_avg = (server.report_delta_bytes / max(1, server.report_delta_msgs))
+    return {
+        "hosts": hosts, "survivors": len(coord.agents),
+        "lost": len(reshard["lost"]), "wall_s": wall_s,
+        "reports_per_host_round": reports_per_host_round,
+        "traffic_linear": bool(reports_per_host_round <= 1.25),
+        "full_report_bytes": round(full_avg, 1),
+        "delta_report_bytes": round(delta_avg, 1),
+        "delta_msgs": server.report_delta_msgs,
+        "delta_smaller": bool(server.report_delta_msgs > 0
+                              and delta_avg < full_avg),
+    }
+
+
 def run(quick: bool = False) -> List[Dict]:
     n_items = 960 if quick else 1920
     bpe = n_items // GLOBAL_BATCH
     warm = 6 if quick else 12
     window = 12 if quick else 24
+
+    # HA first: the failover outage window is short (2x heartbeat), so it
+    # runs before the heavier scenarios leave teardown noise behind
+    ha = _ha_failover(quick)
+    stress = _stress_128(quick)
 
     ref = _reference_rate(n_items, quick, window)
 
@@ -237,19 +463,54 @@ def run(quick: bool = False) -> List[Dict]:
                  f"{reshard_event['makeup_batches']} makeup batches"},
         {"phase": "reference-2-host", "rate_gbatch_s": round(ref["rate"], 1),
          "note": f"pre-failure N-1 optimum {ref['params']}"},
+        {"phase": "failover-steady",
+         "rate_gbatch_s": round(ha["rate_steady"], 1),
+         "note": "transport-mode fleet, lease-backed leader"},
+        {"phase": "failover-outage",
+         "rate_gbatch_s": round(ha["rate_outage"], 1),
+         "note": f"leader crashed {ha['outage_rounds']} rounds "
+                 f"(2x heartbeat timeout); goodput "
+                 f"{ha['failover_goodput']:.2f} of steady"},
+        {"phase": "failover-promoted",
+         "rate_gbatch_s": round(ha["rate_after"], 1),
+         "note": f"fence {ha['old_fence']} -> {ha['new_fence']}, "
+                 f"stale leader rejected: {ha['stale_rejected']}, "
+                 f"coverage exact: {ha['coverage_exact']}"},
+        {"phase": "stress-128-host", "rate_gbatch_s": None,
+         "note": f"{stress['reports_per_host_round']:.2f} reports/host/"
+                 f"round, delta {stress['delta_report_bytes']}B vs full "
+                 f"{stress['full_report_bytes']}B, 128->"
+                 f"{stress['survivors']} reshard in {stress['wall_s']:.1f}s"},
         {"phase": "gates", "rate_gbatch_s": None,
          "note": f"recovery {recovery:.2f} (>= {GATE_RECOVERY}), "
-                 f"coverage exact: {coverage_exact}"},
+                 f"failover {ha['failover_goodput']:.2f} "
+                 f"(>= {GATE_FAILOVER}), coverage exact: {coverage_exact}"},
     ]
 
+    ha_ok = (ha["fence_fresh"] and ha["stale_rejected"]
+             and ha["coverage_exact"] and stress["delta_smaller"]
+             and stress["traffic_linear"])
     payload = {
         "bench": "fleet",
         "gate": {
             "required_recovery": GATE_RECOVERY,
             "measured_recovery": round(recovery, 3),
             "coverage_exact": coverage_exact,
-            "passed": coverage_exact and recovery >= GATE_RECOVERY,
+            "required_failover_goodput": GATE_FAILOVER,
+            "measured_failover_goodput": round(ha["failover_goodput"], 3),
+            "failover_fence_fresh": ha["fence_fresh"],
+            "failover_stale_leader_rejected": ha["stale_rejected"],
+            "failover_coverage_exact": ha["coverage_exact"],
+            "stress_delta_smaller_than_full": stress["delta_smaller"],
+            "stress_traffic_linear": stress["traffic_linear"],
+            "passed": (coverage_exact and recovery >= GATE_RECOVERY
+                       and ha_ok
+                       and ha["failover_goodput"] >= GATE_FAILOVER),
         },
+        "failover": {k: (round(v, 3) if isinstance(v, float) else v)
+                     for k, v in ha.items()},
+        "stress": {k: (round(v, 3) if isinstance(v, float) else v)
+                   for k, v in stress.items()},
         "events": [
             {k: (dataclasses.asdict(v) if dataclasses.is_dataclass(v)
                  else v) for k, v in e.items()}
@@ -270,6 +531,20 @@ def run(quick: bool = False) -> List[Dict]:
         raise RuntimeError(
             f"fleet recovery gate FAILED: {recovery:.2f} < {fail_below} "
             f"(see {ROOT_JSON})")
+    # the HA protocol facts are hard failures at any noise level; only
+    # the goodput ratio gets a CI noise floor
+    if not ha_ok:
+        raise RuntimeError(
+            f"fleet HA gate FAILED: fence_fresh={ha['fence_fresh']} "
+            f"stale_rejected={ha['stale_rejected']} "
+            f"coverage={ha['coverage_exact']} "
+            f"delta_smaller={stress['delta_smaller']} "
+            f"traffic_linear={stress['traffic_linear']} (see {ROOT_JSON})")
+    ha_below = float(os.environ.get("FLEET_HA_GATE_MIN", GATE_FAILOVER))
+    if ha["failover_goodput"] < ha_below:
+        raise RuntimeError(
+            f"fleet failover goodput gate FAILED: "
+            f"{ha['failover_goodput']:.2f} < {ha_below} (see {ROOT_JSON})")
     return rows
 
 

@@ -79,15 +79,23 @@ class FleetEvent:
     coordinator reshards around it), ``"join"`` (a new host enters at the
     barrier) or ``"degrade"`` (the host's CPU/IO capacity is scaled —
     what the straggler detector and re-consensus react to).
+
+    Control-plane faults (transport-mode fleets, DESIGN.md §8):
+    ``"partition"`` cuts the host's link to the coordinator (the host
+    keeps streaming on latched params), ``"heal"`` restores it, and
+    ``"coord_crash"`` kills the coordinator itself (``host`` names the
+    coordinator endpoint; a standby's lease-driven promotion recovers) —
+    these drive the FaultyTransport, not the host processes.
     """
     step: int
-    kind: str                         # "leave" | "join" | "degrade"
+    kind: str        # "leave"|"join"|"degrade"|"partition"|"heal"|"coord_crash"
     host: str
     cpu_scale: float = 1.0            # degrade only
     io_scale: float = 1.0             # degrade only
 
     def __post_init__(self):
-        if self.kind not in ("leave", "join", "degrade"):
+        if self.kind not in ("leave", "join", "degrade",
+                             "partition", "heal", "coord_crash"):
             raise ValueError(f"unknown fleet event kind {self.kind!r}")
 
 

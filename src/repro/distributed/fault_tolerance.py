@@ -45,6 +45,24 @@ class HeartbeatRegistry:
         dead = set(self.dead_hosts())
         return sorted(h for h in self._last if h not in dead)
 
+    def state_dict(self) -> Dict[str, float]:
+        """Last-beat ages (now - last), not absolute times: a restoring
+        coordinator may run on a different clock origin."""
+        now = self.clock()
+        return {h: now - t for h, t in self._last.items()}
+
+    def load_state(self, ages: Dict[str, float]) -> None:
+        now = self.clock()
+        self._last = {h: now - float(a) for h, a in ages.items()}
+
+    def rearm(self, hosts: Sequence[str]) -> None:
+        """Re-beat every host at NOW — used after failover so the outage
+        window does not count against host liveness (a genuinely dead
+        host simply times out once more)."""
+        now = self.clock()
+        for h in hosts:
+            self._last[h] = now
+
 
 class StragglerDetector:
     """Rolling-window per-host step times; a host is a straggler when its
@@ -80,6 +98,14 @@ class StragglerDetector:
         fleet = self._median(list(meds.values()))
         return sorted(h for h, m in meds.items()
                       if m > self.threshold * fleet)
+
+    def state_dict(self) -> Dict[str, List[float]]:
+        return {h: list(t) for h, t in self._times.items()}
+
+    def load_state(self, windows: Dict[str, List[float]]) -> None:
+        self._times.clear()
+        for h, xs in windows.items():
+            self._times[h].extend(float(x) for x in xs[-self.window:])
 
 
 @dataclasses.dataclass(frozen=True)

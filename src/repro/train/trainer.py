@@ -113,6 +113,24 @@ class Trainer:
         self.locality_controller = None
         self.history: List[Dict[str, Any]] = []
 
+    def connect_fleet(self, transport, *, join: bool = False,
+                      coord: str = "coord", link_config=None,
+                      clock=time.monotonic):
+        """Attach this trainer to a fleet over a message transport.
+
+        Builds a transport-attached HostAgent around ``self.loader`` and
+        registers (or ``join=True`` mid-run admits) it with the
+        coordinator endpoint.  After this, ``run()`` streams observations
+        over the wire and the coordinator's pushes (params, reshards,
+        schedules) arrive as fenced commands — and a coordinator outage
+        never blocks the step loop: the host trains on its last
+        latched params and re-syncs on reconnect."""
+        from repro.tuning.fleet import connect_host
+        self.agent = connect_host(
+            transport, self.host_name, self.loader, coord=coord,
+            link_config=link_config, clock=clock, join=join)
+        return self.agent
+
     # ---- DPT integration ----------------------------------------------------
     def tune_loader(self, *, force: bool = False) -> LoaderParams:
         """Startup tune through the unified ``tune(...)`` front door (or

@@ -50,10 +50,26 @@ from repro.tuning.online import (  # noqa: F401
     RetuneExecutor,
     RetunePolicy,
 )
+from repro.tuning.transport import (  # noqa: F401
+    AgentLink,
+    FaultSpec,
+    FaultyTransport,
+    LeaderLease,
+    LinkConfig,
+    LocalTransport,
+    SnapshotStore,
+    StaleLeaderError,
+    Transport,
+    TransportError,
+)
 from repro.tuning.fleet import (  # noqa: F401
+    CoordinatorReplica,
+    CoordinatorServer,
     FleetConfig,
     FleetCoordinator,
     HostAgent,
     HostReport,
+    RemoteAgent,
+    connect_host,
     uniform_consensus,
 )

@@ -52,11 +52,15 @@ import numpy as np
 
 from repro.core.dpt import DPTConfig, DPTResult, MultiHostDPT
 from repro.core.monitor import MemoryOverflow
-from repro.data.loader import DataLoader, LoaderParams
+from repro.data.loader import DataLoader, LoaderParams, TransferStats
+from repro.data.sampler import ShardedSampler
 from repro.distributed.fault_tolerance import (HeartbeatRegistry,
                                                StragglerDetector, plan_remesh)
 from repro.tuning.base import adaptive_budget
 from repro.tuning.online import GoodputMonitor
+from repro.tuning.transport import (AgentLink, LeaderLease, LocalTransport,
+                                    SnapshotStore, StaleLeaderError,
+                                    TransportError, to_wire)
 
 
 # --------------------------------------------------------------------------
@@ -106,6 +110,27 @@ class HostReport:
     # lets retune decisions and dashboards see *locality*, not just rates.
     # None when nothing in the host's pipeline keeps counters.
     io: Optional[Dict[str, float]] = None
+    # makeup chunks this host has fully CONSUMED (of all it was ever
+    # dealt).  Lets a coordinator that only ever saw the host through
+    # the wire reconstruct the host's undelivered-makeup backlog from
+    # its own dealt log when the host dies without answering queries.
+    makeup_done: int = 0
+
+
+def report_to_wire(r: HostReport) -> Dict[str, Any]:
+    return to_wire(dataclasses.asdict(r))
+
+
+def report_from_wire(d: Dict[str, Any]) -> HostReport:
+    return HostReport(
+        host=str(d["host"]), steps=int(d["steps"]),
+        consumed=int(d["consumed"]), position=int(d["position"]),
+        stall_ratio=float(d["stall_ratio"]),
+        steps_per_s=float(d["steps_per_s"]),
+        batch_seconds=[float(x) for x in d.get("batch_seconds") or []],
+        params=tuple(int(x) for x in d["params"]),
+        io=dict(d["io"]) if d.get("io") else None,
+        makeup_done=int(d.get("makeup_done", 0)))
 
 
 @dataclasses.dataclass
@@ -141,6 +166,60 @@ class FleetConfig:
     # elastic re-mesh bookkeeping (plan_remesh)
     devices_per_host: int = 1
     model_axis: int = 1
+    # survivability knobs (DESIGN.md §8)
+    max_events: int = 4096           # event-log ring size (HA snapshot keeps
+                                     # the monotonic seq even after eviction)
+    max_barrier_rounds: int = 16     # reshard re-issue cap: a fault-injected
+                                     # agent that keeps raising its effective
+                                     # barrier errors out instead of spinning
+
+
+class EventLog:
+    """Bounded coordinator event log with a monotonic sequence number.
+
+    PR 3 grew ``FleetCoordinator.events`` as an unbounded list — on a
+    long-running fleet that is a slow memory leak and an unbounded HA
+    snapshot.  This keeps the newest ``max_events`` entries, stamps each
+    with a fleet-lifetime ``seq`` (stable across ring eviction AND
+    coordinator failover), and still behaves like the list the tests and
+    benches index/slice/iterate.
+    """
+
+    def __init__(self, max_events: int = 4096, *, start_seq: int = 0):
+        self.max_events = max(1, int(max_events))
+        self._items: List[Dict[str, Any]] = []
+        self.next_seq = int(start_seq)
+
+    def append(self, event: Dict[str, Any]) -> Dict[str, Any]:
+        event.setdefault("seq", self.next_seq)
+        self.next_seq = max(self.next_seq, int(event["seq"])) + 1
+        self._items.append(event)
+        if len(self._items) > self.max_events:
+            del self._items[:len(self._items) - self.max_events]
+        return event
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    def __getitem__(self, i):
+        return self._items[i]
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"next_seq": self.next_seq, "max_events": self.max_events,
+                "items": to_wire(self._items)}
+
+    @classmethod
+    def restore(cls, d: Dict[str, Any]) -> "EventLog":
+        log = cls(int(d.get("max_events", 4096)))
+        log._items = list(d.get("items") or [])
+        log.next_seq = int(d.get("next_seq", len(log._items)))
+        return log
 
 
 # --------------------------------------------------------------------------
@@ -157,7 +236,8 @@ class HostAgent:
 
     def __init__(self, host: str, loader: DataLoader, *, evaluator=None,
                  window: int = 8, report_every: int = 1,
-                 consumes_stream: bool = True):
+                 consumes_stream: bool = True,
+                 link: Optional[AgentLink] = None):
         self.host = host
         self.loader = loader
         if evaluator is None:
@@ -172,6 +252,11 @@ class HostAgent:
         # pass consumes_stream=False and the stream cursor is used
         self.consumes_stream = consumes_stream
         self.coordinator: Optional["FleetCoordinator"] = None
+        # transport mode: reports/commands cross a message link instead of
+        # direct method calls.  Exactly one of (coordinator, link) is set.
+        self.link: Optional[AgentLink] = None
+        if link is not None:
+            self.link = link.bind(self)
         bpe = loader.sampler.batches_per_epoch()
         self._base = loader.sampler.state.absolute(bpe)
         self.steps = 0
@@ -181,6 +266,15 @@ class HostAgent:
         # rather than added to a base (see LoaderStream.position_after)
         self._consume_stream = None
         self._bind_steps = 0
+        # makeup chunks ever dealt to this host (reported as makeup_done
+        # minus the undelivered backlog — see HostReport.makeup_done)
+        self._makeup_added = 0
+
+    @property
+    def attached(self) -> bool:
+        """True when this agent reports to a control plane (in-process
+        coordinator or message link)."""
+        return self.coordinator is not None or self.link is not None
 
     # ---- observe -----------------------------------------------------------
     def observe(self, *, data_s: float, step_s: float) -> None:
@@ -193,9 +287,14 @@ class HostAgent:
                 # consumed was that stream's first consumed yield
                 self._consume_stream = stream
                 self._bind_steps = self.steps - 1
-        if self.coordinator is not None \
-                and self.steps % self.report_every == 0:
-            self.coordinator.ingest(self.report())
+        if self.steps % self.report_every == 0:
+            if self.coordinator is not None:
+                self.coordinator.ingest(self.report())
+            elif self.link is not None:
+                # never blocks: an unreachable coordinator parks the
+                # report in the link's bounded queue and training
+                # continues on the last latched params
+                self.link.send_report(self.report_wire())
 
     def consumed_position(self) -> int:
         """Absolute global-batch position the CONSUMER reached (one stream
@@ -230,19 +329,33 @@ class HostAgent:
             steps_per_s=self.monitor.steps_per_s,
             batch_seconds=self.monitor.batch_seconds,
             params=(p.num_workers, p.prefetch_factor),
-            io=self.loader.io_counters() or None)
+            io=self.loader.io_counters() or None,
+            makeup_done=self._makeup_added - len(self.undelivered_makeup()))
+
+    def report_wire(self) -> Dict[str, Any]:
+        """Full report as a wire dict, carrying the host's live locality/
+        cache schedules so the coordinator's shard mirror tracks plans the
+        host computed locally (e.g. hot_k after a budget push).  Deltas
+        drop the schedules automatically while they are unchanged."""
+        d = report_to_wire(self.report())
+        d["schedules"] = to_wire(self.schedule_state())
+        return d
 
     def heartbeat(self) -> None:
         """Liveness without an observation (e.g. a serving frontend between
         batches)."""
         if self.coordinator is not None:
             self.coordinator.beat(self.host)
+        elif self.link is not None:
+            self.link.beat()
 
     def notify_drift(self, reason: str) -> None:
         """External drift signal (e.g. the serving batch-mix monitor):
         asks the coordinator for an out-of-band re-consensus."""
         if self.coordinator is not None:
             self.coordinator.request_consensus(reason=reason)
+        elif self.link is not None:
+            self.link.cast("drift", reason=reason)
 
     def notify_locality(self, chunk: int) -> None:
         """Adaptive-controller proposal (run-length collapse): locality
@@ -250,6 +363,8 @@ class HostAgent:
         drops it when the fleet searches no locality axis."""
         if self.coordinator is not None:
             self.coordinator.request_locality(chunk, host=self.host)
+        elif self.link is not None:
+            self.link.cast("locality", chunk=int(chunk))
 
     # ---- act (coordinator-driven) ------------------------------------------
     def apply_params(self, nworker: int, nprefetch: int,
@@ -273,11 +388,20 @@ class HostAgent:
 
     def reshard(self, num_shards: int, shard: int, *,
                 at_batch: Optional[int] = None,
-                makeup: Optional[Sequence[np.ndarray]] = None) -> int:
+                makeup: Optional[Sequence[np.ndarray]] = None,
+                op_id: Optional[str] = None) -> int:
+        # op_id is the wire-level idempotency token; the in-process path
+        # needs no dedup (calls are exactly-once on a stack)
+        del op_id
+        if makeup:
+            self._makeup_added += len(makeup)
         return self.loader.reshard(num_shards, shard, at_batch=at_batch,
                                    makeup=makeup)
 
-    def add_makeup(self, makeup: Sequence[np.ndarray]) -> None:
+    def add_makeup(self, makeup: Sequence[np.ndarray], *,
+                   op_id: Optional[str] = None) -> None:
+        del op_id
+        self._makeup_added += len(makeup)
         self.loader.add_makeup(makeup)
 
     def undelivered_makeup(self) -> List[np.ndarray]:
@@ -304,6 +428,403 @@ class HostAgent:
         self._consume_stream = None
         self._bind_steps = 0
 
+    # ---- fleet-member surface ----------------------------------------------
+    # The coordinator only ever speaks this narrow API — implemented
+    # natively here (direct mode) and over the wire by RemoteAgent, so
+    # the decide logic is transport-agnostic.
+    def param_cell(self) -> Tuple[int, int]:
+        p = self.loader.params
+        return (p.num_workers, p.prefetch_factor)
+
+    def knob_state(self) -> Dict[str, Any]:
+        p = self.loader.params
+        return {"locality_chunk": p.locality_chunk,
+                "cache_budget_bytes": p.cache_budget_bytes}
+
+    def locality_latch_epoch(self) -> int:
+        return self.loader.locality_latch_epoch()
+
+    def shard_index(self) -> int:
+        return self.loader.sampler.host_index
+
+    def global_batch(self) -> int:
+        return self.loader.sampler.global_batch
+
+    def batches_per_epoch(self) -> int:
+        return self.loader.sampler.batches_per_epoch()
+
+    def local_indices(self, epoch: int, batch: int) -> np.ndarray:
+        return self.loader.sampler.local_indices(epoch, batch)
+
+    def schedule_state(self) -> Dict[str, Any]:
+        """The uniform-permutation contract: the full (epoch -> chunk) and
+        (epoch -> hot_k) schedules plus the params they came from."""
+        s = self.loader.sampler
+        return {"locality": s.locality_state(), "cache": s.cache_state(),
+                **self.knob_state()}
+
+    def sync_schedules(self, sched: Dict[str, Any]) -> None:
+        """Adopt a peer's full epoch schedules (join catch-up, partition
+        re-sync) so this host slices the same permutation as the fleet."""
+        loader = self.loader
+        if sched.get("locality") is not None:
+            loader.sampler.load_locality(sched["locality"])
+        if sched.get("cache") is not None:
+            loader.sampler.load_cache_plan(sched["cache"])
+        chunk = sched.get("locality_chunk")
+        budget = sched.get("cache_budget_bytes")
+        loader.params = loader.params.replace(
+            locality_chunk=loader.params.locality_chunk if chunk is None
+            else int(chunk),
+            cache_budget_bytes=loader.params.cache_budget_bytes
+            if budget is None else int(budget))
+        loader._sync_cache_plan()
+
+    def begin_trials(self) -> None:
+        """Bracket a coordinator-driven measurement burst: trial cells
+        mutate loader params via with_params; a live stream must never
+        rebuild on trial params."""
+        self._trial_params = self.loader.params
+
+    def end_trials(self) -> None:
+        saved = getattr(self, "_trial_params", None)
+        if saved is not None:
+            self.loader.with_params(saved)
+            self._trial_params = None
+
+    # ---- transport glue ----------------------------------------------------
+    def member_spec(self) -> Dict[str, Any]:
+        """Everything the coordinator needs to mirror this host's shard
+        map without object access — crossed once at register/join."""
+        s = self.loader.sampler
+        p = self.loader.params
+        return {"host": self.host,
+                "position": self.stream_position(),
+                "sampler": {"num_items": s.num_items,
+                            "global_batch": s.global_batch,
+                            "shuffle": s.shuffle, "seed": s.seed,
+                            "drop_last": s.drop_last,
+                            "host_index": s.host_index,
+                            "host_count": s.host_count,
+                            "layout": s.layout,
+                            "locality": s.locality_state(),
+                            "cache": s.cache_state()},
+                "params": {"num_workers": p.num_workers,
+                           "prefetch_factor": p.prefetch_factor,
+                           "locality_chunk": p.locality_chunk,
+                           "cache_budget_bytes": p.cache_budget_bytes}}
+
+    def ha_state(self) -> Dict[str, Any]:
+        """Snapshot form of this member for the coordinator HA checkpoint
+        (direct-mode agents serialize their spec; the dealt-makeup log is
+        empty because direct mode never loses the object)."""
+        return {"spec": self.member_spec(), "dealt": [],
+                "report": report_to_wire(self.report())}
+
+    def handle_command(self, op: str, args: Dict[str, Any]) -> Any:
+        """Wire command dispatch (invoked by AgentLink AFTER its fence and
+        dedup checks).  Every coordinator->agent verb crosses here."""
+        if op == "apply_params":
+            p = self.apply_params(
+                int(args["nworker"]), int(args["nprefetch"]),
+                None if args.get("locality_chunk") is None
+                else int(args["locality_chunk"]),
+                locality_epoch=None if args.get("locality_epoch") is None
+                else int(args["locality_epoch"]),
+                cache_budget_bytes=None
+                if args.get("cache_budget_bytes") is None
+                else int(args["cache_budget_bytes"]))
+            return {"num_workers": p.num_workers,
+                    "prefetch_factor": p.prefetch_factor}
+        if op == "reshard":
+            makeup = None
+            if args.get("makeup") is not None:
+                makeup = [np.asarray(c, dtype=np.int64)
+                          for c in args["makeup"]]
+            return self.reshard(
+                int(args["num_shards"]), int(args["shard"]),
+                at_batch=None if args.get("at_batch") is None
+                else int(args["at_batch"]),
+                makeup=makeup)
+        if op == "add_makeup":
+            self.add_makeup([np.asarray(c, dtype=np.int64)
+                             for c in args["chunks"]])
+            return len(args["chunks"])
+        if op == "align_to":
+            self.align_to(int(args["position"]))
+            return int(args["position"])
+        if op == "sync_schedules":
+            self.sync_schedules(args["sched"])
+            return True
+        if op == "query":
+            what = args.get("what")
+            if what == "stream_position":
+                return self.stream_position()
+            if what == "consumed_position":
+                return self.consumed_position()
+            if what == "locality_latch_epoch":
+                return self.locality_latch_epoch()
+            if what == "schedule_state":
+                return self.schedule_state()
+            if what == "params":
+                return {"cell": list(self.param_cell()),
+                        **self.knob_state()}
+            raise ValueError(f"unknown query {what!r}")
+        if op == "measure":
+            # trial measurement on behalf of a remote consensus: run the
+            # local evaluator and ALWAYS restore live params (the remote
+            # coordinator cannot reach in to clean up)
+            saved = self.loader.params
+            kw: Dict[str, Any] = {
+                "num_batches": int(args.get("num_batches", 16)),
+                "epoch": int(args.get("epoch", 0))}
+            # forward the extra axes only when set: plain 2-axis
+            # evaluators (and the sweep helpers) do not take them
+            if args.get("locality_chunk") is not None:
+                kw["locality_chunk"] = int(args["locality_chunk"])
+            if args.get("cache_budget_bytes") is not None:
+                kw["cache_budget_bytes"] = int(args["cache_budget_bytes"])
+            try:
+                stats = self.evaluator(
+                    int(args["nworker"]), int(args["nprefetch"]), **kw)
+                return to_wire(dataclasses.asdict(stats))
+            except MemoryOverflow as e:
+                return {"overflow": True, "error": str(e)}
+            finally:
+                self.loader.with_params(saved)
+        if op == "ping":
+            return True
+        raise ValueError(f"unknown command {op!r}")
+
+
+# --------------------------------------------------------------------------
+# the coordinator-side proxy: a fleet member that lives across the wire
+# --------------------------------------------------------------------------
+class _RemoteEvaluator:
+    """Evaluator facade over a RemoteAgent: a consensus trial becomes a
+    ``measure`` command; the host runs its real evaluator and ships the
+    TransferStats (or an overflow verdict) back as data."""
+
+    def __init__(self, proxy: "RemoteAgent"):
+        self.proxy = proxy
+        self.calls = 0
+
+    def __call__(self, nworker: int, nprefetch: int, *,
+                 num_batches: int = 16, epoch: int = 0,
+                 locality_chunk: Optional[int] = None,
+                 cache_budget_bytes: Optional[int] = None) -> TransferStats:
+        self.calls += 1
+        r = self.proxy._send("measure", {
+            "nworker": nworker, "nprefetch": nprefetch,
+            "num_batches": num_batches, "epoch": epoch,
+            "locality_chunk": locality_chunk,
+            "cache_budget_bytes": cache_budget_bytes})
+        if r.get("overflow"):
+            raise MemoryOverflow(r.get("error", "remote overflow"))
+        return TransferStats(
+            seconds=float(r["seconds"]), batches=int(r["batches"]),
+            bytes=int(r["bytes"]), overflowed=bool(r.get("overflowed")),
+            peak_loader_bytes=int(r.get("peak_loader_bytes", 0)),
+            batch_seconds=r.get("batch_seconds"))
+
+
+class RemoteAgent:
+    """The coordinator's view of a host it can only reach by message.
+
+    Implements the same fleet-member surface as :class:`HostAgent`, but
+    every act crosses the transport as a fenced, idempotent command —
+    and the *observe* side keeps a local mirror (a ShardedSampler built
+    from the registration spec, updated on acked reshards/pushes and on
+    report schedules) so the coordinator can compute a DEAD host's
+    undelivered slices without asking it anything.  The mirror plus the
+    dealt-makeup log is exactly the state the direct-mode coordinator
+    used to read out of the departed agent object.
+    """
+
+    def __init__(self, server: "CoordinatorServer", spec: Dict[str, Any], *,
+                 dealt: Optional[List] = None,
+                 report: Optional[Dict[str, Any]] = None):
+        self.host = str(spec["host"])
+        self._server = server
+        self._base = int(spec.get("position", 0))
+        sp = spec["sampler"]
+        self._sampler = ShardedSampler(
+            int(sp["num_items"]), int(sp["global_batch"]),
+            shuffle=bool(sp["shuffle"]), seed=int(sp["seed"]),
+            drop_last=bool(sp["drop_last"]),
+            host_index=int(sp["host_index"]),
+            host_count=int(sp["host_count"]),
+            layout=sp.get("layout", "host_major"))
+        if sp.get("locality"):
+            self._sampler.load_locality(sp["locality"])
+        if sp.get("cache"):
+            self._sampler.load_cache_plan(sp["cache"])
+        self._params = dict(spec["params"])
+        self._dealt: List[np.ndarray] = [
+            np.asarray(c, dtype=np.int64) for c in (dealt or [])]
+        self.last_report: Optional[HostReport] = \
+            None if report is None else report_from_wire(report)
+        self.coordinator: Optional["FleetCoordinator"] = None
+        self.evaluator = _RemoteEvaluator(self)
+
+    def _send(self, op: str, args: Dict[str, Any],
+              op_id: Optional[str] = None) -> Any:
+        return self._server.send(self.host, op, args, op_id=op_id)
+
+    # ---- observe -----------------------------------------------------------
+    def observe_report(self, report: HostReport,
+                       schedules: Optional[Dict[str, Any]] = None) -> None:
+        """Fold an ACCEPTED report into the mirror (the server calls this
+        after the coordinator's stale-steps guard passed)."""
+        self.last_report = report
+        self._params["num_workers"], self._params["prefetch_factor"] = \
+            (int(report.params[0]), int(report.params[1]))
+        if schedules:
+            if schedules.get("locality") is not None:
+                self._sampler.load_locality(schedules["locality"])
+            if schedules.get("cache") is not None:
+                self._sampler.load_cache_plan(schedules["cache"])
+            if schedules.get("locality_chunk") is not None:
+                self._params["locality_chunk"] = \
+                    int(schedules["locality_chunk"])
+            if schedules.get("cache_budget_bytes") is not None:
+                self._params["cache_budget_bytes"] = \
+                    int(schedules["cache_budget_bytes"])
+
+    # ---- member surface: reads ---------------------------------------------
+    def stream_position(self) -> int:
+        return int(self._send("query", {"what": "stream_position"}))
+
+    def consumed_position(self) -> int:
+        """From the last report — NEVER an RPC: this is only ever read for
+        departed hosts, which by definition cannot answer."""
+        if self.last_report is not None:
+            return int(self.last_report.consumed)
+        return self._base
+
+    def undelivered_makeup(self) -> List[np.ndarray]:
+        """The dealt-log tail the host never consumed (makeup parked on a
+        corpse) — reconstructed coordinator-side from makeup_done."""
+        done = 0 if self.last_report is None \
+            else max(0, int(self.last_report.makeup_done))
+        return [np.array(c, dtype=np.int64) for c in self._dealt[done:]]
+
+    def param_cell(self) -> Tuple[int, int]:
+        return (int(self._params["num_workers"]),
+                int(self._params["prefetch_factor"]))
+
+    def knob_state(self) -> Dict[str, Any]:
+        return {"locality_chunk": int(self._params.get("locality_chunk", 0)),
+                "cache_budget_bytes":
+                    int(self._params.get("cache_budget_bytes", 0))}
+
+    def locality_latch_epoch(self) -> int:
+        return int(self._send("query", {"what": "locality_latch_epoch"}))
+
+    def shard_index(self) -> int:
+        return self._sampler.host_index
+
+    def global_batch(self) -> int:
+        return self._sampler.global_batch
+
+    def batches_per_epoch(self) -> int:
+        return self._sampler.batches_per_epoch()
+
+    def local_indices(self, epoch: int, batch: int) -> np.ndarray:
+        return self._sampler.local_indices(epoch, batch)
+
+    def schedule_state(self) -> Dict[str, Any]:
+        return {"locality": self._sampler.locality_state(),
+                "cache": self._sampler.cache_state(), **self.knob_state()}
+
+    # ---- member surface: fenced acts ---------------------------------------
+    def apply_params(self, nworker: int, nprefetch: int,
+                     locality_chunk: Optional[int] = None, *,
+                     locality_epoch: Optional[int] = None,
+                     cache_budget_bytes: Optional[int] = None) -> None:
+        self._send("apply_params", {
+            "nworker": nworker, "nprefetch": nprefetch,
+            "locality_chunk": locality_chunk,
+            "locality_epoch": locality_epoch,
+            "cache_budget_bytes": cache_budget_bytes})
+        self._params["num_workers"] = int(nworker)
+        self._params["prefetch_factor"] = int(nprefetch)
+        if locality_chunk is not None:
+            self._params["locality_chunk"] = int(locality_chunk)
+            self._sampler.set_locality(int(locality_chunk),
+                                       epoch=locality_epoch)
+        if cache_budget_bytes is not None:
+            self._params["cache_budget_bytes"] = int(cache_budget_bytes)
+
+    def reshard(self, num_shards: int, shard: int, *,
+                at_batch: Optional[int] = None,
+                makeup: Optional[Sequence[np.ndarray]] = None,
+                op_id: Optional[str] = None) -> int:
+        args: Dict[str, Any] = {"num_shards": num_shards, "shard": shard,
+                                "at_batch": at_batch}
+        if makeup:
+            args["makeup"] = [np.asarray(c).tolist() for c in makeup]
+        effective = int(self._send("reshard", args, op_id=op_id))
+        # the ack means the host applied it: mirror follows
+        self._sampler.reshard(num_shards, shard)
+        if makeup:
+            self._dealt.extend(np.asarray(c, dtype=np.int64) for c in makeup)
+        return effective
+
+    def add_makeup(self, makeup: Sequence[np.ndarray], *,
+                   op_id: Optional[str] = None) -> None:
+        self._send("add_makeup",
+                   {"chunks": [np.asarray(c).tolist() for c in makeup]},
+                   op_id=op_id)
+        self._dealt.extend(np.asarray(c, dtype=np.int64) for c in makeup)
+
+    def align_to(self, position: int) -> None:
+        self._send("align_to", {"position": int(position)})
+        self._base = int(position)
+
+    def sync_schedules(self, sched: Dict[str, Any]) -> None:
+        self._send("sync_schedules", {"sched": to_wire(sched)})
+        if sched.get("locality") is not None:
+            self._sampler.load_locality(sched["locality"])
+        if sched.get("cache") is not None:
+            self._sampler.load_cache_plan(sched["cache"])
+        if sched.get("locality_chunk") is not None:
+            self._params["locality_chunk"] = int(sched["locality_chunk"])
+        if sched.get("cache_budget_bytes") is not None:
+            self._params["cache_budget_bytes"] = \
+                int(sched["cache_budget_bytes"])
+
+    def begin_trials(self) -> None:
+        """No-op: the host-side ``measure`` handler restores its own live
+        params around every trial."""
+
+    def end_trials(self) -> None:
+        pass
+
+    # ---- HA snapshot -------------------------------------------------------
+    def ha_state(self) -> Dict[str, Any]:
+        s = self._sampler
+        return {"spec": {"host": self.host, "position": self._base,
+                         "sampler": {"num_items": s.num_items,
+                                     "global_batch": s.global_batch,
+                                     "shuffle": s.shuffle, "seed": s.seed,
+                                     "drop_last": s.drop_last,
+                                     "host_index": s.host_index,
+                                     "host_count": s.host_count,
+                                     "layout": s.layout,
+                                     "locality": s.locality_state(),
+                                     "cache": s.cache_state()},
+                         "params": dict(self._params)},
+                "dealt": [c.tolist() for c in self._dealt],
+                "report": None if self.last_report is None
+                else report_to_wire(self.last_report)}
+
+    @classmethod
+    def restore(cls, server: "CoordinatorServer",
+                state: Dict[str, Any]) -> "RemoteAgent":
+        return cls(server, state["spec"], dealt=state.get("dealt"),
+                   report=state.get("report"))
+
 
 # --------------------------------------------------------------------------
 # the coordinator: decide
@@ -316,8 +837,12 @@ class FleetCoordinator:
     every action taken is appended to ``events`` and returned.
     """
 
-    def __init__(self, *, config: FleetConfig = FleetConfig(),
+    def __init__(self, *, config: Optional[FleetConfig] = None,
                  clock: Callable[[], float] = time.monotonic):
+        # default None, constructed per-instance: a module-level default
+        # FleetConfig() would be one shared mutable object across every
+        # coordinator ever constructed
+        config = FleetConfig() if config is None else config
         self.cfg = config
         self.clock = clock
         self.registry = HeartbeatRegistry(
@@ -325,25 +850,38 @@ class FleetCoordinator:
         self.straggler = StragglerDetector(
             window=config.straggler_window,
             threshold=config.straggler_threshold)
-        self.agents: Dict[str, HostAgent] = {}
+        self.agents: Dict[str, Any] = {}   # HostAgent | RemoteAgent
         self.reports: Dict[str, HostReport] = {}
-        self.events: List[Dict[str, Any]] = []
+        self.events = EventLog(config.max_events)
         self.consensus_runs = 0
         self.reshards = 0
         self._last_consensus_step = -config.cooldown_steps
         self._backoff = 1
         self._forced_reason: Optional[str] = None
+        # stale/duplicate-report guard: highest steps counter accepted per
+        # host — a replayed or reordered report must not rewind bookkeeping
+        self._last_steps: Dict[str, int] = {}
+        self.stale_reports = 0
+        # HA plumbing (set by CoordinatorServer / restore)
+        self._server: Optional["CoordinatorServer"] = None
+        self._store: Optional[SnapshotStore] = None
+        self._member_state: Optional[Dict[str, Any]] = None
+        self._pending_reshard: Optional[Dict[str, Any]] = None
+        # last applied uniform push (re-sync source for reconnecting hosts)
+        self._pushed: Optional[Dict[str, Any]] = None
 
     # ---- membership --------------------------------------------------------
-    def register(self, agent: HostAgent) -> HostAgent:
+    def register(self, agent) -> Any:
         agent.coordinator = self
         self.agents[agent.host] = agent
         self.registry.beat(agent.host)
+        # a (re)joining host restarts its steps counter: reset the stale
+        # guard or every report from its new life would be dropped
+        self._last_steps.pop(agent.host, None)
         return agent
 
-    @staticmethod
-    def _negotiate_barrier(agents: Sequence[HostAgent], num_shards: int,
-                           floor: int) -> int:
+    def _negotiate_barrier(self, agents: Sequence[Any], num_shards: int,
+                           floor: int, *, rid: Optional[int] = None) -> int:
         """Issue the reshard to every agent at a common barrier, re-issuing
         at the max EFFECTIVE barrier until it is common.
 
@@ -351,46 +889,50 @@ class FleetCoordinator:
         clamps its boundary up and reports it; since a pending request
         pins the stream at its boundary, each re-issue round can only
         raise the barrier and the loop converges (normally in one pass).
+        ``max_barrier_rounds`` caps the loop: a faulty agent that keeps
+        raising its effective barrier produces a clear diagnostic instead
+        of an infinite spin.
         """
         barrier = max([a.stream_position() for a in agents] + [floor])
-        while True:
-            effective = max(a.reshard(num_shards, i, at_batch=barrier)
-                            for i, a in enumerate(agents))
+        history: List[int] = []
+        for _ in range(max(1, self.cfg.max_barrier_rounds)):
+            effective = max(
+                a.reshard(num_shards, i, at_batch=barrier,
+                          op_id=None if rid is None
+                          else f"reshard-{rid}-map-{a.host}-{barrier}")
+                for i, a in enumerate(agents))
+            history.append(effective)
             if effective <= barrier:
                 return barrier
             barrier = effective
+        positions = {a.host: a.stream_position() for a in agents}
+        raise RuntimeError(
+            f"reshard barrier failed to settle after "
+            f"{self.cfg.max_barrier_rounds} rounds: effective barriers "
+            f"{history}, stream positions {positions} — some agent keeps "
+            f"racing past every proposed barrier")
 
-    def join(self, agent: HostAgent) -> int:
+    def join(self, agent) -> int:
         """Admit a new host mid-run: every existing host reshards to
         H+1 shards at a common barrier, the newcomer is aligned to that
         barrier and takes the last shard.  Returns the barrier."""
         incumbents = [self.agents[h] for h in sorted(self.agents)]
         new_count = len(incumbents) + 1
-        barrier = self._negotiate_barrier(incumbents, new_count, 0)
+        rid = self.reshards
+        barrier = self._negotiate_barrier(incumbents, new_count, 0, rid=rid)
         agent.align_to(barrier)
         if incumbents:
             # locality is runtime-mutable now: the joiner's construction-
             # time chunk can be stale, and a host slicing a different
             # epoch permutation than its peers silently loses/duplicates
-            # samples.  Copy an incumbent's full (epoch -> chunk)
-            # schedule — including any pending latch — before the stream
-            # starts.
-            src = incumbents[0].loader
-            agent.loader.sampler.load_locality(
-                src.sampler.locality_state())
-            agent.loader.params = agent.loader.params.replace(
-                locality_chunk=src.params.locality_chunk,
-                cache_budget_bytes=src.params.cache_budget_bytes)
-            # same staleness risk for the cache plan: the interleaved
-            # epoch order depends on (chunk, hot_k), so the joiner must
-            # slice the same permutation as its peers — copy the full
-            # (epoch -> hot_k) schedule, then size the joiner's own
-            # (empty) tier to the copied budget.  The sync is a schedule
-            # no-op when the computed hot_k matches the copied plan.
-            agent.loader.sampler.load_cache_plan(
-                src.sampler.cache_state())
-            agent.loader._sync_cache_plan()
-        agent.loader.reshard(new_count, new_count - 1)
+            # samples.  Copy an incumbent's full (epoch -> chunk) AND
+            # (epoch -> hot_k) schedules — including any pending latch —
+            # before the stream starts (the joiner re-sizes its own empty
+            # tier to the copied budget; the sync is a schedule no-op
+            # when the computed hot_k matches the copied plan).
+            agent.sync_schedules(incumbents[0].schedule_state())
+        agent.reshard(new_count, new_count - 1,
+                      op_id=f"reshard-{rid}-align-{agent.host}")
         self.register(agent)
         self.reshards += 1
         self.events.append({"kind": "join", "host": agent.host,
@@ -399,6 +941,7 @@ class FleetCoordinator:
         # topology at the next poll
         if self._forced_reason is None:
             self._forced_reason = "post-reshard"
+        self._checkpoint()
         return barrier
 
     def leave(self, host: str) -> None:
@@ -410,13 +953,27 @@ class FleetCoordinator:
     def beat(self, host: str) -> None:
         self.registry.beat(host)
 
-    def ingest(self, report: HostReport) -> None:
+    def ingest(self, report: HostReport) -> bool:
+        """Fold one host report in.  Returns True when accepted.
+
+        Stale/duplicate guard: a replayed, reordered or duplicated report
+        whose ``steps`` counter is not beyond the last accepted one for
+        that host still counts as a heartbeat (the bytes arrived NOW, so
+        something over there is alive) but must not rewind consumed/
+        position bookkeeping or re-feed the straggler windows.
+        """
         self.registry.beat(report.host)
+        last = self._last_steps.get(report.host)
+        if last is not None and report.steps <= last:
+            self.stale_reports += 1
+            return False
+        self._last_steps[report.host] = report.steps
         if report.batch_seconds:
             self.straggler.record(
                 report.host,
                 sum(report.batch_seconds) / len(report.batch_seconds))
         self.reports[report.host] = report
+        return True
 
     def request_consensus(self, *, reason: str) -> None:
         """Out-of-band drift signal (serving batch-mix, operator): run a
@@ -450,21 +1007,51 @@ class FleetCoordinator:
         return self.fleet_stall_ratio() > self.cfg.stall_fraction
 
     def poll(self) -> List[Dict[str, Any]]:
-        """One decide step: handle deaths, then drift/straggler consensus.
-        Returns the actions taken (also appended to ``events``)."""
+        """One decide step: finish any interrupted reshard, handle deaths,
+        then drift/straggler consensus.  Returns the actions taken (also
+        appended to ``events``)."""
         actions: List[Dict[str, Any]] = []
+        # a reshard interrupted by a flaky wire (partitioned survivor mid-
+        # deal) left its write-ahead intent checkpointed: resume it before
+        # deciding anything else — the frozen shares re-deal under their
+        # original op-ids, so a survivor that DID get its share applies it
+        # exactly once.  Still unreachable -> stays pending for next poll.
+        if self._pending_reshard is not None and self._server is not None:
+            ev = self._absorb_transport(self._resume_reshard)
+            if ev is not None:
+                actions.append(ev)
         dead = [h for h in self.registry.dead_hosts() if h in self.agents]
         if dead:
             # one reshard around ALL currently-dead hosts: handling them
             # one at a time would hand a dead "survivor" a shard (and a
             # makeup share) it can never deliver
-            actions.append(self._reshard_around(dead, reason="dead"))
+            ev = self._absorb_transport(
+                lambda: self._reshard_around(dead, reason="dead"))
+            if ev is not None:
+                actions.append(ev)
         reason = self._consensus_reason()
         if reason is not None:
-            act = self._reconsensus(reason)
+            act = self._absorb_transport(lambda: self._reconsensus(reason))
             if act is not None:
                 actions.append(act)
         return actions
+
+    def _absorb_transport(self, fn: Callable[[], Optional[Dict[str, Any]]]
+                          ) -> Optional[Dict[str, Any]]:
+        """Run one decide action, absorbing TRANSIENT wire failures: a
+        host that cannot be reached right now fails the action, not the
+        control plane (an interrupted reshard stays write-ahead-logged
+        and resumes next poll).  Deposition is never absorbed — a stale
+        fence means a newer leader owns the fleet and this one must stop.
+        Direct in-process mode (no server) has no wire to absorb."""
+        if self._server is None:
+            return fn()
+        try:
+            return fn()
+        except StaleLeaderError:
+            raise
+        except TransportError:
+            return None
 
     def _consensus_reason(self) -> Optional[str]:
         if self._forced_reason is not None:
@@ -498,10 +1085,11 @@ class FleetCoordinator:
         if not hosts:
             return None
         agents = [self.agents[h] for h in hosts]
-        originals = [a.loader.params for a in agents]
         tuner = MultiHostDPT([a.evaluator for a in agents],
                              self._search_config())
         self._last_consensus_step = self.fleet_step
+        for a in agents:
+            a.begin_trials()
         try:
             fleet = tuner.run_uniform()
         except MemoryOverflow:
@@ -510,8 +1098,8 @@ class FleetCoordinator:
         finally:
             # trial cells mutate loader params via with_params; a live
             # stream must never rebuild on trial params
-            for a, orig in zip(agents, originals):
-                a.loader.with_params(orig)
+            for a in agents:
+                a.end_trials()
         self.consensus_runs += 1
         won = self._is_fleet_win(fleet, agents)
         # the online locality axis: sweep chunk candidates at the cell the
@@ -540,30 +1128,32 @@ class FleetCoordinator:
             # one common latch epoch: every host adopts the new chunk AND
             # the new cache plan for the SAME epoch even when producers
             # straddle a boundary (the interleaved order depends on both)
-            latch = max(a.loader.locality_latch_epoch() for a in agents) \
+            latch = max(a.locality_latch_epoch() for a in agents) \
                 if (chunk_win is not None or budget_win is not None) \
                 else None
             for a in agents:
-                nw, npf = fleet.uniform_params if won else (
-                    a.loader.params.num_workers,
-                    a.loader.params.prefetch_factor)
+                nw, npf = fleet.uniform_params if won else a.param_cell()
                 a.apply_params(nw, npf, locality_chunk=chunk_win,
                                locality_epoch=latch,
                                cache_budget_bytes=budget_win)
+            # remember what went out: a host that was partitioned through
+            # this push re-syncs from here on reconnect
+            self._pushed = {
+                "cell": list(fleet.uniform_params) if won else None,
+                "schedule": to_wire(agents[0].schedule_state())}
+        self._checkpoint()
         return event
 
     @staticmethod
-    def _current_cells(agents: Sequence[HostAgent]
-                       ) -> Dict[Tuple[int, int], int]:
+    def _current_cells(agents: Sequence[Any]) -> Dict[Tuple[int, int], int]:
         counts: Dict[Tuple[int, int], int] = {}
         for a in agents:
-            p = a.loader.params
-            key = (p.num_workers, p.prefetch_factor)
+            key = a.param_cell()
             counts[key] = counts.get(key, 0) + 1
         return counts
 
     @classmethod
-    def _majority_cell(cls, agents: Sequence[HostAgent]) -> Tuple[int, int]:
+    def _majority_cell(cls, agents: Sequence[Any]) -> Tuple[int, int]:
         counts = cls._current_cells(agents)
         return max(counts, key=counts.get)
 
@@ -577,16 +1167,17 @@ class FleetCoordinator:
             return None
         from repro.tuning.locality import sweep_locality
         cfg = self._search_config()
-        cur = agents[0].loader.params.locality_chunk
-        originals = [a.loader.params for a in agents]
+        cur = agents[0].knob_state()["locality_chunk"]
+        for a in agents:
+            a.begin_trials()
         try:
             per_host = [sweep_locality(
                 a.evaluator, nworker=cell[0], nprefetch=cell[1],
                 chunks=self.cfg.locality_chunks, current_chunk=cur,
                 num_batches=cfg.num_batches) for a in agents]
         finally:
-            for a, orig in zip(agents, originals):
-                a.loader.with_params(orig)
+            for a in agents:
+                a.end_trials()
         fleet_time: Dict[int, float] = {}
         for trials in per_host:
             for chunk, t in trials.items():
@@ -617,8 +1208,9 @@ class FleetCoordinator:
             return None
         from repro.tuning.locality import sweep_cache
         cfg = self._search_config()
-        cur = agents[0].loader.params.cache_budget_bytes
-        originals = [a.loader.params for a in agents]
+        cur = agents[0].knob_state()["cache_budget_bytes"]
+        for a in agents:
+            a.begin_trials()
         try:
             per_host = [sweep_cache(
                 a.evaluator, nworker=cell[0], nprefetch=cell[1],
@@ -626,8 +1218,8 @@ class FleetCoordinator:
                 num_batches=cfg.num_batches,
                 epoch=max(1, cfg.epoch)) for a in agents]
         finally:
-            for a, orig in zip(agents, originals):
-                a.loader.with_params(orig)
+            for a in agents:
+                a.end_trials()
         fleet_time: Dict[int, float] = {}
         for trials in per_host:
             for budget, t in trials.items():
@@ -671,18 +1263,39 @@ class FleetCoordinator:
                         reason: str) -> Dict[str, Any]:
         """One or more hosts left the fleet (a rack failure is one event,
         not a cascade): remap every survivor at one common barrier and
-        redistribute every departed host's undelivered slices."""
+        redistribute every departed host's undelivered slices.
+
+        Crash-safe in HA mode: a write-ahead intent (lost hosts, their
+        frozen consumed positions + member mirrors) is checkpointed
+        BEFORE any command goes out, and again with the settled barrier +
+        computed makeup shares before any share is dealt — a promoted
+        standby replays the remainder with the SAME stable op-ids, which
+        the agents' dedup turns into exactly-once application.
+        """
         departed = [self.agents.pop(h) for h in hosts]
         for h in hosts:
             self.registry.remove(h)
             self.straggler.forget(h)
             self.reports.pop(h, None)
+        rid = self.reshards
+        consumed = {d.host: d.consumed_position() for d in departed}
+        self._pending_reshard = {
+            "rid": rid, "reason": reason, "stage": "begin",
+            "lost": list(hosts), "consumed": dict(consumed),
+            "departed": {d.host: d.ha_state() for d in departed}}
+        self._checkpoint()
+        return self._execute_reshard(departed, consumed,
+                                     reason=reason, rid=rid)
+
+    def _execute_reshard(self, departed: Sequence[Any],
+                         consumed: Dict[str, int], *, reason: str,
+                         rid: int) -> Dict[str, Any]:
+        hosts = [d.host for d in departed]
         # survivors keep their relative order; shard indices compact
         survivors = sorted(self.agents.values(),
-                           key=lambda a: a.loader.sampler.host_index)
+                           key=lambda a: a.shard_index())
         new_count = len(survivors)
         old_count = new_count + len(departed)
-        consumed = {d.host: d.consumed_position() for d in departed}
         event: Dict[str, Any] = {"kind": "reshard", "reason": reason,
                                  "lost": list(hosts), "host": hosts[0],
                                  "dead_consumed": consumed,
@@ -690,15 +1303,18 @@ class FleetCoordinator:
         if not survivors:
             event.update(barrier=None, makeup_batches=0, plan=None)
             self.events.append(event)
+            self._pending_reshard = None
+            self._checkpoint()
             return event
         barrier = self._negotiate_barrier(
-            survivors, new_count, max(consumed.values(), default=0))
+            survivors, new_count, max(consumed.values(), default=0),
+            rid=rid)
         plan = plan_remesh(
             alive_hosts=new_count,
             devices_per_host=self.cfg.devices_per_host,
             model_axis=self.cfg.model_axis,
             old_hosts=old_count,
-            old_global_batch=departed[0].loader.sampler.global_batch,
+            old_global_batch=departed[0].global_batch(),
             restore_step=barrier)
         # makeup: every departed host's undelivered slices up to the
         # settled barrier, PLUS any makeup chunks a previous reshard dealt
@@ -710,31 +1326,431 @@ class FleetCoordinator:
         missing: List[np.ndarray] = []
         makeup_batches = 0
         for d in departed:
-            sampler = d.loader.sampler           # OLD shard map, frozen
-            bpe = sampler.batches_per_epoch()
+            bpe = d.batches_per_epoch()          # OLD shard map, frozen
             for b in range(consumed[d.host], barrier):
-                missing.append(sampler.local_indices(b // bpe, b % bpe))
+                missing.append(d.local_indices(b // bpe, b % bpe))
                 makeup_batches += 1
             inherited = d.undelivered_makeup()
             missing.extend(inherited)
             makeup_batches += len(inherited)
+        shares: List[List[np.ndarray]] = [[] for _ in survivors]
         if missing:
             flat = np.concatenate(missing)
-            new_local = survivors[0].loader.sampler.global_batch // new_count
+            new_local = survivors[0].global_batch() // new_count
             chunks = [flat[i:i + new_local]
                       for i in range(0, len(flat), new_local)]
-            shares: List[List[np.ndarray]] = [[] for _ in survivors]
             for i, chunk in enumerate(chunks):
                 shares[i % new_count].append(chunk)
-            for a, share in zip(survivors, shares):
-                if share:
-                    a.add_makeup(share)
+        event.update(barrier=barrier, makeup_batches=makeup_batches,
+                     plan=plan)
+        if self._pending_reshard is not None:
+            self._pending_reshard.update(
+                stage="deal", barrier=barrier,
+                shares={a.host: [c.tolist() for c in share]
+                        for a, share in zip(survivors, shares) if share},
+                dealt=[],
+                event=to_wire({**event, "plan": dataclasses.asdict(plan)}))
+            self._checkpoint()
+        self._deal_makeup(
+            {a.host: share for a, share in zip(survivors, shares) if share},
+            rid=rid)
         self.reshards += 1
         # the per-host optimum moved with the local batch size: follow the
         # reshard with a re-consensus for the new topology at next poll
         if self._forced_reason is None:
             self._forced_reason = "post-reshard"
-        event.update(barrier=barrier, makeup_batches=makeup_batches,
-                     plan=plan)
         self.events.append(event)
+        self._pending_reshard = None
+        self._checkpoint()
         return event
+
+    def _deal_makeup(self, shares: Dict[str, List[np.ndarray]], *,
+                     rid: int) -> None:
+        for host, share in shares.items():
+            agent = self.agents.get(host)
+            if agent is None:
+                continue
+            agent.add_makeup(share, op_id=f"reshard-{rid}-makeup-{host}")
+            if self._pending_reshard is not None:
+                self._pending_reshard["dealt"].append(host)
+                self._checkpoint()
+
+    # ---- survivability: snapshot / restore / replay ------------------------
+    def _checkpoint(self) -> None:
+        """Publish the full decide-state to the snapshot store (no-op in
+        direct mode) — called on every state transition so a standby can
+        resume from the last completed step."""
+        if self._store is not None:
+            self._store.put(self.state_dict())
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Everything a standby needs to BE this coordinator: consensus
+        history + backoff, heartbeat registry, straggler windows, the
+        stale-report guard, member mirrors + dealt-makeup logs, the
+        bounded event log (with its fleet-lifetime seq), the last uniform
+        push, and any pending (write-ahead) reshard intent."""
+        return to_wire({
+            "config": dataclasses.asdict(self.cfg),
+            "members": {h: a.ha_state() for h, a in self.agents.items()},
+            "reports": {h: report_to_wire(r)
+                        for h, r in self.reports.items()},
+            "last_steps": dict(self._last_steps),
+            "heartbeats": self.registry.state_dict(),
+            "straggler": self.straggler.state_dict(),
+            "events": self.events.state_dict(),
+            "counters": {"consensus_runs": self.consensus_runs,
+                         "reshards": self.reshards,
+                         "last_consensus_step": self._last_consensus_step,
+                         "backoff": self._backoff,
+                         "forced_reason": self._forced_reason,
+                         "stale_reports": self.stale_reports},
+            "pushed": self._pushed,
+            "pending_reshard": self._pending_reshard})
+
+    @classmethod
+    def restore(cls, state: Dict[str, Any], *,
+                clock: Callable[[], float] = time.monotonic
+                ) -> "FleetCoordinator":
+        """Rebuild a coordinator from a snapshot.  Member proxies are
+        materialized when a CoordinatorServer binds (they need a wire to
+        speak through); until then membership lives in ``_member_state``.
+        Historical events restore as plain dicts (ElasticPlan values
+        become dicts — they are records, not live objects)."""
+        cfgd = dict(state["config"])
+        for k in ("locality_chunks", "cache_budgets"):
+            if cfgd.get(k) is not None:
+                cfgd[k] = tuple(cfgd[k])
+        c = cls(config=FleetConfig(**cfgd), clock=clock)
+        c._member_state = dict(state.get("members") or {})
+        c.reports = {h: report_from_wire(r)
+                     for h, r in (state.get("reports") or {}).items()}
+        c._last_steps = {h: int(v)
+                         for h, v in (state.get("last_steps") or {}).items()}
+        c.registry.load_state(state.get("heartbeats") or {})
+        c.straggler.load_state(state.get("straggler") or {})
+        c.events = EventLog.restore(state.get("events") or {})
+        counters = state.get("counters") or {}
+        c.consensus_runs = int(counters.get("consensus_runs", 0))
+        c.reshards = int(counters.get("reshards", 0))
+        c._last_consensus_step = int(counters.get("last_consensus_step", 0))
+        c._backoff = int(counters.get("backoff", 1))
+        c._forced_reason = counters.get("forced_reason")
+        c.stale_reports = int(counters.get("stale_reports", 0))
+        c._pushed = state.get("pushed")
+        c._pending_reshard = state.get("pending_reshard")
+        return c
+
+    def _bind_server(self, server: "CoordinatorServer") -> None:
+        """Attach the message server: restore-time members materialize as
+        RemoteAgent proxies, and heartbeats are re-armed at NOW so a
+        failover gap longer than the timeout does not insta-kill every
+        host (a truly dead host simply times out once more)."""
+        self._server = server
+        self._store = server.store
+        if self._member_state is not None:
+            for host, ms in self._member_state.items():
+                proxy = RemoteAgent.restore(server, ms)
+                proxy.coordinator = self
+                self.agents[host] = proxy
+            self._member_state = None
+        self.registry.rearm(list(self.agents))
+
+    def _resume_reshard(self) -> Optional[Dict[str, Any]]:
+        """Replay a reshard the previous leader died inside (promotion
+        path).  stage="begin": nothing was dealt — run it from the frozen
+        intent.  stage="deal": the barrier settled and shares froze —
+        re-deal only the un-acked shares under their original op-ids."""
+        pr = self._pending_reshard
+        if not pr or self._server is None:
+            return None
+        rid = int(pr["rid"])
+        consumed = {h: int(v) for h, v in pr["consumed"].items()}
+        departed = [RemoteAgent.restore(self._server, ms)
+                    for ms in pr["departed"].values()]
+        if pr.get("stage") == "begin":
+            return self._execute_reshard(
+                departed, consumed,
+                reason=str(pr["reason"]) + "+replay", rid=rid)
+        # stage == "deal"
+        dealt = set(pr.get("dealt") or [])
+        shares = {h: [np.asarray(c, dtype=np.int64) for c in share]
+                  for h, share in (pr.get("shares") or {}).items()
+                  if h not in dealt}
+        self._deal_makeup(shares, rid=rid)
+        self.reshards += 1
+        if self._forced_reason is None:
+            self._forced_reason = "post-reshard"
+        event = dict(pr.get("event") or {})
+        event["reason"] = str(event.get("reason", "")) + "+replay"
+        self.events.append(event)
+        self._pending_reshard = None
+        self._checkpoint()
+        return event
+
+
+# --------------------------------------------------------------------------
+# the coordinator's message server + the standby replica
+# --------------------------------------------------------------------------
+class CoordinatorServer:
+    """Binds a FleetCoordinator to a transport endpoint.
+
+    Inbound: registration/join, (delta-encoded) reports, beats, drift and
+    locality casts.  Outbound: every command the decide loop issues goes
+    through :meth:`send`, stamped with the leader's fence token and a
+    unique op-id — an agent that has seen a newer fence rejects the
+    command (:class:`StaleLeaderError` marks this server deposed).
+
+    Report handling keeps the per-host delta base server-side only: after
+    a failover the new server simply answers ``need_full`` once and the
+    protocol self-heals.  Reconnecting hosts are caught up from the
+    coordinator's ``_pushed`` record (cell re-push + schedule sync).
+    """
+
+    def __init__(self, coord: FleetCoordinator, transport: LocalTransport, *,
+                 name: str = "coord", owner: str = "coord-0",
+                 lease: Optional[LeaderLease] = None,
+                 store: Optional[SnapshotStore] = None,
+                 retries: int = 6):
+        self.coord = coord
+        self.transport = transport
+        self.name = name
+        self.owner = owner
+        self.lease = lease
+        self.store = store
+        self.retries = max(1, retries)
+        self.fence = 0 if lease is None else (lease.acquire(owner) or 0)
+        self.deposed = False
+        self.crashed = False
+        self._cmd_seq = 0
+        self._last_full: Dict[str, Dict[str, Any]] = {}
+        # traffic accounting for the O(hosts) heartbeat assertion
+        self.report_full_msgs = 0
+        self.report_full_bytes = 0
+        self.report_delta_msgs = 0
+        self.report_delta_bytes = 0
+        transport.register(name, self.handle, replace=True)
+        coord._bind_server(self)
+        coord._checkpoint()
+
+    # ---- leadership --------------------------------------------------------
+    def tick(self) -> None:
+        """Refresh the lease + checkpoint — the leader's heartbeat."""
+        if self.crashed or self.deposed:
+            return
+        if self.lease is not None and not self.lease.refresh(self.owner):
+            self.deposed = True
+            return
+        self.coord._checkpoint()
+
+    def crash(self) -> None:
+        """Simulated leader death: endpoint gone, lease left to expire."""
+        self.crashed = True
+        self.transport.unregister(self.name)
+
+    def poll(self) -> List[Dict[str, Any]]:
+        """Drive the decide loop, absorbing deposition: a stale-fence
+        rejection anywhere inside means a newer leader owns the fleet —
+        this one stops acting instead of fighting."""
+        if self.crashed or self.deposed:
+            return []
+        try:
+            actions = self.coord.poll()
+        except StaleLeaderError:
+            self.deposed = True
+            return []
+        self.coord._checkpoint()
+        return actions
+
+    # ---- outbound ----------------------------------------------------------
+    def send(self, host: str, op: str, args: Dict[str, Any], *,
+             op_id: Optional[str] = None) -> Any:
+        self._cmd_seq += 1
+        msg = {"kind": "cmd", "op": op, "args": to_wire(args),
+               "fence": self.fence,
+               "id": op_id or f"f{self.fence}-c{self._cmd_seq}"}
+        last_err: Optional[str] = None
+        for _ in range(self.retries):
+            try:
+                reply = self.transport.call(self.name, host, msg)
+            except TransportError as e:
+                last_err = str(e)
+                continue
+            if reply.get("ok"):
+                return reply.get("result")
+            err = str(reply.get("error", ""))
+            if err == "stale-fence":
+                self.deposed = True
+                raise StaleLeaderError(
+                    f"{self.name}(fence={self.fence}) deposed: {host} has "
+                    f"seen fence {reply.get('fence')}")
+            last_err = err
+        raise TransportError(
+            f"{self.name} -> {host}: {op} failed after "
+            f"{self.retries} attempts ({last_err})")
+
+    # ---- inbound -----------------------------------------------------------
+    def handle(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        kind = msg.get("kind")
+        host = str(msg.get("host", "?"))
+        if kind == "report":
+            return self._handle_report(host, msg)
+        if kind == "beat":
+            if host in self.coord.agents:
+                self.coord.beat(host)
+                return {"ok": True, "fence": self.fence}
+            return {"ok": False, "evicted": True, "fence": self.fence}
+        if kind == "register":
+            proxy = RemoteAgent(self, msg["spec"])
+            self.coord.register(proxy)
+            self._last_full.pop(host, None)
+            self.coord._checkpoint()
+            return {"ok": True, "fence": self.fence}
+        if kind == "join":
+            proxy = RemoteAgent(self, msg["spec"])
+            barrier = self.coord.join(proxy)
+            self._last_full.pop(host, None)
+            return {"ok": True, "fence": self.fence, "barrier": barrier}
+        if kind == "leave":
+            if host in self.coord.agents:
+                self.coord.leave(host)
+            return {"ok": True, "fence": self.fence}
+        if kind == "drift":
+            self.coord.request_consensus(
+                reason=str(msg.get("reason", "drift")))
+            return {"ok": True, "fence": self.fence}
+        if kind == "locality":
+            self.coord.request_locality(int(msg.get("chunk", 0)), host=host)
+            return {"ok": True, "fence": self.fence}
+        if kind == "ping":
+            return {"ok": True, "fence": self.fence}
+        return {"ok": False, "error": f"unknown kind {kind!r}",
+                "fence": self.fence}
+
+    def _handle_report(self, host: str,
+                       msg: Dict[str, Any]) -> Dict[str, Any]:
+        from repro.tuning.transport import (merge_report_delta,
+                                            payload_bytes)
+        proxy = self.coord.agents.get(host)
+        if proxy is None:
+            # resharded around during a partition: the host's shard no
+            # longer exists — tell it so it can stop and (re)join
+            return {"ok": False, "evicted": True, "fence": self.fence}
+        if msg.get("delta"):
+            base = self._last_full.get(host)
+            if base is None or int(base.get("steps", -1)) \
+                    != int(msg.get("base", -2)):
+                return {"ok": False, "need_full": True, "fence": self.fence}
+            fulls = [merge_report_delta(base, msg.get("patch") or {})]
+            self.report_delta_msgs += 1
+            self.report_delta_bytes += payload_bytes(msg)
+        else:
+            fulls = list(msg.get("reports") or [])
+            self.report_full_msgs += 1
+            self.report_full_bytes += payload_bytes(msg)
+        accepted_any = False
+        last_steps = -1
+        for f in fulls:
+            r = report_from_wire(f)
+            if self.coord.ingest(r):
+                accepted_any = True
+                self._last_full[host] = {k: v for k, v in f.items()}
+                if hasattr(proxy, "observe_report"):
+                    proxy.observe_report(r, f.get("schedules"))
+            last_steps = max(last_steps, r.steps)
+        reply = {"ok": True, "fence": self.fence, "steps": last_steps}
+        if accepted_any:
+            self._catch_up(proxy)
+        return reply
+
+    def _catch_up(self, proxy: Any) -> None:
+        """Schedule catch-up for a host that missed pushes while
+        partitioned: re-issue the last uniform cell and/or schedules when
+        the host's reported state disagrees with what the fleet runs."""
+        pushed = self.coord._pushed
+        if not pushed or not hasattr(proxy, "param_cell"):
+            return
+        try:
+            cell = pushed.get("cell")
+            if cell is not None and tuple(cell) != proxy.param_cell():
+                proxy.apply_params(int(cell[0]), int(cell[1]))
+            sched = pushed.get("schedule")
+            if sched is not None:
+                mine = to_wire(proxy.schedule_state())
+                if (mine.get("locality"), mine.get("cache")) != \
+                        (sched.get("locality"), sched.get("cache")):
+                    proxy.sync_schedules(sched)
+        except TransportError:
+            pass        # still flaky — the next accepted report retries
+
+
+class CoordinatorReplica:
+    """A standby coordinator: watches the lease, and when the primary's
+    lease expires, acquires it (fence bump), restores the last snapshot,
+    takes over the transport endpoint and replays any pending reshard.
+    The promotion is the failover state machine's only transition:
+    standby -> leader; a deposed old leader discovers its fate through
+    stale-fence rejections."""
+
+    def __init__(self, transport: LocalTransport, lease: LeaderLease,
+                 store: SnapshotStore, *, owner: str = "coord-standby",
+                 name: str = "coord",
+                 clock: Callable[[], float] = time.monotonic):
+        self.transport = transport
+        self.lease = lease
+        self.store = store
+        self.owner = owner
+        self.name = name
+        self.clock = clock
+        self.server: Optional[CoordinatorServer] = None
+        self.promoted = False
+
+    def tick(self) -> Optional[CoordinatorServer]:
+        """Returns the new server on the tick that promotes, else None."""
+        if self.promoted:
+            return None
+        if self.lease.holder() is not None:
+            return None                       # primary still refreshing
+        state = self.store.get()
+        if state is None:
+            return None
+        fence = self.lease.acquire(self.owner)
+        if fence is None:
+            return None
+        coord = FleetCoordinator.restore(state, clock=self.clock)
+        server = CoordinatorServer(coord, self.transport, name=self.name,
+                                   owner=self.owner, lease=self.lease,
+                                   store=self.store)
+        server.fence = fence
+        coord.events.append({"kind": "promote", "owner": self.owner,
+                             "fence": fence})
+        # replay any reshard the old leader died inside; a host that is
+        # unreachable RIGHT NOW must not fail the promotion — the intent
+        # stays write-ahead-logged and the new leader's poll resumes it
+        coord._absorb_transport(coord._resume_reshard)
+        coord._checkpoint()
+        self.server = server
+        self.promoted = True
+        return server
+
+
+def connect_host(transport: LocalTransport, host: str, loader: DataLoader, *,
+                 evaluator=None, coord: str = "coord",
+                 link_config: Optional["LinkConfig"] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 join: bool = False, consumes_stream: bool = True,
+                 **agent_kw: Any) -> HostAgent:
+    """Construct a transport-attached :class:`HostAgent` and announce it.
+
+    The one-call fleet entry point for Trainer/serving hosts:
+    ``register`` (fleet start) or ``join=True`` (mid-run admission —
+    incumbents reshard and this host aligns at the returned barrier).
+    Raises :class:`TransportError` when the coordinator is unreachable
+    after retries — admission is the only send that may block/raise; all
+    steady-state traffic after this is fire-and-forget."""
+    from repro.tuning.transport import LinkConfig as _LinkConfig
+    link = AgentLink(transport, host, coord=coord,
+                     config=link_config or _LinkConfig(), clock=clock)
+    agent = HostAgent(host, loader, evaluator=evaluator, link=link,
+                      consumes_stream=consumes_stream, **agent_kw)
+    (link.join if join else link.register)()
+    return agent

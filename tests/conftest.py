@@ -159,6 +159,110 @@ def fleet_factory():
         h.close()
 
 
+class WireFleet:
+    """A transport-mode fleet (DESIGN.md §8): hosts talk to the
+    coordinator over a (fault-injectable) message transport, a lease +
+    snapshot store back a standby replica, and a fake clock drives
+    heartbeats, lease expiry, and failover deterministically.
+
+    ``rounds`` is one lockstep driver step: every alive host pulls one
+    batch and observes (reports cross the wire or park in the link's
+    bounded queue), delayed messages pump, the leader ticks its lease and
+    polls, and the standby watches for expiry — promotion swaps
+    ``self.server``/``self.coord`` to the new leader transparently.
+    """
+
+    def __init__(self, *, hosts=3, n=480, gb=12, faults=None, ttl=4.0,
+                 heartbeat_timeout=6.0, link_config=None, **cfg_kw):
+        from repro.data import DataLoader, LoaderParams
+        from repro.tuning import (FaultSpec, FaultyTransport, FleetConfig,
+                                  FleetCoordinator, LeaderLease, LinkConfig,
+                                  SnapshotStore, connect_host)
+        from repro.tuning.fleet import CoordinatorReplica, CoordinatorServer
+
+        self.n, self.gb = n, gb
+        self.bpe = n // gb
+        self.clock = [0.0]
+        ck = lambda: self.clock[0]  # noqa: E731
+        self.transport = FaultyTransport(faults or FaultSpec())
+        self.lease = LeaderLease(ttl_s=ttl, clock=ck)
+        self.store = SnapshotStore()
+        defaults = dict(heartbeat_timeout_s=heartbeat_timeout,
+                        warmup_steps=2, cooldown_steps=4, num_cpu_cores=4,
+                        num_devices=1, max_prefetch=2,
+                        retune_budget_batches=2)
+        defaults.update(cfg_kw)
+        self.coord = FleetCoordinator(config=FleetConfig(**defaults),
+                                      clock=ck)
+        self.server = CoordinatorServer(self.coord, self.transport,
+                                        owner="coord-0", lease=self.lease,
+                                        store=self.store)
+        self.replica = CoordinatorReplica(self.transport, self.lease,
+                                          self.store, owner="coord-standby",
+                                          clock=ck)
+        self.agents, self.streams = [], []
+        for h in range(hosts):
+            dl = DataLoader(make_index_dataset(n), gb, shuffle=True, seed=5,
+                            params=LoaderParams(num_workers=2,
+                                                prefetch_factor=2),
+                            host_index=h, host_count=hosts)
+            self.agents.append(connect_host(
+                self.transport, f"host{h}", dl,
+                evaluator=make_table_evaluator(
+                    lambda i, j: 4.0 / i + 0.1 * j),
+                clock=ck,
+                link_config=link_config or LinkConfig(seed=h, jitter=0.0)))
+            self.streams.append(dl.stream(to_device=False))
+        # deliver any setup message a delay fault parked (a stale register
+        # replayed mid-run would be a different, rarer anomaly)
+        self.transport.pump()
+        self.delivered = []
+
+    def rounds(self, k, alive=None, *, poll=True):
+        alive = list(alive if alive is not None else range(len(self.agents)))
+        for _ in range(k):
+            self.clock[0] += 1.0
+            for h in alive:
+                self.delivered.append(next(self.streams[h]))
+                self.agents[h].observe(data_s=0.001, step_s=0.05)
+            self.transport.pump()
+            self.server.tick()
+            if poll:
+                self.server.poll()
+            promoted = self.replica.tick()
+            if promoted is not None:
+                self.server = promoted
+                self.coord = promoted.coord
+
+    def drain(self, alive):
+        for h in alive:
+            s = self.streams[h]
+            while s.position < self.bpe:
+                self.delivered.append(next(s))
+
+    def close(self):
+        for s in self.streams:
+            try:
+                s.close()
+            except Exception:
+                pass
+
+
+@pytest.fixture
+def wire_fleet():
+    """Factory fixture for :class:`WireFleet`; streams close at teardown."""
+    fleets = []
+
+    def build(**kw):
+        f = WireFleet(**kw)
+        fleets.append(f)
+        return f
+
+    yield build
+    for f in fleets:
+        f.close()
+
+
 # --------------------------------------------------------------------------
 # per-test duration accounting (CI budget gate, see check_durations.py)
 # --------------------------------------------------------------------------

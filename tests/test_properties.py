@@ -14,10 +14,12 @@ reshard point, checkpoint point, layout) tuples the pipeline must hold
 * **byte-identical multisets** — a chunked epoch delivers the same
   sample bytes as the random epoch, through the real loader machinery;
 
-plus a seeded fault-injection matrix for the fleet control plane:
+plus two seeded fault-injection matrices for the fleet control plane:
 randomized join/leave/degrade/correlated-death timelines must lose and
 duplicate zero batches, with exactly one reshard per correlated-death
-group.
+group; and the same guarantees over a faulty transport (drop, delay,
+duplicate, partition windows) with a coordinator crash + standby
+failover mid-run under fencing (ISSUE 7, DESIGN.md §8).
 
 Runs under real hypothesis when installed (CI) and under the shim's
 deterministic fallback engine otherwise — either way the suite executes
@@ -444,3 +446,105 @@ def test_fleet_fault_injection_matrix(seed):
     # joins each emitted their own reshard
     joins = [e for e in coord.events if e["kind"] == "join"]
     assert len(joins) == sum(1 for k, _, _ in events if k == "join")
+
+
+# --------------------------------------------------------------------------
+# network-fault matrix: the same guarantees over a faulty wire, with a
+# coordinator crash + standby failover mid-reshard (ISSUE 7, DESIGN.md §8)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(6))
+def test_fleet_network_fault_matrix(seed, wire_fleet):
+    """Seeded network-fault timelines over the message transport: random
+    drop/delay/duplicate/reply-drop rates, partition windows shorter than
+    the heartbeat timeout on the surviving hosts, one coordinator crash
+    (standby promotes via the lease) and one host death after failover.
+    The epoch must still be the exact multiset — zero lost, zero
+    duplicated batches — with exactly one reshard applied for the death
+    (idempotent replay under fencing, never a double application) and
+    every post-failover command carrying the promoted leader's fence.
+
+    Partition windows are capped below the heartbeat timeout on purpose:
+    a longer partition is indistinguishable from death, so the fleet
+    legitimately evicts and reshards around the host (covered by
+    test_transport.py's eviction test).  The dying host's final report is
+    flushed before it is killed — a host that consumed batches but never
+    reported them trades a duplicate for a loss by design (two generals;
+    see DESIGN.md §8)."""
+    from repro.tuning import FaultSpec
+
+    rng = np.random.default_rng(100 + seed)
+    faults = FaultSpec(drop=float(rng.uniform(0, 0.05)),
+                       delay=float(rng.uniform(0, 0.04)),
+                       duplicate=float(rng.uniform(0, 0.05)),
+                       reply_drop=float(rng.uniform(0, 0.05)),
+                       seed=seed)
+    fleet = wire_fleet(faults=faults)
+
+    crash_at = int(rng.integers(6, 13))
+    death_at = crash_at + int(rng.integers(9, 13))
+    # two partition windows on the SURVIVORS (host0/host1), each shorter
+    # than the heartbeat timeout (6.0): tolerated, never an eviction
+    cuts = {}
+    for host, lo, hi in ((0, 3, crash_at),
+                        (1, crash_at + 1, death_at + 2)):
+        start = int(rng.integers(lo, hi))
+        dur = int(rng.integers(1, 4))
+        cuts.setdefault(start, []).append((host, "cut"))
+        cuts.setdefault(start + dur, []).append((host, "heal"))
+
+    def apply_cuts(step):
+        for host, action in cuts.get(step, ()):
+            if action == "cut":
+                fleet.transport.partition(f"host{host}", "coord")
+            else:
+                fleet.transport.heal(f"host{host}", "coord")
+
+    step = 0
+    while step < death_at:
+        apply_cuts(step)
+        if step == crash_at:
+            fleet.server.crash()
+        fleet.rounds(1)
+        step += 1
+
+    assert fleet.replica.promoted, "standby never promoted after crash"
+    new_fence = fleet.server.fence
+    assert new_fence > 1, "promotion must mint a fresh fencing epoch"
+
+    # land host2's final report, then kill it: the coordinator's makeup
+    # math works from the last *reported* consumed position
+    for _ in range(30):
+        fleet.clock[0] += 0.01
+        fleet.transport.pump()
+        if fleet.agents[2].link.send_report(fleet.agents[2].report_wire()):
+            break
+    else:
+        pytest.fail("host2 could not land its final report")
+
+    def death_reshards():
+        return [e for e in fleet.coord.events if e["kind"] == "reshard"
+                and str(e["reason"]).startswith("dead")]
+
+    for _ in range(25):
+        if death_reshards():
+            break
+        apply_cuts(step)
+        fleet.rounds(1, alive=[0, 1])
+        step += 1
+    # settle: heal any still-open window, replay anything pending
+    for s in range(step, max(cuts, default=0) + 1):
+        apply_cuts(s)
+    fleet.rounds(3, alive=[0, 1])
+    fleet.drain([0, 1])
+    fleet.close()
+
+    # zero lost, zero duplicated over the whole faulty timeline
+    assert flat_indices(fleet.delivered) == list(range(fleet.n))
+    # the death was resharded exactly once (a fenced replay appends
+    # "+replay" to the same event; an interrupted attempt appends none)
+    assert len(death_reshards()) == 1, fleet.coord.events
+    # survivors follow the promoted leader: every post-failover command
+    # carried the new fence, and the old leader can no longer act
+    for h in (0, 1):
+        assert fleet.agents[h].link.fence == new_fence
+    assert fleet.server.fence == new_fence and not fleet.server.deposed
