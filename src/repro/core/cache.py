@@ -44,7 +44,9 @@ class DPTCache:
 
     def get_params(self, machine_fp: str, dataset_fp: str, batch_size: int,
                    epoch: int = 0, *, require_locality: bool = False,
-                   require_cache: bool = False, with_cache: bool = False
+                   require_cache: bool = False, with_cache: bool = False,
+                   require_slow_lane: bool = False,
+                   with_slow_lane: bool = False
                    ) -> Optional[Tuple[int, ...]]:
         """Like ``get`` but with the locality axis: (nworker, nprefetch,
         locality_chunk).  Entries written before the axis existed read
@@ -57,7 +59,10 @@ class DPTCache:
         above is unchanged for existing callers: ``with_cache=True``
         appends ``cache_budget_bytes`` as a fourth element;
         ``require_cache=True`` treats entries whose search never swept
-        the budget axis as misses (same staleness rule as locality)."""
+        the budget axis as misses (same staleness rule as locality).
+        The dual-lane axis (DESIGN.md §9) follows the same pattern:
+        ``with_slow_lane=True`` appends ``slow_lane_workers`` and
+        ``require_slow_lane=True`` treats lane-blind entries as misses."""
         with self._lock:
             v = self._store.get(self._key(machine_fp, dataset_fp,
                                           batch_size, epoch))
@@ -67,10 +72,14 @@ class DPTCache:
             return None
         if require_cache and not v.get("cache_searched", False):
             return None
+        if require_slow_lane and not v.get("slow_lane_searched", False):
+            return None
         out = (v["nworker"], v["nprefetch"],
                int(v.get("locality_chunk", 0)))
         if with_cache:
             out = out + (int(v.get("cache_budget_bytes", 0)),)
+        if with_slow_lane:
+            out = out + (int(v.get("slow_lane_workers", 0)),)
         return out
 
     def put(self, machine_fp: str, dataset_fp: str, batch_size: int,
@@ -89,6 +98,9 @@ class DPTCache:
             "cache_budget_bytes": getattr(result, "cache_budget_bytes", 0),
             "cache_searched": any(
                 getattr(t, "cache_budget_bytes", 0) for t in result.trials),
+            "slow_lane_workers": getattr(result, "slow_lane_workers", 0),
+            "slow_lane_searched": any(
+                getattr(t, "slow_lane_workers", 0) for t in result.trials),
         }
         with self._lock:
             prev = self._store.get(key)
@@ -107,6 +119,13 @@ class DPTCache:
                 entry["cache_budget_bytes"] = prev.get(
                     "cache_budget_bytes", 0)
                 entry["cache_searched"] = True
+            if (not entry["slow_lane_searched"] and prev
+                    and prev.get("slow_lane_searched")):
+                # and for the dual-lane axis: a lane-blind refinement
+                # must not clobber a searched lane width to 0
+                entry["slow_lane_workers"] = prev.get(
+                    "slow_lane_workers", 0)
+                entry["slow_lane_searched"] = True
             self._store[key] = entry
             if self.path:
                 tmp = self.path + ".tmp"

@@ -48,6 +48,10 @@ class DPTConfig:
     # cache budgets in bytes (0 = cache off).  Same contract: None keeps
     # the kwarg away from the evaluator entirely.
     cache_budgets: Optional[Tuple[int, ...]] = None
+    # beyond-paper fifth grid axis (DESIGN.md §9): candidate slow-lane
+    # worker counts (0 = dual-lane off).  Same contract: None keeps the
+    # kwarg away from the evaluator entirely.
+    slow_lanes: Optional[Tuple[int, ...]] = None
 
     def resolve(self) -> Tuple[int, int]:
         n = self.num_cpu_cores
@@ -79,6 +83,9 @@ class Trial:
     # cross-epoch cache budget the cell was measured with (0 = cache off /
     # the cache axis was not searched)
     cache_budget_bytes: int = 0
+    # slow-lane workers the cell was measured with (0 = dual-lane off /
+    # the lane axis was not searched)
+    slow_lane_workers: int = 0
 
 
 @dataclasses.dataclass
@@ -90,6 +97,7 @@ class DPTResult:
     default_time: Optional[float] = None
     locality_chunk: int = 0
     cache_budget_bytes: int = 0
+    slow_lane_workers: int = 0
 
     @property
     def speedup_vs_default(self) -> Optional[float]:

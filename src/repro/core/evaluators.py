@@ -28,18 +28,22 @@ class LoaderEvaluator:
     def __call__(self, nworker: int, nprefetch: int, *, num_batches: int = 16,
                  epoch: int = 0,
                  locality_chunk: Optional[int] = None,
-                 cache_budget_bytes: Optional[int] = None) -> TransferStats:
+                 cache_budget_bytes: Optional[int] = None,
+                 slow_lane_workers: Optional[int] = None) -> TransferStats:
         self.calls += 1
         # replace() keeps the loader's delivery knobs (fast_path, zero_copy,
         # ordered, use_processes, ...) so trials measure the same machinery
-        # the live stream runs.  The locality and cache axes are passed as
-        # measurement-only overrides — candidate chunk sizes / budgets must
-        # not touch the shared sampler's live schedule or the live tier.
+        # the live stream runs.  The locality, cache and slow-lane axes are
+        # passed as measurement-only overrides — candidate chunk sizes /
+        # budgets / lane widths must not touch the shared sampler's live
+        # schedule, the live tier, or the live pool's lane split.
         self.loader.with_params(self.loader.params.replace(
             num_workers=nworker, prefetch_factor=nprefetch,
             device_prefetch=self.device_prefetch))
         kw = {} if cache_budget_bytes is None \
             else {"cache_budget_bytes": cache_budget_bytes}
+        if slow_lane_workers is not None:
+            kw["slow_lane_workers"] = slow_lane_workers
         return self.loader.measure_transfer_time(
             num_batches, epoch=epoch, to_device=self.to_device,
             locality_chunk=locality_chunk, **kw)
@@ -61,7 +65,8 @@ class SimulatorEvaluator:
     def __call__(self, nworker: int, nprefetch: int, *, num_batches: int = 16,
                  epoch: int = 0,
                  locality_chunk: Optional[int] = None,
-                 cache_budget_bytes: Optional[int] = None) -> TransferStats:
+                 cache_budget_bytes: Optional[int] = None,
+                 slow_lane_workers: Optional[int] = None) -> TransferStats:
         self.calls += 1
         if self.num_batches_cap is not None:
             num_batches = min(num_batches, self.num_batches_cap)
@@ -70,7 +75,8 @@ class SimulatorEvaluator:
             nworker=nworker, nprefetch=nprefetch, epoch=epoch,
             device_prefetch=self.device_prefetch, device_ram=self.device_ram,
             locality_chunk=locality_chunk or 0,
-            cache_budget_bytes=cache_budget_bytes or 0)
+            cache_budget_bytes=cache_budget_bytes or 0,
+            slow_lane_workers=slow_lane_workers or 0)
         return TransferStats(r.seconds, num_batches,
                              int(num_batches * self.sim.batch_bytes(
                                  self.batch_size)),

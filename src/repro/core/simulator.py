@@ -127,14 +127,20 @@ class LoaderSimulator:
                  check_overflow: bool = True,
                  locality_chunk: int = 0, host_count: int = 1,
                  layout: str = "host_major",
-                 cache_budget_bytes: float = 0.0) -> SimResult:
+                 cache_budget_bytes: float = 0.0,
+                 slow_lane_workers: int = 0) -> SimResult:
         sp, mp = self.sp, self.mp
         K = max(1, nworker)
         j = max(1, nprefetch)
         budget = max(0.0, float(cache_budget_bytes))
+        k_lane = max(0, slow_lane_workers)
+        # heavy-tailed per-item cost (DESIGN.md §9): tail_fraction of items
+        # cost tail_mult x.  Neutral defaults (0 / 1) change nothing below.
+        heavy = sp.tail_fraction > 0.0 and sp.tail_mult > 1.0
 
         foot = self.footprint(batch_size, nworker, nprefetch, device_prefetch)
         foot += budget                 # the pinned tier is loader memory
+        foot += k_lane * mp.worker_overhead_bytes   # lane workers are real
         avail_ram = mp.host_ram - mp.os_reserved - self.model_host_bytes
         if check_overflow and foot > avail_ram:
             raise MemoryOverflow(
@@ -198,7 +204,15 @@ class LoaderSimulator:
         # cost (StorageProfile.vectorized_decode_fixed_s; None = per-sample)
         cpu_item_s = (sp.effective_decode_fixed_s
                       + sp.decode_cpu_s_per_byte * sp.decoded)
+        base_cpu_item_s = cpu_item_s
+        if heavy:
+            # tail items inflate the MEAN decode cost regardless of lanes:
+            # the work still has to happen somewhere.
+            cpu_item_s *= 1.0 + sp.tail_fraction * (sp.tail_mult - 1.0)
         rate_cpu = mp.cpu_speedup(K) / cpu_item_s
+        if k_lane:
+            # lane workers contend for the same cores as the fast lane
+            rate_cpu *= mp._over_penalty(K) / mp._over_penalty(K + k_lane)
 
         # --- pipeline composition: prefetch_factor controls IO/CPU overlap
         # within each worker (j=1: serialized; j>=2: stages overlap, gains
@@ -208,10 +222,31 @@ class LoaderSimulator:
         overlap = 1.0 - 1.0 / (1.0 + 1.2 * (j - 0.5))
         per_item = max(t_io, t_cpu) + (1.0 - overlap) * min(t_io, t_cpu)
         per_item *= _jitter("cell", K, j, sp.item_bytes, batch_size)
+        if k_lane:
+            # dispatch-side overhead of classification + lane bookkeeping;
+            # keeps the grid honest on uniform profiles (k=0 must win there)
+            per_item *= (1.0 + 0.02 * k_lane) * _jitter("lane", K, j, k_lane)
 
         # --- makespan + pipeline fill (first batch must fully arrive) ---
         fill_item = per_request if (epoch == 0 or warm < 1.0) else cpu_item_s
         total = items * per_item + batch_size * fill_item / max(1, min(K, j + 1))
+
+        # --- ordered-pipe straggler stalls (DESIGN.md §9) ---
+        # A batch containing a tail item takes excess_s longer than its
+        # neighbours.  With ordered delivery the reorder window can absorb
+        # (window x t_batch) of that before the whole pipe stalls; a slow
+        # lane both widens the window and starts predicted-slow batches
+        # ``lookahead`` batches ahead of schedule, so each lane worker
+        # hides another LOOK x t_batch of excess.
+        if heavy:
+            t_batch = batch_size * per_item
+            excess_s = (sp.tail_mult - 1.0) * base_cpu_item_s \
+                / mp.cpu_speedup(K) * K   # one straggler decodes serially
+            p_slow = 1.0 - (1.0 - sp.tail_fraction) ** batch_size
+            look = 8          # LoaderParams.slow_lane_lookahead default
+            absorb = (K * j + K + k_lane + look * k_lane) * t_batch
+            stall = max(0.0, excess_s - absorb)
+            total += num_batches * p_slow * stall
 
         # --- host->device transfer; hidden when device_prefetch >= 2 ---
         xfer = num_batches * self.batch_bytes(batch_size) / mp.device_bw

@@ -182,11 +182,14 @@ class SlabArena:
 
     # ---- acquire / release -------------------------------------------------
     def acquire(self, stop: Optional[threading.Event] = None,
-                poll_s: float = 0.05) -> Optional[SlabSlot]:
+                poll_s: float = 0.5) -> Optional[SlabSlot]:
         """Pop a free slot, or allocate one while under capacity.
 
         Returns None when the spec is still unknown (caller produces a fresh
         batch and ``adopt``s it) or when ``stop`` was set while waiting.
+        Waiters are woken by every release and by ``wake()`` (which pools
+        call when setting their stop flag), so ``poll_s`` is only a backstop
+        against a missed transition, not the reaction latency.
         """
         while True:
             with self._cond:
@@ -204,6 +207,12 @@ class SlabArena:
                 self._cond.wait(poll_s)
             if stop is not None and stop.is_set():
                 return None
+
+    def wake(self) -> None:
+        """Wake every blocked ``acquire`` so it re-checks its stop event —
+        called by pools on stop/drain/error transitions."""
+        with self._cond:
+            self._cond.notify_all()
 
     def _release(self, slot: SlabSlot) -> None:
         with self._cond:

@@ -24,6 +24,7 @@ from repro.core.monitor import (MemoryBudget, MemoryMonitor, MemoryOverflow,
                                 estimate_loader_footprint)
 from repro.data.arena import SlabArena
 from repro.data.cache import CachedStorage, CacheTier
+from repro.data.costs import SampleCostTracker
 from repro.data.dataset import Dataset
 from repro.data.prefetcher import DevicePrefetcher
 from repro.data.sampler import SamplerState, ShardedSampler
@@ -61,6 +62,15 @@ class LoaderParams:
     ``apply_params`` like locality (the cache *plan* — the sampler's
     hot/cold interleave — latches at an epoch boundary; the tier itself
     is resized in place, never dropped).
+
+    Slow-lane knobs (DESIGN.md §9): ``slow_lane_workers`` (0 = off, the
+    fifth DPT axis) adds that many dedicated workers whose sequence window
+    runs ``slow_lane_lookahead`` batches ahead, taking batches the cost
+    tracker predicts slow (≥ ``slow_lane_threshold`` × the median item
+    cost) so a straggler is already done when ordered delivery reaches it.
+    Ordered thread pools only (process pools translate the knob into
+    early ``apply_async`` submission; unordered delivery has no
+    head-of-line pathology to fix, so the lane is inert there).
     """
     num_workers: int = 0
     prefetch_factor: int = 2
@@ -74,14 +84,46 @@ class LoaderParams:
     locality_chunk: int = 0
     staging_buffers: int = 2
     cache_budget_bytes: int = 0
+    slow_lane_workers: int = 0
+    slow_lane_threshold: float = 4.0
+    slow_lane_lookahead: int = 8
+
+    def __post_init__(self):
+        if self.use_processes and not self.ordered:
+            # ProcessWorkerPool delivery is inherently ordered (imap
+            # submission order): silently honouring ordered=False would
+            # hand back ordered batches under an unordered contract
+            raise ValueError(
+                "ordered=False is unsupported with use_processes=True "
+                "(process delivery is always ordered); use threads for "
+                "completion-order delivery")
+        if self.slow_lane_workers < 0:
+            raise ValueError("slow_lane_workers must be >= 0")
+        if self.slow_lane_lookahead < 0:
+            raise ValueError("slow_lane_lookahead must be >= 0")
+        if self.slow_lane_threshold <= 1.0:
+            raise ValueError("slow_lane_threshold must be > 1.0 (it is a "
+                             "multiple of the median item cost)")
 
     def replace(self, **kw) -> "LoaderParams":
         return dataclasses.replace(self, **kw)
 
     def arena_capacity(self) -> int:
-        """Slab-ring size: every queueable batch + the device buffers."""
-        return max(2, self.num_workers * self.prefetch_factor
+        """Slab-ring size: every queueable batch + the device buffers.
+
+        With the slow lane on, the pulled-but-undelivered span widens to
+        window (queue depth + all workers) + lookahead, and every such
+        batch may hold a slot (acquire-before-pull liveness: see
+        ``ThreadWorkerPool._acquire_slot``) — size for it, or early-started
+        slow batches could exhaust the slots the head sequence needs.
+        """
+        base = max(2, self.num_workers * self.prefetch_factor
                    + self.device_prefetch)
+        if self.slow_lane_workers > 0 and self.ordered \
+                and not self.use_processes:
+            base += (self.num_workers + self.slow_lane_workers
+                     + self.slow_lane_lookahead + 1)
+        return base
 
 
 @dataclasses.dataclass
@@ -107,6 +149,12 @@ class TransferStats:
     # cache) vs items that paid real IO.  Zero when nothing caches.
     cache_hits: int = 0
     cache_misses: int = 0
+    # tail-cost signals (DESIGN.md §9): the cost tracker's estimated
+    # per-item mean and p99 decode+IO seconds, and how many batches the
+    # window routed to the slow lane.  Zero when no tracker ran.
+    sample_cost_mean_s: float = 0.0
+    sample_cost_p99_s: float = 0.0
+    slow_batches: int = 0
 
     @property
     def bytes_per_second(self) -> float:
@@ -457,6 +505,10 @@ class DataLoader:
         self._stream_arena: Optional[SlabArena] = None
         self._cache_tier: Optional[CacheTier] = None
         self._mean_item_nbytes: Optional[float] = None
+        # per-item cost EWMAs persist across pools/streams/hot swaps: the
+        # slow-lane predictor must survive the very retune that enables it
+        self.cost_tracker = SampleCostTracker(
+            len(dataset), threshold=params.slow_lane_threshold)
         self.sampler = ShardedSampler(
             len(dataset), global_batch, shuffle=shuffle, seed=seed,
             host_index=host_index, host_count=host_count,
@@ -530,7 +582,8 @@ class DataLoader:
         return {"sampler": self.sampler.state.to_dict(),
                 "params": dataclasses.asdict(self.params),
                 "locality": self.sampler.locality_state(),
-                "cache_plan": self.sampler.cache_state()}
+                "cache_plan": self.sampler.cache_state(),
+                "costs": self.cost_tracker.state_dict()}
 
     def load_state_dict(self, d):
         self.sampler.state = SamplerState.from_dict(d["sampler"])
@@ -545,6 +598,8 @@ class DataLoader:
             self.sampler.load_cache_plan(d["cache_plan"])
         else:                          # pre-cache checkpoint
             self.sampler.force_cache_plan(hot_k)
+        if "costs" in d:               # pre-costs checkpoints start cold
+            self.cost_tracker.load_state_dict(d["costs"])
 
     def with_params(self, params: LoaderParams) -> "DataLoader":
         """Set params for *future* pools (trial measurements, restarts).
@@ -598,6 +653,10 @@ class DataLoader:
         """
         p = self.params
         inflight = p.num_workers * p.prefetch_factor + p.device_prefetch + 1
+        if p.slow_lane_workers > 0 and p.ordered:
+            # the slow lane's wider sequence window lets the producer pull
+            # that much further ahead of delivery
+            inflight += p.slow_lane_workers + p.slow_lane_lookahead
         bpe = self.sampler.batches_per_epoch()
         pos = self.sampler.state.absolute(bpe) + inflight
         return -(-pos // bpe)
@@ -677,13 +736,20 @@ class DataLoader:
             # caller hands in its own view (trial isolation)
             dataset = self._cached_dataset(admit=True) if for_stream \
                 else self.dataset
+        # the (hot-swappable) threshold lives in params; the EWMA table in
+        # the long-lived tracker — sync at pool birth so a retuned
+        # threshold reclassifies without losing learned costs
+        self.cost_tracker.threshold = self.params.slow_lane_threshold
         pool = cls(dataset, index_iter,
                    num_workers=self.params.num_workers,
                    prefetch_factor=self.params.prefetch_factor,
                    monitor=monitor,
                    ordered=self.params.ordered,
                    fast=self.params.fast_path,
-                   arena=self._arena(for_stream=for_stream))
+                   arena=self._arena(for_stream=for_stream),
+                   cost_tracker=self.cost_tracker,
+                   slow_lane_workers=self.params.slow_lane_workers,
+                   slow_lane_lookahead=self.params.slow_lane_lookahead)
         return pool, monitor
 
     def host_batches(self, *, epoch: Optional[int] = None,
@@ -747,6 +813,14 @@ class DataLoader:
                 out["staging_hit_rate"] = hr
         if self._stream_arena is not None:
             out["arena_hit_rate"] = self._stream_arena.hit_rate
+        tracker = self.cost_tracker
+        if tracker.records:
+            # tail-cost signals (DESIGN.md §9): these ride HostReport.io to
+            # the fleet coordinator and feed the online retune trigger
+            out["sample_cost_mean_s"] = tracker.mean()
+            out["sample_cost_p99_s"] = tracker.p99()
+            out["sample_cost_tail_ratio"] = tracker.tail_ratio()
+            out["slow_batches"] = float(tracker.slow_batches)
         return out
 
     def _prewarm_tier(self, tier: CacheTier) -> None:
@@ -767,7 +841,8 @@ class DataLoader:
                               epoch: int = 0,
                               to_device: bool = True,
                               locality_chunk: Optional[int] = None,
-                              cache_budget_bytes: Optional[int] = None
+                              cache_budget_bytes: Optional[int] = None,
+                              slow_lane_workers: Optional[int] = None
                               ) -> TransferStats:
         """Wall-clock time to deliver ``num_batches`` (storage->host[->HBM]).
 
@@ -783,7 +858,24 @@ class DataLoader:
         ``0`` bypasses the tier entirely; ``B > 0`` measures a throwaway
         tier of budget B — pre-warmed when ``epoch >= 1``, since a warm
         epoch finds the hot set already resident.
+
+        ``slow_lane_workers`` is the slow-lane axis's measurement-only
+        override: the trial pool runs with that lane width (sharing the
+        loader's learned cost tracker — the lane is only as good as its
+        predictor), ``self.params`` restored afterwards.
         """
+        if slow_lane_workers is not None \
+                and slow_lane_workers != self.params.slow_lane_workers:
+            saved = self.params
+            self.params = self.params.replace(
+                slow_lane_workers=slow_lane_workers)
+            try:
+                return self.measure_transfer_time(
+                    num_batches, epoch=epoch, to_device=to_device,
+                    locality_chunk=locality_chunk,
+                    cache_budget_bytes=cache_budget_bytes)
+            finally:
+                self.params = saved
         # static pre-check (the paper's N/A cells fail before running)
         if self.memory_budget is not None:
             probe = self.dataset.get_batch(
@@ -827,6 +919,7 @@ class DataLoader:
             else storage_io_counters(self.dataset.storage)
         tier_before = (trial_tier.hits, trial_tier.misses) \
             if trial_tier is not None else (0, 0)
+        slow_before = self.cost_tracker.slow_batches
         pool, monitor = self._pool(idx_iter, dataset=trial_dataset)
         total_bytes = 0
         n = 0
@@ -886,6 +979,10 @@ class DataLoader:
                 stats.cache_misses += trial_tier.misses - tier_before[1]
         if prefetcher is not None:
             stats.staging_hit_rate = prefetcher.staging_hit_rate
+        if self.cost_tracker.records:
+            stats.sample_cost_mean_s = self.cost_tracker.mean()
+            stats.sample_cost_p99_s = self.cost_tracker.p99()
+            stats.slow_batches = self.cost_tracker.slow_batches - slow_before
         return stats
 
 

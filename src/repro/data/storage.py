@@ -66,6 +66,12 @@ class StorageProfile:
     decode_cpu_s_fixed: float = 150e-6   # per-item fixed CPU cost
     coalesced_run_len: float = 1.0       # items per request under read_batch
     vectorized_decode_fixed_s: Optional[float] = None
+    # Heavy-tailed per-item cost (DESIGN.md §9): ``tail_fraction`` of items
+    # cost ``tail_mult``x the mean decode+IO time (corrupt JPEGs, giant
+    # outlier images, cold dedup segments...).  Neutral defaults keep every
+    # existing simulated grid bit-for-bit identical.
+    tail_fraction: float = 0.0           # fraction of items that are slow
+    tail_mult: float = 1.0               # cost multiplier for those items
 
     @property
     def decoded(self) -> float:
@@ -92,6 +98,14 @@ class StorageProfile:
         return dataclasses.replace(
             self, coalesced_run_len=max(1.0, run_len),
             vectorized_decode_fixed_s=decode_fixed_s)
+
+    def with_heavy_tail(self, *, fraction: float = 0.05,
+                        mult: float = 20.0) -> "StorageProfile":
+        """This profile with a straggler population: ``fraction`` of items
+        cost ``mult``x the per-item mean (what the slow-lane knob prices)."""
+        return dataclasses.replace(
+            self, tail_fraction=max(0.0, min(1.0, fraction)),
+            tail_mult=max(1.0, mult))
 
 
 def coalesce_runs(indices: Sequence[int]) -> List[Tuple[int, int]]:
@@ -267,15 +281,34 @@ class LatencyStorage(Storage):
     — a fully contiguous batch of B items costs 1 seek instead of B.
     Counters: ``reads``/``cache_hits`` are per item, ``batched_reads`` per
     ``read_batch`` call, ``coalesced_requests`` per run actually issued.
+
+    Heavy-tailed cost mode (DESIGN.md §9): with ``tail_fraction > 0`` a
+    seeded, *deterministic* subset of items costs extra on every miss —
+    ``tail_mode="bimodal"`` charges tail items ``(tail_mult - 1)`` extra
+    base latencies (a clean two-population straggler workload, the bench /
+    property-test shape), ``"lognormal"`` draws a per-item multiplier from
+    a seeded lognormal with median 1 (a smoother real-decode shape).  The
+    draw is a pure hash of ``(tail_seed, idx)``: no RNG state, identical
+    across threads, processes and epochs — stragglers are reproducible
+    without wall-clock-dominating sleeps (tail cost scales with
+    ``latency_s``, so CI keeps it tiny).
     """
 
     def __init__(self, inner: Storage, *, latency_s: float = 1e-3,
                  bandwidth: float = 1e9, cache_bytes: int = 0,
-                 concurrent_streams: int = 8):
+                 concurrent_streams: int = 8, tail_fraction: float = 0.0,
+                 tail_mult: float = 1.0, tail_seed: int = 0,
+                 tail_mode: str = "bimodal"):
+        if tail_mode not in ("bimodal", "lognormal"):
+            raise ValueError(f"unknown tail_mode: {tail_mode!r}")
         self.inner = inner
         self.latency_s = latency_s
         self.bandwidth = bandwidth
         self.cache_bytes = cache_bytes
+        self.tail_fraction = max(0.0, min(1.0, tail_fraction))
+        self.tail_mult = max(1.0, tail_mult)
+        self.tail_seed = int(tail_seed)
+        self.tail_mode = tail_mode
         self._cache: dict = {}
         self._cache_used = 0
         self._lock = threading.Lock()
@@ -291,6 +324,48 @@ class LatencyStorage(Storage):
 
     def item_nbytes(self, idx):
         return self.inner.item_nbytes(idx)
+
+    # ---- heavy tail --------------------------------------------------------
+    _M64 = (1 << 64) - 1
+
+    def _item_u01(self, idx: int, salt: int = 0) -> float:
+        """Deterministic uniform in [0, 1) from (tail_seed, idx, salt) —
+        splitmix64-style integer mix, no RNG state to share or fork."""
+        x = (int(idx) * 0x9E3779B97F4A7C15
+             + (self.tail_seed * 2 + salt + 1) * 0xBF58476D1CE4E5B9) \
+            & self._M64
+        x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & self._M64
+        x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & self._M64
+        x ^= x >> 31
+        return x / float(1 << 64)
+
+    def tail_multiplier(self, idx: int) -> float:
+        """Per-item miss-cost multiplier (1.0 when the tail is off)."""
+        if self.tail_fraction <= 0.0 or self.tail_mult <= 1.0:
+            return 1.0
+        if self.tail_mode == "bimodal":
+            tail = self._item_u01(idx) < self.tail_fraction
+            return self.tail_mult if tail else 1.0
+        # lognormal: median-1 multiplier whose ~p98 reaches tail_mult
+        import math
+        u1 = max(self._item_u01(idx), 1e-12)
+        u2 = self._item_u01(idx, salt=1)
+        z = math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+        sigma = math.log(self.tail_mult) / 2.0
+        return math.exp(sigma * z)
+
+    def is_tail(self, idx: int) -> bool:
+        """Is this item in the slow population?  (Tests/benches use this to
+        plant known stragglers and check the tracker finds them.)"""
+        return self.tail_multiplier(idx) >= max(2.0, self.tail_mult / 2.0)
+
+    def _tail_extra_s(self, indices) -> float:
+        """Extra sleep the tail charges for these miss items: each pays
+        ``(multiplier - 1)`` additional base latencies."""
+        if self.tail_fraction <= 0.0 or self.tail_mult <= 1.0:
+            return 0.0
+        return self.latency_s * sum(
+            max(0.0, self.tail_multiplier(i) - 1.0) for i in indices)
 
     def _maybe_cache(self, idx: int, nbytes: int, data) -> None:
         if self.cache_bytes:
@@ -312,7 +387,8 @@ class LatencyStorage(Storage):
             return self._cache[idx]
         nbytes = self.inner.item_nbytes(idx)
         with self._sem:  # bounded concurrent streams share the bus
-            time.sleep(self.latency_s + nbytes / self.bandwidth)
+            time.sleep(self.latency_s + nbytes / self.bandwidth
+                       + self._tail_extra_s((idx,)))
         data = self.inner.read(idx)
         self._maybe_cache(idx, nbytes, data)
         return data
@@ -330,8 +406,10 @@ class LatencyStorage(Storage):
         for start, length in runs:
             run_bytes = sum(self.inner.item_nbytes(start + k)
                             for k in range(length))
+            run_items = range(start, start + length)
             with self._sem:  # one request per coalesced run
-                time.sleep(self.latency_s + run_bytes / self.bandwidth)
+                time.sleep(self.latency_s + run_bytes / self.bandwidth
+                           + self._tail_extra_s(run_items))
         with self._lock:
             self.coalesced_requests += len(runs)
         miss_data = {}

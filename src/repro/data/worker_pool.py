@@ -16,7 +16,21 @@ index-batch gets a sequence number when it is pulled from the sampler, and
 a small reordering buffer on the consumer side yields batches in exactly
 sampler order at any worker count — what lets hot-swap accounting assert
 exact batch sequences.  ``ordered=False`` restores completion-order
-delivery (slightly lower head-of-line latency).
+delivery (slightly lower head-of-line latency); it is thread-pool only —
+``ProcessWorkerPool`` rejects it (its delivery is inherently ordered).
+
+Dual-lane slow-sample isolation (DESIGN.md §9): ordered delivery has a
+straggler pathology — the sequence window parks every fast batch behind
+one slow decode.  With ``slow_lane_workers > 0`` and a ``cost_tracker``
+(data/costs.py), index-batches are *classified at pull time*: predicted-
+slow batches go to a dedicated slow lane whose sequence window runs
+``slow_lane_lookahead`` batches AHEAD of the fast lane's, so stragglers
+start early and finish by the time the consumer's cursor reaches them.
+Lanes share the sequence space and merge at the existing reorder buffer,
+so delivered order and the byte-identical multiset guarantee are
+unchanged; the lanes differ only in *when* work starts.  Dispatch is
+work-conserving: an idle lane steals the other lane's head rather than
+sleeping next to pending work.
 
 Zero-copy fast path (DESIGN.md §3): given a ``SlabArena``, workers acquire
 a recycled slot, collate straight into its slabs, and pass the *slot token*
@@ -27,15 +41,18 @@ delivers every in-flight slot before the pool retires, so nothing leaks.
 Both pools support ``request_drain()``: stop pulling new index-batches but
 deliver everything already pulled, then end the consumer's iteration.
 Because indices are only pulled under a lock and every pulled index-batch
-is eventually enqueued, a drain loses nothing and duplicates nothing —
-this is what lets a live DataLoader hot-swap (nWorker, nPrefetch) at a
-batch boundary (see data/loader.py LoaderStream).
+is eventually enqueued (parked lane entries are pulled: they drain too),
+a drain loses nothing and duplicates nothing — this is what lets a live
+DataLoader hot-swap (nWorker, nPrefetch) at a batch boundary (see
+data/loader.py LoaderStream).
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+import time
+from collections import deque
+from typing import Iterator, Optional
 
 import numpy as np
 
@@ -48,6 +65,14 @@ _SENTINEL = object()
 def _mp_get_batch(dataset, fast, idx):
     """Module-level task fn so the fork pool pickles only (dataset, fast)."""
     return dataset.get_batch(idx, fast=fast)
+
+
+def _mp_get_batch_timed(dataset, fast, idx):
+    """Timed variant: ships (batch, wall seconds) back so the parent can
+    feed its cost tracker — children stay stateless across tasks."""
+    t0 = time.perf_counter()
+    batch = dataset.get_batch(idx, fast=fast)
+    return batch, time.perf_counter() - t0
 
 
 def batch_nbytes(batch) -> int:
@@ -94,7 +119,9 @@ class ThreadWorkerPool:
                  num_workers: int, prefetch_factor: int = 2,
                  monitor: Optional[MemoryMonitor] = None,
                  ordered: bool = True, fast: bool = True,
-                 arena: Optional[SlabArena] = None):
+                 arena: Optional[SlabArena] = None,
+                 cost_tracker=None, slow_lane_workers: int = 0,
+                 slow_lane_lookahead: int = 8):
         self.dataset = dataset
         self.num_workers = max(0, num_workers)
         self.prefetch_factor = max(1, prefetch_factor)
@@ -103,11 +130,23 @@ class ThreadWorkerPool:
         self.fast = fast
         self.arena = arena if (fast and getattr(
             dataset, "supports_fast_path", False)) else None
+        self.cost_tracker = cost_tracker
+        # The slow lane only makes sense where the straggler pathology
+        # exists (ordered + threaded) and a predictor is available.
+        self.slow_lane_workers = max(0, slow_lane_workers) if (
+            ordered and cost_tracker is not None
+            and self.num_workers > 0) else 0
+        self.slow_lane_lookahead = max(0, slow_lane_lookahead)
         self._index_iter = _DrainableIter(index_iter)
-        self._iter_lock = threading.Lock()
+        # One condition guards all dispatch state (_seq/_delivered/_ready/
+        # _exhausted) and is notified on EVERY transition — delivery, lane
+        # hand-off, drain, stop, exhaustion — so waits are event-driven;
+        # the wait timeout below is a backstop, not the reaction latency.
+        self._cond = threading.Condition()
         self._seq = 0
         self._delivered = 0
-        self._window_cond = threading.Condition()
+        self._ready = {False: deque(), True: deque()}   # lane -> (seq, idx)
+        self._exhausted = False
         self._error: Optional[BaseException] = None
         self._stop = threading.Event()
 
@@ -120,42 +159,88 @@ class ThreadWorkerPool:
         # reordering buffer, which frees queue slots — without a cap on the
         # *sequence window*, workers behind one straggler could pull and
         # collate the whole epoch (unbounded memory).  A worker may not pull
-        # sequence S until S - delivered < window.
-        self._window = depth + self.num_workers
+        # sequence S until S - delivered < window.  The slow lane's window
+        # is `slow_lane_lookahead` wider: that headroom is the early start.
+        total_workers = self.num_workers + self.slow_lane_workers
+        self._window = depth + total_workers
         self._queue: queue.Queue = queue.Queue(maxsize=depth)
-        self._live = self.num_workers
+        self._live = total_workers
         self._live_lock = threading.Lock()
         self._threads = [
-            threading.Thread(target=self._work, name=f"loader-worker-{i}",
-                             daemon=True)
+            threading.Thread(target=self._work, args=(False,),
+                             name=f"loader-worker-{i}", daemon=True)
             for i in range(self.num_workers)]
+        self._threads += [
+            threading.Thread(target=self._work, args=(True,),
+                             name=f"loader-slow-{i}", daemon=True)
+            for i in range(self.slow_lane_workers)]
         for t in self._threads:
             t.start()
 
     # ---- batch production --------------------------------------------------
-    def _await_window(self):
-        """Ordered-mode backpressure: block while the pulled-but-undelivered
-        sequence span is at the window bound (wakes on delivery, drain, or
-        stop)."""
-        with self._window_cond:
-            while (self._seq - self._delivered >= self._window
-                   and not self._stop.is_set()
-                   and not self._index_iter.drained):
-                self._window_cond.wait(0.05)
-
     def _mark_delivered(self):
-        with self._window_cond:
+        with self._cond:
             self._delivered += 1
-            self._window_cond.notify_all()
+            self._cond.notify_all()
 
-    def _next_indices(self):
-        if self.ordered:
-            self._await_window()
-        with self._iter_lock:
-            idx = next(self._index_iter)
-            seq = self._seq
-            self._seq += 1
-            return seq, idx
+    def _lane_limit(self, lane_slow: bool) -> float:
+        """Sequence-window bound for this lane.  A drain lifts the bound:
+        the consumer may have stopped advancing, and everything already
+        pulled must still deliver."""
+        if not self.ordered or self._index_iter.drained:
+            return float("inf")
+        return self._window + (self.slow_lane_lookahead if lane_slow else 0)
+
+    def _classify(self, idx) -> bool:
+        """Route one pulled index-batch: True = slow lane."""
+        if self.slow_lane_workers == 0:
+            return False
+        if not self.cost_tracker.is_slow(idx):
+            return False
+        self.cost_tracker.note_slow_batch()
+        return True
+
+    def _next_indices(self, lane_slow: bool = False):
+        """One (seq, idx) for this lane, honoring the lane's window.
+
+        Under the single condition: serve the lane's own parked queue
+        first (lowest seq — parked entries arrive in pull order), else
+        pull+classify from the shared stream (handing off batches
+        classified for the other lane), else steal the other lane's head
+        (work conservation: never sleep next to admissible work).  Raises
+        StopIteration when the stream is exhausted/drained and every
+        parked entry has been taken.
+        """
+        with self._cond:
+            while True:
+                if self._stop.is_set():
+                    raise StopIteration
+                limit = self._lane_limit(lane_slow)
+                own = self._ready[lane_slow]
+                if own and own[0][0] - self._delivered < limit:
+                    return own.popleft()
+                if not self._exhausted \
+                        and self._seq - self._delivered < limit:
+                    try:
+                        idx = next(self._index_iter)
+                    except StopIteration:
+                        self._exhausted = True
+                        self._cond.notify_all()
+                        continue
+                    seq = self._seq
+                    self._seq += 1
+                    if self._classify(idx) == lane_slow:
+                        return seq, idx
+                    self._ready[not lane_slow].append((seq, idx))
+                    self._cond.notify_all()
+                    continue
+                other = self._ready[not lane_slow]
+                if other and other[0][0] - self._delivered < limit:
+                    return other.popleft()
+                if (self._exhausted or self._index_iter.drained) \
+                        and not own and not other:
+                    raise StopIteration
+                self._cond.wait(0.5)
 
     def _acquire_slot(self):
         """Reserve an arena slot (None: no arena / spec unknown / stopped).
@@ -166,7 +251,9 @@ class ThreadWorkerPool:
         so a worker that pulled a sequence and only then waited for a slot
         could starve behind its own successors.  Acquire-first guarantees
         every pulled-but-undelivered batch already owns its buffer and can
-        always complete.
+        always complete.  (With the slow lane on, ``LoaderParams.
+        arena_capacity`` widens by the lookahead so early-started slow
+        batches can't exhaust the slots the head still needs.)
         """
         if self.arena is None:
             return None
@@ -189,7 +276,15 @@ class ThreadWorkerPool:
         return batch, batch_nbytes(batch)
 
     # ---- worker body -------------------------------------------------------
-    def _work(self):
+    def _halt(self):
+        """Stop flag + wake everything that might be parked on it."""
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        if self.arena is not None:
+            self.arena.wake()
+
+    def _work(self, lane_slow: bool = False):
         try:
             while not self._stop.is_set():
                 slot = self._acquire_slot()
@@ -197,17 +292,21 @@ class ThreadWorkerPool:
                         and self._stop.is_set():
                     break
                 try:
-                    seq, idx = self._next_indices()
+                    seq, idx = self._next_indices(lane_slow)
                 except StopIteration:
                     if slot is not None:
                         slot.release()
                     break
                 try:
+                    t0 = time.perf_counter()
                     batch, nbytes = self._collate(idx, slot)
+                    dt = time.perf_counter() - t0
                 except BaseException:
                     if slot is not None:    # not yet wrapped: recycle it
                         slot.release()
                     raise
+                if self.cost_tracker is not None:
+                    self.cost_tracker.record(idx, dt)
                 try:
                     self.monitor.reserve(nbytes)
                     self._queue.put((seq, batch, nbytes))
@@ -220,7 +319,7 @@ class ThreadWorkerPool:
             # consumer would park every later batch forever while healthy
             # workers keep producing.  An error is pool-fatal — stop the
             # siblings so the sentinel (and the raise) arrives promptly.
-            self._stop.set()
+            self._halt()
         finally:
             with self._live_lock:
                 self._live -= 1
@@ -232,6 +331,8 @@ class ThreadWorkerPool:
         """Stop pulling new index-batches; already-pulled batches still
         deliver, then iteration ends (the hot-swap batch boundary)."""
         self._index_iter.drain()
+        with self._cond:            # drain lifts windows: wake the waiters
+            self._cond.notify_all()
 
     def _iter_inline(self):
         prev = None
@@ -241,7 +342,10 @@ class ThreadWorkerPool:
                 if slot is None and self.arena is not None \
                         and self._stop.is_set():
                     return
+                t0 = time.perf_counter()
                 batch, _ = self._collate(idx, slot)
+                if self.cost_tracker is not None:
+                    self.cost_tracker.record(idx, time.perf_counter() - t0)
                 maybe_release(prev)        # consumer advanced past it
                 prev = batch               # set BEFORE yield: teardown at
                 yield batch                # the yield still recycles it
@@ -301,8 +405,8 @@ class ThreadWorkerPool:
         admits a blocked put, whose worker then sees the stop flag and
         exits) until every worker thread is gone and the queue is empty.
         """
-        self._stop.set()
         self._index_iter.drain()
+        self._halt()
         if self._queue is None:
             return
         while (any(t.is_alive() for t in self._threads)
@@ -317,33 +421,57 @@ class ThreadWorkerPool:
 
 
 class ProcessWorkerPool:
-    """Process-based fallback (GIL-heavy transforms).  Uses a fork pool and
-    chunked imap; heavier per-batch overhead, same interface.
+    """Process-based fallback (GIL-heavy transforms).  Uses a fork pool;
+    heavier per-batch overhead, same interface.
 
     In-flight work is bounded to ``num_workers * prefetch_factor``
     index-batches: the task pump blocks on a semaphore that the consumer
     releases per delivered batch — real ``prefetch_factor`` backpressure
     (previously the parameter was accepted and ignored: ``imap`` pumped the
-    whole epoch into the task queue).  ``imap`` already preserves submission
-    order, so delivery is always ordered.  Arena slabs cannot cross the
-    process boundary; batches arrive as fresh (pickled) dicts, but workers
-    still use the batched read + vectorized transform inside the child.
+    whole epoch into the task queue).  Delivery is ALWAYS ordered (``imap``
+    preserves submission order); ``ordered=False`` is rejected loudly —
+    completion-order delivery needs the thread pool.  Arena slabs cannot
+    cross the process boundary; batches arrive as fresh (pickled) dicts,
+    but workers still use the batched read + vectorized transform inside
+    the child.
+
+    Dual-lane variant (DESIGN.md §9): with ``slow_lane_workers > 0`` and a
+    ``cost_tracker`` the pump switches to consumer-driven ``apply_async``
+    — predicted-slow batches are submitted as soon as they enter the
+    extended (``+ slow_lane_lookahead``) window, fast batches only inside
+    the base window, and the consumer joins results strictly in sequence.
+    Same early-start effect as the thread pool's slow lane; the lane
+    *width* is shared pool capacity here (processes are fungible), so the
+    knob buys lookahead rather than dedicated children.
     """
 
     def __init__(self, dataset, index_iter, *, num_workers: int,
                  prefetch_factor: int = 2,
                  monitor: Optional[MemoryMonitor] = None,
                  ordered: bool = True, fast: bool = True,
-                 arena: Optional[SlabArena] = None):
+                 arena: Optional[SlabArena] = None,
+                 cost_tracker=None, slow_lane_workers: int = 0,
+                 slow_lane_lookahead: int = 8):
         import multiprocessing as mp
+        if not ordered:
+            raise ValueError(
+                "ProcessWorkerPool delivery is always ordered (imap "
+                "submission order); ordered=False is unsupported with "
+                "use_processes=True — use the thread pool for "
+                "completion-order delivery")
         self.dataset = dataset
         self.monitor = monitor or MemoryMonitor()
         self._indices = _DrainableIter(index_iter)
         self.num_workers = max(1, num_workers)
         self.prefetch_factor = max(1, prefetch_factor)
         self.fast = fast
+        self.cost_tracker = cost_tracker
+        self.slow_lane_workers = max(0, slow_lane_workers) \
+            if cost_tracker is not None else 0
+        self.slow_lane_lookahead = max(0, slow_lane_lookahead)
         self._inflight = threading.BoundedSemaphore(
             self.num_workers * self.prefetch_factor)
+        self._submitted: deque = deque()
         self._stopped = False
         self._pool = mp.get_context("fork").Pool(self.num_workers)
 
@@ -357,23 +485,80 @@ class ProcessWorkerPool:
             self._inflight.acquire()
             if self._stopped:   # shutdown() released us just to unblock
                 return
+            self._submitted.append(idx)
             yield idx
 
-    def __iter__(self):
+    def _iter_imap(self):
         import functools
-        fn = functools.partial(_mp_get_batch, self.dataset, self.fast)
-        try:
-            for batch in self._pool.imap(
-                    fn, self._bounded_indices(),
-                    chunksize=1):
+        timed = self.cost_tracker is not None
+        fn = functools.partial(
+            _mp_get_batch_timed if timed else _mp_get_batch,
+            self.dataset, self.fast)
+        for out in self._pool.imap(fn, self._bounded_indices(),
+                                   chunksize=1):
+            try:
+                self._inflight.release()
+            except ValueError:      # pragma: no cover - defensive
+                pass
+            if timed:
+                batch, dt = out
+                self.cost_tracker.record(self._submitted.popleft(), dt)
+            else:
+                batch = out
+            nbytes = batch_nbytes(batch)
+            self.monitor.reserve(nbytes)
+            self.monitor.release(nbytes)
+            yield batch
+
+    def _iter_lane(self):
+        """Consumer-driven dual-lane pump: slow batches submitted early
+        (extended window), fast batches inside the base window, delivery
+        joined strictly in sequence — ordered semantics preserved."""
+        import functools
+        fn = functools.partial(_mp_get_batch_timed, self.dataset, self.fast)
+        cap = self.num_workers * self.prefetch_factor
+        look = cap + self.slow_lane_lookahead
+        staged: deque = deque()       # fast (seq, idx) beyond the base cap
+        pending: dict = {}            # seq -> (AsyncResult, idx)
+        seq_in = 0
+        next_out = 0
+        exhausted = False
+        it = iter(self._indices)
+        while not self._stopped:
+            # pull ahead through the extended window, launching slow
+            # batches immediately and parking fast ones
+            while not exhausted and seq_in - next_out < look:
                 try:
-                    self._inflight.release()
-                except ValueError:      # pragma: no cover - defensive
-                    pass
-                nbytes = batch_nbytes(batch)
-                self.monitor.reserve(nbytes)
-                self.monitor.release(nbytes)
-                yield batch
+                    idx = next(it)
+                except StopIteration:
+                    exhausted = True
+                    break
+                s, seq_in = seq_in, seq_in + 1
+                if self.cost_tracker.is_slow(idx):
+                    self.cost_tracker.note_slow_batch()
+                    pending[s] = (self._pool.apply_async(fn, (idx,)), idx)
+                else:
+                    staged.append((s, idx))
+            while staged and staged[0][0] - next_out < cap:
+                s, idx = staged.popleft()
+                pending[s] = (self._pool.apply_async(fn, (idx,)), idx)
+            if next_out not in pending:     # everything pulled is delivered
+                return
+            res, idx = pending.pop(next_out)
+            batch, dt = res.get()
+            self.cost_tracker.record(idx, dt)
+            next_out += 1
+            nbytes = batch_nbytes(batch)
+            self.monitor.reserve(nbytes)
+            self.monitor.release(nbytes)
+            yield batch
+
+    def __iter__(self):
+        try:
+            if self.slow_lane_workers > 0:
+                yield from self._iter_lane()
+            else:
+                yield from self._iter_imap()
         finally:
             self.shutdown()
 

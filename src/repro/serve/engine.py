@@ -111,6 +111,9 @@ class Request:
     max_new_tokens: int
     result: "queue.Queue" = dataclasses.field(
         default_factory=lambda: queue.Queue(maxsize=1))
+    # submission wall time (set by BatchingFrontend.submit): the batch
+    # assembly wait — submit to generate-start — is measured from this
+    t_submit: float = 0.0
 
 
 class BatchMixMonitor:
@@ -202,11 +205,21 @@ class BatchingFrontend:
     cache budget (DESIGN.md §7): the push arrives through the same
     ``agent.apply_params`` hot swap and resizes the feature loader's
     cache tier in place — a long-lived serving host keeps its warm
-    entries across the retune."""
+    entries across the retune.
+
+    Dual-lane serving (DESIGN.md §9): with ``slow_lane=True`` a
+    dedicated slow-group thread serves request groups whose predicted
+    cost (a :class:`repro.data.costs.KeyedCostTracker` EWMA keyed by
+    ``(prompt_len, max_new_tokens)``) is a tail outlier, so a burst of
+    cheap requests never queues behind one expensive group — the cheap
+    traffic keeps its p99 batch-assembly latency
+    (``assembly_wait_p99()``)."""
 
     def __init__(self, engine: ServeEngine, *, max_wait_s: float = 0.01,
                  mix_monitor: Optional[BatchMixMonitor] = None,
-                 agent=None, locality_controller=None):
+                 agent=None, locality_controller=None,
+                 slow_lane: bool = False, slow_threshold: float = 4.0):
+        from repro.data.costs import KeyedCostTracker
         self.engine = engine
         self.max_wait_s = max_wait_s
         self.mix_monitor = mix_monitor
@@ -217,11 +230,25 @@ class BatchingFrontend:
         # block as observe/record (a resize proposal must never kill the
         # serving thread)
         self.locality_controller = locality_controller
+        self.slow_lane = slow_lane
+        self.cost_tracker = KeyedCostTracker(threshold=slow_threshold)
         self._queue: queue.Queue = queue.Queue()
         self._stop = threading.Event()
+        # per-request assembly waits (submit -> generate start), split by
+        # the lane that served them; bounded reservoirs for the p99
+        self._wait_fast: List[float] = []
+        self._wait_slow: List[float] = []
+        self._wait_lock = threading.Lock()
+        self._slow_queue: queue.Queue = queue.Queue()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
+        self._slow_thread: Optional[threading.Thread] = None
+        if slow_lane:
+            self._slow_thread = threading.Thread(target=self._run_slow,
+                                                 daemon=True)
+            self._slow_thread.start()
         self.batches_served = 0
+        self.slow_groups = 0
 
     def connect_fleet(self, transport, loader, *, host: str = "serve0",
                       join: bool = False, coord: str = "coord",
@@ -239,9 +266,18 @@ class BatchingFrontend:
         return self.agent
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
-        req = Request(np.asarray(prompt, np.int32), max_new_tokens)
+        req = Request(np.asarray(prompt, np.int32), max_new_tokens,
+                      t_submit=time.perf_counter())
         self._queue.put(req)
         return req
+
+    def assembly_wait_p99(self, *, slow: bool = False) -> float:
+        """p99 of per-request assembly wait (submit to generate start) for
+        the fast lane — or, with ``slow=True``, the slow lane."""
+        from repro.data.costs import percentile
+        with self._wait_lock:
+            samples = list(self._wait_slow if slow else self._wait_fast)
+        return percentile(samples, 0.99)
 
     def _drain_batch(self) -> List[Request]:
         reqs: List[Request] = []
@@ -273,28 +309,57 @@ class BatchingFrontend:
                 by_shape.setdefault(
                     (len(r.prompt), r.max_new_tokens), []).append(r)
             for (plen, max_new), group in by_shape.items():
-                prompts = np.stack([r.prompt for r in group])
-                t1 = time.perf_counter()
-                res = self.engine.generate(prompts, max_new)
-                t_gen = time.perf_counter() - t1
-                self.batches_served += 1
-                try:
-                    if self.agent is not None:
-                        # batch formation is the serving analogue of the
-                        # trainer's data wait; generate is the compute
-                        self.agent.observe(data_s=t_form,
-                                           step_s=t_form + t_gen)
-                    if self.mix_monitor is not None:
-                        self.mix_monitor.record((plen, max_new))
-                    if self.locality_controller is not None:
-                        self.locality_controller.step()
-                except Exception:  # noqa: BLE001 - observe/retune must not
-                    import traceback  # kill the serving thread
-                    traceback.print_exc()
+                if self.slow_lane and self.cost_tracker.is_slow(
+                        (plen, max_new)):
+                    # predicted-expensive group: hand it to the slow
+                    # thread so the cheap traffic behind it keeps its p99
+                    self.slow_groups += 1
+                    self._slow_queue.put((plen, max_new, group, t_form))
+                else:
+                    self._serve_group(plen, max_new, group, t_form,
+                                      lane_slow=False)
                 t_form = 0.0        # only the first group pays formation
-                for i, r in enumerate(group):
-                    r.result.put(res.tokens[i])
+
+    def _run_slow(self):
+        while not self._stop.is_set():
+            try:
+                plen, max_new, group, t_form = self._slow_queue.get(
+                    timeout=0.1)
+            except queue.Empty:
+                continue
+            self._serve_group(plen, max_new, group, t_form, lane_slow=True)
+
+    def _serve_group(self, plen: int, max_new: int, group: List[Request],
+                     t_form: float, *, lane_slow: bool) -> None:
+        prompts = np.stack([r.prompt for r in group])
+        t1 = time.perf_counter()
+        waits = [max(0.0, t1 - r.t_submit) for r in group if r.t_submit > 0]
+        res = self.engine.generate(prompts, max_new)
+        t_gen = time.perf_counter() - t1
+        self.batches_served += 1
+        try:
+            # per-request cost estimate feeds next dispatch's routing
+            self.cost_tracker.record((plen, max_new), t_gen / len(group))
+            with self._wait_lock:
+                reservoir = self._wait_slow if lane_slow else self._wait_fast
+                reservoir.extend(waits)
+                del reservoir[:-512]
+            if self.agent is not None:
+                # batch formation is the serving analogue of the
+                # trainer's data wait; generate is the compute
+                self.agent.observe(data_s=t_form, step_s=t_form + t_gen)
+            if self.mix_monitor is not None:
+                self.mix_monitor.record((plen, max_new))
+            if self.locality_controller is not None:
+                self.locality_controller.step()
+        except Exception:  # noqa: BLE001 - observe/retune must not
+            import traceback  # kill the serving thread
+            traceback.print_exc()
+        for i, r in enumerate(group):
+            r.result.put(res.tokens[i])
 
     def shutdown(self):
         self._stop.set()
         self._thread.join(timeout=5)
+        if self._slow_thread is not None:
+            self._slow_thread.join(timeout=5)

@@ -70,6 +70,18 @@ class TrainerConfig:
     # startup only, same as locality: on a fleet the budget changes
     # uniformly through the coordinator (FleetConfig.cache_budgets).
     autotune_cache_budgets: Optional[tuple] = None
+    # candidate slow_lane_workers values for the startup grid's fifth
+    # axis (DESIGN.md §9).  None keeps the dual lane off the search;
+    # include 0 in the tuple so "no slow lane" stays a candidate.  The
+    # lane is HOST-LOCAL machinery (it never touches the sampler's epoch
+    # permutation, only which worker decodes a batch), so unlike locality
+    # and cache this axis needs no multi-host guard — only the
+    # grid-strategy guard applies.
+    autotune_slow_lanes: Optional[tuple] = None
+    # retune trigger on the per-item cost tail ratio (p99/median of the
+    # loader's tracked per-item costs, ~1 uniform; see DESIGN.md §9).
+    # 0 disables; only armed when autotune_slow_lanes is set.
+    retune_tail_ratio_trigger: float = 0.0
     # the online locality loop (DESIGN.md §6): when True, an
     # AdaptiveLocalityController watches the live coalesced-run-length
     # counters and shrinks locality_chunk when the storage stops
@@ -160,11 +172,19 @@ class Trainer:
             # changes the budget uniformly via the coordinator; and only
             # the grid strategy sweeps the axis
             cache_axis = None
+        lane_axis = self.cfg.autotune_slow_lanes
+        if lane_axis and strategy != "grid":
+            # only the grid strategy sweeps DPTConfig.slow_lanes.  No
+            # multi-host guard: the lane split is host-local (it never
+            # touches the shared epoch permutation)
+            lane_axis = None
         cached = None if force else cache.get_params(
             mfp, dfp, self.loader.global_batch,
             require_locality=bool(locality_axis),
             require_cache=bool(cache_axis),
-            with_cache=bool(cache_axis))
+            with_cache=bool(cache_axis),
+            require_slow_lane=bool(lane_axis),
+            with_slow_lane=bool(lane_axis))
         if cached is not None:
             rep = {"num_workers": cached[0], "prefetch_factor": cached[1]}
             if locality_axis:
@@ -174,6 +194,9 @@ class Trainer:
                 rep["locality_chunk"] = cached[2]
             if cache_axis:
                 rep["cache_budget_bytes"] = cached[3]
+            if lane_axis:
+                # the lane width is the LAST element whenever requested
+                rep["slow_lane_workers"] = cached[-1]
             params = self.loader.params.replace(**rep)
             self.loader.with_params(params)
             return params
@@ -182,7 +205,9 @@ class Trainer:
                                locality_chunks=(tuple(locality_axis)
                                                 if locality_axis else None),
                                cache_budgets=(tuple(cache_axis)
-                                              if cache_axis else None))
+                                              if cache_axis else None),
+                               slow_lanes=(tuple(lane_axis)
+                                           if lane_axis else None))
         search_cfg = dataclasses.replace(search_cfg, num_batches=(
             adaptive_budget(search_cfg, self.cfg.autotune_budget_batches)))
         if strategy == "grid":
@@ -208,6 +233,8 @@ class Trainer:
             rep["locality_chunk"] = result.locality_chunk
         if cache_axis:
             rep["cache_budget_bytes"] = result.cache_budget_bytes
+        if lane_axis:
+            rep["slow_lane_workers"] = result.slow_lane_workers
         params = self.loader.params.replace(**rep)
         self.loader.with_params(params)
         return params
@@ -220,6 +247,8 @@ class Trainer:
             if self.loader.sampler.host_count == 1 else None
         budgets = self.cfg.autotune_cache_budgets \
             if self.loader.sampler.host_count == 1 else None
+        # the lane axis is host-local, so it needs no host_count guard
+        lanes = self.cfg.autotune_slow_lanes
         return OnlineTuner(
             self.loader,
             evaluator=LoaderEvaluator(self.loader, to_device=True),
@@ -231,7 +260,9 @@ class Trainer:
                 retune_budget_batches=self.cfg.autotune_budget_batches,
                 max_prefetch=self.cfg.autotune_max_prefetch,
                 locality_chunks=(tuple(chunks) if chunks else None),
-                cache_budgets=(tuple(budgets) if budgets else None)))
+                cache_budgets=(tuple(budgets) if budgets else None),
+                slow_lanes=(tuple(lanes) if lanes else None),
+                tail_ratio_trigger=self.cfg.retune_tail_ratio_trigger))
 
     def _make_locality_controller(self):
         """The counter-driven side of the online locality loop: applies

@@ -40,8 +40,10 @@ from repro.tuning.locality import (  # noqa: F401
     AdaptiveLocalityController,
     cache_win,
     locality_win,
+    slow_lane_win,
     sweep_cache,
     sweep_locality,
+    sweep_slow_lanes,
 )
 from repro.tuning.online import (  # noqa: F401
     GoodputMonitor,

@@ -50,15 +50,17 @@ class TrialRecorder:
                 num_batches: Optional[int] = None,
                 record: bool = True,
                 locality_chunk: Optional[int] = None,
-                cache_budget_bytes: Optional[int] = None) -> float:
+                cache_budget_bytes: Optional[int] = None,
+                slow_lane_workers: Optional[int] = None) -> float:
         """Measure one cell; ``math.inf`` on overflow.
 
         ``record=False`` measures without logging a Trial (used for the
         paper's default-parameter reference run, which is not part of the
-        sweep).  ``locality_chunk`` is the beyond-paper third axis and
-        ``cache_budget_bytes`` the fourth; each is forwarded to the
-        evaluator ONLY when set, so lower-dimensional searches keep
-        working against evaluators that never heard of them.
+        sweep).  ``locality_chunk`` is the beyond-paper third axis,
+        ``cache_budget_bytes`` the fourth and ``slow_lane_workers`` the
+        fifth; each is forwarded to the evaluator ONLY when set, so
+        lower-dimensional searches keep working against evaluators that
+        never heard of them.
         """
         nb = self.config.num_batches if num_batches is None else num_batches
         kw = {}
@@ -66,8 +68,11 @@ class TrialRecorder:
             kw["locality_chunk"] = locality_chunk
         if cache_budget_bytes is not None:
             kw["cache_budget_bytes"] = cache_budget_bytes
+        if slow_lane_workers is not None:
+            kw["slow_lane_workers"] = slow_lane_workers
         chunk = locality_chunk or 0
         budget = cache_budget_bytes or 0
+        lanes = slow_lane_workers or 0
         try:
             stats = self.evaluator(nworker, nprefetch, num_batches=nb,
                                    epoch=self.config.epoch, **kw)
@@ -76,14 +81,16 @@ class TrialRecorder:
                 self.trials.append(Trial(nworker, nprefetch, math.inf,
                                          overflowed=True,
                                          locality_chunk=chunk,
-                                         cache_budget_bytes=budget))
+                                         cache_budget_bytes=budget,
+                                         slow_lane_workers=lanes))
             return math.inf
         if stats.overflowed:
             if record:
                 self.trials.append(Trial(nworker, nprefetch, math.inf,
                                          overflowed=True,
                                          locality_chunk=chunk,
-                                         cache_budget_bytes=budget))
+                                         cache_budget_bytes=budget,
+                                         slow_lane_workers=lanes))
             return math.inf
         if record:
             self.trials.append(Trial(
@@ -91,17 +98,20 @@ class TrialRecorder:
                 peak_bytes=stats.peak_loader_bytes,
                 batch_seconds=getattr(stats, "batch_seconds", None),
                 locality_chunk=chunk,
-                cache_budget_bytes=budget))
+                cache_budget_bytes=budget,
+                slow_lane_workers=lanes))
         return stats.seconds
 
     def result(self, nworker: int, nprefetch: int, optimal_time: float,
                *, default_time: Optional[float] = None,
                locality_chunk: int = 0,
-               cache_budget_bytes: int = 0) -> DPTResult:
+               cache_budget_bytes: int = 0,
+               slow_lane_workers: int = 0) -> DPTResult:
         return DPTResult(nworker, nprefetch, optimal_time, self.trials,
                          default_time=default_time,
                          locality_chunk=locality_chunk,
-                         cache_budget_bytes=cache_budget_bytes)
+                         cache_budget_bytes=cache_budget_bytes,
+                         slow_lane_workers=slow_lane_workers)
 
 
 def worker_rungs(num_cpu_cores: int, num_devices: int) -> List[int]:

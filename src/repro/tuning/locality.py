@@ -150,6 +150,63 @@ def cache_win(trials: Dict[int, Trial], current_budget: int, *,
     return None
 
 
+def sweep_slow_lanes(evaluator, *, nworker: int, nprefetch: int,
+                     lanes: Sequence[int], current_lanes: int,
+                     num_batches: int, epoch: int = 0) -> Dict[int, Trial]:
+    """Price candidate ``slow_lane_workers`` values at one (worker,
+    prefetch) cell — the dual-lane analogue of :func:`sweep_locality`
+    (DESIGN.md §9).
+
+    Candidates go through the evaluator's measurement-only override, so
+    the live pool's lane split is untouched; the live cost tracker keeps
+    learning through the trials (trial batches are real decodes), which
+    is exactly what makes a warm sweep honest — a cold tracker routes
+    nothing to the slow lane and the candidate measures as pure overhead.
+    """
+    trials: Dict[int, Trial] = {}
+    for k in dict.fromkeys([max(0, int(current_lanes)),
+                            *(max(0, int(s)) for s in lanes)]):
+        try:
+            stats = evaluator(nworker, nprefetch, num_batches=num_batches,
+                              epoch=epoch, slow_lane_workers=k)
+            if stats.overflowed:
+                raise MemoryOverflow("overflowed")
+            trials[k] = Trial(
+                nworker, nprefetch, stats.seconds,
+                peak_bytes=stats.peak_loader_bytes,
+                batch_seconds=getattr(stats, "batch_seconds", None),
+                slow_lane_workers=k)
+        except MemoryOverflow:
+            trials[k] = Trial(nworker, nprefetch, math.inf,
+                              overflowed=True, slow_lane_workers=k)
+    return trials
+
+
+def slow_lane_win(trials: Dict[int, Trial], current_lanes: int, *,
+                  min_improvement: float = 0.05) -> Optional[int]:
+    """The slow-lane win test — same contract as :func:`locality_win`:
+    the argmin lane width must beat the CURRENT width's own measured
+    trial (Welch over per-batch samples when available, else the
+    relative threshold).  Returns the winning width, or None."""
+    current_lanes = max(0, int(current_lanes))
+    finite = {k: t for k, t in trials.items() if math.isfinite(t.seconds)}
+    if not finite:
+        return None
+    best = min(finite, key=lambda k: finite[k].seconds)
+    ref = trials.get(current_lanes)
+    if best == current_lanes:
+        return None
+    if ref is None or not math.isfinite(ref.seconds):
+        return best                       # nothing measured to defend
+    ref_s = steady_samples(ref.batch_seconds)
+    win_s = steady_samples(finite[best].batch_seconds)
+    if len(ref_s) >= 2 and len(win_s) >= 2:
+        return best if welch_wins(ref_s, win_s) else None
+    if finite[best].seconds <= (1.0 - min_improvement) * ref.seconds:
+        return best
+    return None
+
+
 # --------------------------------------------------------------------------
 # counter-driven adaptive chunk sizing
 # --------------------------------------------------------------------------

@@ -77,6 +77,17 @@ class OnlineTunerConfig:
     # through throwaway measurement tiers (the live tier is never polluted)
     # and a winner resizes the live tier in place via apply_params.
     cache_budgets: Optional[Tuple[int, ...]] = None
+    # online dual-lane axis (DESIGN.md §9): candidate slow-lane widths a
+    # retune may propose.  Same ownership split; candidates are priced
+    # through the measurement-only override while the live cost tracker
+    # keeps learning through the trials.
+    slow_lanes: Optional[Tuple[int, ...]] = None
+    # retune trigger on the per-item cost tail (io_counters'
+    # ``sample_cost_tail_ratio``: p99 over median of the tracked per-item
+    # cost estimates, ~1 uniform, large under a heavy tail).  0 disables;
+    # only armed when ``slow_lanes`` is set — the tail signal exists to
+    # resolve the lane axis, stalls still fire the goodput trigger.
+    tail_ratio_trigger: float = 0.0
 
 
 class GoodputMonitor:
@@ -91,11 +102,18 @@ class GoodputMonitor:
         self._data_s: deque = deque(maxlen=window)
         self._compute_s: deque = deque(maxlen=window)
         self.steps = 0
+        # latest per-item cost tail ratio (p99/median) pushed from the
+        # loader's cost tracker via note_tail(); 0 = no signal yet
+        self.tail_ratio = 0.0
 
     def observe(self, *, data_s: float, step_s: float) -> None:
         self.steps += 1
         self._data_s.append(max(0.0, data_s))
         self._compute_s.append(max(1e-9, step_s - data_s))
+
+    def note_tail(self, ratio: float) -> None:
+        """Push the loader's per-item cost tail ratio (DESIGN.md §9)."""
+        self.tail_ratio = max(0.0, ratio)
 
     @property
     def full(self) -> bool:
@@ -139,7 +157,13 @@ class RetunePolicy:
         self._backoff = 1            # doubles when a re-search finds no win
 
     def drifted(self, monitor: GoodputMonitor) -> bool:
-        return monitor.stall_ratio > self.cfg.stall_fraction
+        if monitor.stall_ratio > self.cfg.stall_fraction:
+            return True
+        # tail drift: a heavy per-item cost tail is drift even before it
+        # shows as a mean stall — only armed when the lane axis exists
+        return bool(self.cfg.slow_lanes
+                    and self.cfg.tail_ratio_trigger > 0.0
+                    and monitor.tail_ratio > self.cfg.tail_ratio_trigger)
 
     def should_retune(self, monitor: GoodputMonitor) -> bool:
         if monitor.steps < self.cfg.warmup_steps:
@@ -303,6 +327,31 @@ class RetuneExecutor:
                         min_improvement=self.cfg.min_improvement)
         return win, list(trials.values())
 
+    def sweep_slow_lane(self, nworker: int, nprefetch: int
+                        ) -> Tuple[Optional[int], List[Trial]]:
+        """Price the configured slow-lane widths at one cell (DESIGN.md
+        §9).  Same contract as :meth:`sweep_locality`; candidates go
+        through the measurement-only override (the live pool's lane split
+        is untouched) and the live cost tracker keeps learning through
+        the trial decodes, so the sweep prices routing, not a cold lane.
+        """
+        if not self.cfg.slow_lanes:
+            return None, []
+        from repro.tuning.locality import slow_lane_win, sweep_slow_lanes
+        orig = self.loader.params
+        cfg = self.search_config()
+        try:
+            trials = sweep_slow_lanes(
+                self.evaluator, nworker=nworker, nprefetch=nprefetch,
+                lanes=self.cfg.slow_lanes,
+                current_lanes=orig.slow_lane_workers,
+                num_batches=cfg.num_batches, epoch=cfg.epoch)
+        finally:
+            self.loader.with_params(orig)
+        win = slow_lane_win(trials, orig.slow_lane_workers,
+                            min_improvement=self.cfg.min_improvement)
+        return win, list(trials.values())
+
     def apply(self, result: DPTResult,
               params: Optional[LoaderParams] = None) -> LoaderParams:
         """Hot-swap the winner into the live stream and persist it.
@@ -340,6 +389,7 @@ class RetuneExecutor:
                 nprefetch=params.prefetch_factor,
                 locality_chunk=params.locality_chunk,
                 cache_budget_bytes=params.cache_budget_bytes,
+                slow_lane_workers=params.slow_lane_workers,
                 optimal_time=opt)
             self.cache.put(self.machine_fp, self.dataset_fp,
                            self.loader.global_batch, cached)
@@ -403,9 +453,19 @@ class OnlineTuner:
         triggered a retune + hot-swap, else None.
         """
         self.monitor.observe(data_s=data_s, step_s=step_s)
+        # feed the per-item cost tail signal once per window (io_counters
+        # takes the tracker lock; no need to pay it every step)
+        if self.cfg.slow_lanes and self.cfg.tail_ratio_trigger > 0.0 \
+                and self.monitor.steps % self.cfg.window == 0:
+            io = self.loader.io_counters()
+            if io and "sample_cost_tail_ratio" in io:
+                self.monitor.note_tail(io["sample_cost_tail_ratio"])
         if not self.policy.should_retune(self.monitor):
             return None
-        return self.force_retune(reason="goodput-drift")
+        return self.force_retune(reason="goodput-drift"
+                                 if self.monitor.stall_ratio
+                                 > self.cfg.stall_fraction
+                                 else "cost-tail-drift")
 
     # ---- bounded re-search + hot swap --------------------------------------
     def force_retune(self, *, reason: str = "forced"
@@ -437,15 +497,23 @@ class OnlineTuner:
         # same hot swap (the tier survives apply_params)
         budget_win, budget_trials = self.executor.sweep_cache(*cell)
         result.trials.extend(budget_trials)
+        # the online dual-lane axis (DESIGN.md §9): price lane widths at
+        # the same cell — a winner re-splits the pool via the same hot
+        # swap (the cost tracker is loader-owned and survives the swap)
+        lane_win, lane_trials = self.executor.sweep_slow_lane(*cell)
+        result.trials.extend(lane_trials)
         self.policy.record_outcome(won=won or chunk_win is not None
-                                   or budget_win is not None)
-        if not won and chunk_win is None and budget_win is None:
+                                   or budget_win is not None
+                                   or lane_win is not None)
+        if not won and chunk_win is None and budget_win is None \
+                and lane_win is None:
             self.history.append({
                 "step": self.monitor.steps, "reason": reason,
                 "outcome": "kept",
                 "params": (orig.num_workers, orig.prefetch_factor),
                 "locality_chunk": orig.locality_chunk,
                 "cache_budget_bytes": orig.cache_budget_bytes,
+                "slow_lane_workers": orig.slow_lane_workers,
                 "optimal_time": result.optimal_time,
                 "measurements": len(result.trials),
                 "search_s": time.perf_counter() - t0,
@@ -457,6 +525,8 @@ class OnlineTuner:
             params = params.replace(locality_chunk=chunk_win)
         if budget_win is not None:
             params = params.replace(cache_budget_bytes=budget_win)
+        if lane_win is not None:
+            params = params.replace(slow_lane_workers=lane_win)
         params = self.executor.apply(result, params)
         self.retunes += 1
         self.history.append({
@@ -465,6 +535,7 @@ class OnlineTuner:
             "params": (params.num_workers, params.prefetch_factor),
             "locality_chunk": params.locality_chunk,
             "cache_budget_bytes": params.cache_budget_bytes,
+            "slow_lane_workers": params.slow_lane_workers,
             "optimal_time": result.optimal_time,
             "measurements": len(result.trials),
             "search_s": time.perf_counter() - t0,

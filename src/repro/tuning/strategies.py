@@ -43,9 +43,10 @@ class GridSearch:
     Beyond paper: when ``config.locality_chunks`` is set, the same sweep
     repeats per candidate sampler chunk size — a third, outermost axis
     (DESIGN.md §5).  ``config.cache_budgets`` adds the fourth axis the
-    same way (DESIGN.md §7), outermost of all.  Left unset (the default),
-    the loop is exactly Algorithm 1 and the evaluator never sees a
-    locality or cache kwarg.
+    same way (DESIGN.md §7), and ``config.slow_lanes`` a fifth
+    (DESIGN.md §9), outermost of all.  Left unset (the default), the loop
+    is exactly Algorithm 1 and the evaluator never sees a locality, cache
+    or slow-lane kwarg.
     """
 
     def tune(self, rec: TrialRecorder, *,
@@ -54,24 +55,28 @@ class GridSearch:
         N, G = cfg.resolve()
         chunks = cfg.locality_chunks if cfg.locality_chunks else (None,)
         budgets = cfg.cache_budgets if cfg.cache_budgets else (None,)
-        n_worker, n_prefetch, n_chunk, n_budget = 0, 0, 0, 0
+        lanes = cfg.slow_lanes if cfg.slow_lanes else (None,)
+        n_worker, n_prefetch, n_chunk, n_budget, n_lane = 0, 0, 0, 0, 0
         optimal_time = math.inf
-        for b in budgets:                              # beyond-paper axis 4
-            for c in chunks:                           # beyond-paper axis 3
-                for i in worker_rungs(N, G):           # lines 4-5
-                    j = cfg.min_prefetch               # line 6
-                    while j <= cfg.max_prefetch:       # line 7
-                        t = rec.seconds(i, j,          # lines 8, 12
-                                        locality_chunk=c,
-                                        cache_budget_bytes=b)
-                        if not math.isfinite(t):       # lines 9-10
-                            break
-                        if t < optimal_time:           # lines 14-17
-                            optimal_time = t
-                            n_worker, n_prefetch = i, j
-                            n_chunk = c or 0
-                            n_budget = b or 0
-                        j += 1                         # line 19
+        for s in lanes:                                # beyond-paper axis 5
+            for b in budgets:                          # beyond-paper axis 4
+                for c in chunks:                       # beyond-paper axis 3
+                    for i in worker_rungs(N, G):       # lines 4-5
+                        j = cfg.min_prefetch           # line 6
+                        while j <= cfg.max_prefetch:   # line 7
+                            t = rec.seconds(i, j,      # lines 8, 12
+                                            locality_chunk=c,
+                                            cache_budget_bytes=b,
+                                            slow_lane_workers=s)
+                            if not math.isfinite(t):   # lines 9-10
+                                break
+                            if t < optimal_time:       # lines 14-17
+                                optimal_time = t
+                                n_worker, n_prefetch = i, j
+                                n_chunk = c or 0
+                                n_budget = b or 0
+                                n_lane = s or 0
+                            j += 1                     # line 19
         default_time = None
         if measure_default:
             dw, dp = default_params(N)
@@ -79,7 +84,8 @@ class GridSearch:
         return rec.result(n_worker, n_prefetch, optimal_time,
                           default_time=default_time,
                           locality_chunk=n_chunk,
-                          cache_budget_bytes=n_budget)
+                          cache_budget_bytes=n_budget,
+                          slow_lane_workers=n_lane)
 
 
 @register_strategy("successive_halving")

@@ -36,16 +36,22 @@ def flat_indices(batches):
 
 
 def make_cold_dataset(n, *, latency_s=1e-3, cache_bytes=0, bandwidth=1e9,
-                      item_shape=(8, 8, 3)):
+                      item_shape=(8, 8, 3), tail_fraction=0.0,
+                      tail_mult=1.0, tail_seed=0, tail_mode="bimodal"):
     """Seek-bound cold storage: every miss pays a base latency, which is
-    what makes coalesced (chunked-order) reads measurably faster."""
+    what makes coalesced (chunked-order) reads measurably faster.  The
+    tail knobs plant deterministic stragglers (DESIGN.md §9): a seeded
+    ``tail_fraction`` of items costs ``tail_mult``x extra on every miss."""
     from repro.data import ArrayStorage, Dataset, LatencyStorage
     from repro.data.dataset import image_transform
     rng = np.random.default_rng(0)
     items = [rng.integers(0, 255, item_shape, dtype=np.uint8)
              for _ in range(n)]
     storage = LatencyStorage(ArrayStorage(items), latency_s=latency_s,
-                             bandwidth=bandwidth, cache_bytes=cache_bytes)
+                             bandwidth=bandwidth, cache_bytes=cache_bytes,
+                             tail_fraction=tail_fraction,
+                             tail_mult=tail_mult, tail_seed=tail_seed,
+                             tail_mode=tail_mode)
     return Dataset(storage, transform=image_transform)
 
 

@@ -25,6 +25,8 @@ Runs under real hypothesis when installed (CI) and under the shim's
 deterministic fallback engine otherwise — either way the suite executes
 well over 100 randomized pipeline configurations.
 """
+import time
+
 import numpy as np
 import pytest
 
@@ -548,3 +550,85 @@ def test_fleet_network_fault_matrix(seed, wire_fleet):
     for h in (0, 1):
         assert fleet.agents[h].link.fence == new_fence
     assert fleet.server.fence == new_fence and not fleet.server.deposed
+
+
+# --------------------------------------------------------------------------
+# the dual-lane dimension (DESIGN.md §9): slow-sample isolation must never
+# touch order, coverage, or the hot-swap / reshard guarantees
+# --------------------------------------------------------------------------
+def _tail_transform(a):
+    """Planted stragglers: every 16th index sleeps — a deterministic
+    heavy-tailed per-item cost with no RNG state to share."""
+    if int(a[0]) % 16 == 0:
+        time.sleep(2e-3)
+    return {"x": a}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 3), st.integers(0, 10**6))
+def test_dual_lane_ordered_coverage_hot_swap_property(lane_w, look, seed):
+    """With stragglers planted and the slow lane active at ANY (width,
+    lookahead): the epoch arrives in exact sampler order and exact
+    coverage, and a mid-epoch hot swap that changes the lane width loses
+    and duplicates nothing — the early-started slow batches are all
+    delivered or all re-pulled, never dropped."""
+    n, gb = 96, 8
+    bpe = n // gb
+    params = LoaderParams(num_workers=2, prefetch_factor=2, ordered=True,
+                          slow_lane_workers=lane_w,
+                          slow_lane_lookahead=4 * look)
+    dl = DataLoader(make_index_dataset(n, transform=_tail_transform), gb,
+                    params=params, shuffle=True, seed=seed)
+    # epoch 0 warms the cost tracker: order + coverage with a cold lane
+    batches = list(dl.host_batches(epoch=0, num_batches=bpe))
+    assert flat_indices(batches) == list(range(n))
+    want = [dl.sampler.local_indices(0, b).tolist() for b in range(bpe)]
+    assert [np.asarray(b["x"])[:, 0].tolist() for b in batches] == want
+
+    # epoch 0 again via the live stream, swapping the lane mid-epoch —
+    # now the warm tracker actively routes to the slow lane
+    stream = dl.stream(to_device=False)
+    seen = [np.asarray(next(stream)["x"])[:, 0].copy() for _ in range(3)]
+    dl.apply_params(params.replace(num_workers=3,
+                                   slow_lane_workers=(lane_w % 3) + 1))
+    while stream.position < bpe:
+        seen.append(np.asarray(next(stream)["x"])[:, 0].copy())
+    stream.close()
+    flat = np.concatenate(seen).tolist()
+    assert sorted(flat) == list(range(n))
+    assert flat == [i for b in want for i in b], \
+        "hot swap broke ordered delivery"
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 2), st.integers(1, 4), st.integers(0, 10**6))
+def test_dual_lane_survives_reshard_property(lane_w, barrier, seed):
+    """A mid-epoch reshard with the slow lane live: one host dies, the
+    survivor takes over the whole stream at the barrier — the epoch union
+    is still the exact multiset (the slow lane's run-ahead batches are
+    rewound with everything else, zero lost, zero duplicated)."""
+    n, gb = 96, 12
+    bpe = n // gb
+    params = LoaderParams(num_workers=2, prefetch_factor=2, ordered=True,
+                          slow_lane_workers=lane_w, slow_lane_lookahead=8)
+
+    def mk(h, hc):
+        return DataLoader(make_index_dataset(n, transform=_tail_transform),
+                          gb, params=params, shuffle=True, seed=seed,
+                          host_index=h, host_count=hc)
+
+    dls = [mk(0, 2), mk(1, 2)]
+    streams = [dl.stream(to_device=False) for dl in dls]
+    delivered = []
+    try:
+        for _ in range(barrier):
+            for s in streams:
+                delivered.append(next(s))
+        streams[1].close()               # host1 dies at the barrier
+        dls[0].reshard(1, 0, at_batch=barrier)
+        while streams[0].position < bpe:
+            delivered.append(next(streams[0]))
+    finally:
+        for s in streams:
+            s.close()
+    assert flat_indices(delivered) == list(range(n))
