@@ -1,0 +1,206 @@
+"""Resilience gate for the fault-tolerant data plane (DESIGN.md §10).
+
+Three scenarios, one JSON verdict:
+
+* **goodput under faults** — the SAME epoch is run fault-free and through
+  a storm of 10% seeded transient read faults plus a mid-epoch brownout
+  window (every miss fails while the storage's access clock is inside
+  it).  Retries + backoff must ride both out with ZERO quarantined
+  samples, a byte-identical delivered multiset, and goodput (host
+  batches/sec) >= ``GATE_GOODPUT`` of the fault-free run;
+* **corrupt quarantine exactness** — permanently corrupt items under
+  ``on_bad_sample="skip"`` cost exactly themselves: the delivered epoch
+  is the permutation minus the quarantine, nothing else lost, nothing
+  duplicated, and the quarantine names exactly the corrupt set;
+* **worker-crash containment** — a process-pool worker is SIGKILL'd
+  mid-epoch; the per-worker-pipe transport must finish the epoch with
+  exact coverage and at least one recorded resubmit, instead of hanging
+  on the corpse (the ``multiprocessing.Pool`` failure mode).
+
+Results land in ``artifacts/bench/resilience.json`` plus
+``BENCH_resilience.json`` at the repo root (uploaded as a CI artifact),
+mirroring the fastpath/locality/cache/straggler/fleet gates.  The hard
+failure floor is overridable via ``RESILIENCE_GATE_MIN`` for noisy
+shared runners.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import platform
+import signal
+import sys
+import time
+
+import numpy as np
+
+from repro.data import DataLoader, LoaderParams, ShardedSampler
+from repro.data.dataset import Dataset
+from repro.data.faults import FaultyStorage, StorageFaultSpec
+from repro.data.storage import ArrayStorage, LatencyStorage
+from repro.data.worker_pool import ProcessWorkerPool
+
+TITLE = "Fault-tolerant data plane gate (goodput under 10% faults + brownout)"
+PAPER_REF = "perf gate"
+GATE_GOODPUT = 0.5          # faulty goodput >= 50% of fault-free
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_resilience.json")
+
+# fault storm calibration: 10% transient faults re-key by attempt (retries
+# clear deterministically) and the brownout window sits mid-epoch in
+# access-clock units — retries advance the clock, so sustained traffic
+# heals it.  latency_s keeps the fault-free epoch comfortably nonzero so
+# the goodput ratio measures recovery overhead, not harness noise.
+N_ITEMS = 512
+BATCH = 4
+LATENCY_S = 4e-4
+FAULT_RATE = 0.10
+BROWNOUT = (60, 80)
+RETRY = dict(retry_attempts=8, retry_backoff_s=2e-4, retry_deadline_s=5.0,
+             on_bad_sample="skip")
+
+
+def _ident(a):
+    # module-level (picklable) transform for the process-pool scenario
+    return {"x": a}
+
+
+def _index_items(n):
+    return [np.full((4,), i, np.int32) for i in range(n)]
+
+
+def _storm_dataset(n: int = N_ITEMS, *, faults: bool) -> Dataset:
+    storage = LatencyStorage(
+        ArrayStorage(_index_items(n)), latency_s=LATENCY_S, bandwidth=2e9,
+        cache_bytes=0, fault_rate=FAULT_RATE if faults else 0.0,
+        fault_seed=17, brownout=BROWNOUT if faults else None)
+    return Dataset(storage, transform=lambda a: {"x": a})
+
+
+def _loader(ds: Dataset) -> DataLoader:
+    return DataLoader(ds, BATCH, params=LoaderParams(
+        num_workers=2, prefetch_factor=2, **RETRY), shuffle=True, seed=0)
+
+
+def _epoch(dl: DataLoader):
+    """One timed epoch: (seconds, sorted per-sample sha1 digests)."""
+    digests = []
+    t0 = time.perf_counter()
+    for batch in dl.host_batches(epoch=0, num_batches=N_ITEMS // BATCH):
+        for row in np.asarray(batch["x"]):
+            digests.append(hashlib.sha1(row.tobytes()).hexdigest())
+    return time.perf_counter() - t0, sorted(digests)
+
+
+def goodput_scenario(repeats: int):
+    """Min-of-N epoch wall time, fault-free vs through the storm.  Fresh
+    storage per repeat: the access clock and attempt keys are stateful,
+    so a reused storage would dodge its own brownout the second time."""
+    t_clean, t_fault = float("inf"), float("inf")
+    digests_clean = digests_fault = None
+    faults_seen = retries_seen = 0
+    for _ in range(repeats):
+        dl = _loader(_storm_dataset(faults=False))
+        dt, digests_clean = _epoch(dl)
+        t_clean = min(t_clean, dt)
+
+        ds = _storm_dataset(faults=True)
+        dl = _loader(ds)
+        dt, digests_fault = _epoch(dl)
+        t_fault = min(t_fault, dt)
+        assert ds.storage.faults_injected > 0, "storm injected nothing"
+        assert len(dl.quarantine) == 0, \
+            "transient faults must never quarantine"
+        faults_seen = ds.storage.faults_injected
+        retries_seen = dl.fault_stats.read_retries
+    assert digests_fault == digests_clean, \
+        "fault recovery changed the delivered sample multiset"
+    return t_clean, t_fault, faults_seen, retries_seen
+
+
+def corrupt_scenario():
+    n, bad = 256, (7, 63, 100, 199, 255)
+    ds = Dataset(FaultyStorage(ArrayStorage(_index_items(n)),
+                               StorageFaultSpec(corrupt_items=bad)),
+                 transform=lambda a: {"x": a})
+    dl = DataLoader(ds, 8, params=LoaderParams(num_workers=2, **RETRY),
+                    shuffle=True, seed=0)
+    flat = sorted(int(i) for b in dl.host_batches(epoch=0)
+                  for i in np.asarray(b["x"])[:, 0])
+    assert flat == [i for i in range(n) if i not in bad], \
+        "skip mode lost or duplicated a non-quarantined sample"
+    assert sorted(dl.quarantine.ids().tolist()) == list(bad), \
+        "quarantine does not name exactly the corrupt set"
+    return {"n": n, "corrupt": len(bad),
+            "quarantined": int(dl.io_counters()["quarantined"])}
+
+
+def sigkill_scenario():
+    n, gb = 192, 8
+    ds = Dataset(ArrayStorage(_index_items(n)), transform=_ident)
+    idx = ShardedSampler(n, gb, shuffle=False, seed=0).epoch_iter(0)
+    pool = ProcessWorkerPool(ds, idx, num_workers=2, prefetch_factor=2,
+                             ordered=True)
+    t0 = time.perf_counter()
+    it = iter(pool)
+    got = [next(it)]
+    os.kill(sorted(pool._worker_pids)[0], signal.SIGKILL)
+    got.extend(it)
+    dt = time.perf_counter() - t0
+    flat = sorted(int(i) for b in got for i in np.asarray(b["x"])[:, 0])
+    assert flat == list(range(n)), \
+        "worker crash lost or duplicated a batch"
+    assert pool.resubmits >= 1, "crash recovery recorded no resubmit"
+    return {"batches": len(got), "resubmits": pool.resubmits,
+            "epoch_s": round(dt, 3)}
+
+
+def run(quick: bool = False):
+    repeats = 2 if quick else 3
+    bpe = N_ITEMS // BATCH
+
+    t_clean, t_fault, faults, retries = goodput_scenario(repeats)
+    ratio = t_clean / t_fault
+    corrupt = corrupt_scenario()
+    crash = sigkill_scenario()
+
+    rows = [{"config": "fault_free", "epoch_s": round(t_clean, 3),
+             "bps": round(bpe / t_clean, 1), "faults": 0},
+            {"config": "fault_storm", "epoch_s": round(t_fault, 3),
+             "bps": round(bpe / t_fault, 1), "faults": faults,
+             "retries": retries, "goodput_ratio": round(ratio, 2)},
+            {"config": "corrupt_skip", **corrupt},
+            {"config": "sigkill_worker", **crash}]
+
+    payload = {
+        "bench": "resilience",
+        "gate": {"profile": f"{FAULT_RATE:.0%}_transient+brownout",
+                 "batch": BATCH,
+                 "required_goodput_ratio": GATE_GOODPUT,
+                 "measured_goodput_ratio": round(ratio, 2),
+                 "passed": ratio >= GATE_GOODPUT,
+                 "byte_identical_multiset": True,
+                 "zero_quarantined_under_storm": True,
+                 "corrupt_quarantine_exact": True,
+                 "sigkill_resubmits": crash["resubmits"]},
+        "rows": rows,
+        "host": {"platform": platform.platform(),
+                 "python": sys.version.split()[0],
+                 "numpy": np.__version__},
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+    fail_below = float(os.environ.get("RESILIENCE_GATE_MIN", GATE_GOODPUT))
+    if ratio < fail_below:
+        raise RuntimeError(
+            f"resilience gate FAILED: goodput ratio {ratio:.2f} < "
+            f"{fail_below} through the fault storm (see {ROOT_JSON})")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_table
+    print(fmt_table(run(quick="--quick" in sys.argv)))

@@ -23,6 +23,7 @@ BENCHES = [
     ("locality", "benchmarks.bench_locality", "perf gate"),
     ("cache", "benchmarks.bench_cache", "perf gate"),
     ("straggler", "benchmarks.bench_straggler", "perf gate"),
+    ("resilience", "benchmarks.bench_resilience", "perf gate"),
     ("grid_cifar", "benchmarks.bench_grid_cifar", "Fig 2a/2b/4"),
     ("prefetch", "benchmarks.bench_prefetch", "Fig 3"),
     ("coco_resolution", "benchmarks.bench_coco_resolution", "Table 1a-1d"),

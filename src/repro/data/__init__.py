@@ -4,6 +4,15 @@ from repro.data.cache import (  # noqa: F401
     CacheTier,
     plan_hot_chunks,
 )
+from repro.data.faults import (  # noqa: F401
+    FaultPolicy,
+    FaultStats,
+    FaultyStorage,
+    QuarantineLog,
+    RetryPolicy,
+    StorageFaultSpec,
+    quarantine_complement,
+)
 from repro.data.dataset import (  # noqa: F401
     Dataset,
     default_collate,
@@ -20,9 +29,13 @@ from repro.data.loader import (  # noqa: F401
 from repro.data.sampler import SamplerState, ShardedSampler  # noqa: F401
 from repro.data.storage import (  # noqa: F401
     ArrayStorage,
+    BrownoutError,
+    CorruptSampleError,
     FileStorage,
     LatencyStorage,
+    SampleReadError,
     StorageProfile,
+    TransientReadError,
     cifar10_profile,
     coalesce_runs,
     coco_profile,

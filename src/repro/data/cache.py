@@ -69,6 +69,11 @@ class CacheTier:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # brownout degraded mode (DESIGN.md §10): when the loader's fault
+        # rate crosses its threshold, the tier stops admitting new items —
+        # serve-hits-first read-only mode — so a failing backend can't
+        # churn the resident set it is about to depend on
+        self.read_only = False
         self._configure(budget_bytes, chunk, num_items, item_nbytes)
 
     # -- configuration -----------------------------------------------------
@@ -215,7 +220,7 @@ class CachedStorage(Storage):
         if not missing:
             return hits[int(index)]
         item = self.inner.read(index)
-        if self.admit:
+        if self.admit and not self.tier.read_only:
             self.tier.admit(index, item)
         return item
 
@@ -224,8 +229,9 @@ class CachedStorage(Storage):
         hits, missing = self.tier.lookup(idx)
         if missing:
             fetched = self.inner.read_batch(missing)
+            admit = self.admit and not self.tier.read_only
             for i, item in zip(missing, fetched):
                 hits[i] = item
-                if self.admit:
+                if admit:
                     self.tier.admit(i, item)
         return [hits[i] for i in idx]

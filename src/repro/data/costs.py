@@ -157,6 +157,18 @@ class SampleCostTracker:
         with self._lock:
             self.slow_batches += 1
 
+    def forget(self, indices) -> None:
+        """Drop the estimates for quarantined items (DESIGN.md §10): an
+        id that exited service must stop dragging the median/tail stats.
+        With ``bucket > 1`` the whole shared bucket resets — its surviving
+        neighbours re-learn within a couple of sightings."""
+        slots = self._slots(indices)
+        if slots.size == 0:
+            return
+        with self._lock:
+            self._ewma[slots[slots < self._ewma.size]] = np.nan
+            self._median_stale = True
+
     # ---- tail statistics (io_counters / GoodputMonitor feed) ---------------
     def mean(self) -> float:
         return self._mean

@@ -26,6 +26,8 @@ from repro.data.arena import SlabArena
 from repro.data.cache import CachedStorage, CacheTier
 from repro.data.costs import SampleCostTracker
 from repro.data.dataset import Dataset
+from repro.data.faults import (FaultPolicy, FaultStats, QuarantineLog,
+                               RetryPolicy)
 from repro.data.prefetcher import DevicePrefetcher
 from repro.data.sampler import SamplerState, ShardedSampler
 from repro.data.storage import storage_io_counters
@@ -71,6 +73,19 @@ class LoaderParams:
     Ordered thread pools only (process pools translate the knob into
     early ``apply_async`` submission; unordered delivery has no
     head-of-line pathology to fix, so the lane is inert there).
+
+    Fault-tolerance knobs (DESIGN.md §10): ``retry_attempts`` retries per
+    item-attributed transient read fault (with ``retry_backoff_s``
+    exponential jittered backoff, the whole read bounded by
+    ``retry_deadline_s`` — the budget that also rides out storage-wide
+    brownouts); ``on_bad_sample`` declares how a batch completes when an
+    item exhausts its retries or is permanently corrupt: ``"raise"``
+    (pool-fatal, the legacy default), ``"skip"`` (drop the quarantined
+    ids — delivered multiset = epoch permutation minus quarantine), or
+    ``"substitute"`` (deterministically resample replacements).
+    ``degraded_fault_rate`` (0 = off) is the windowed fault rate at which
+    the loader flips its cache tier to serve-hits-first read-only mode
+    until the storage heals.
     """
     num_workers: int = 0
     prefetch_factor: int = 2
@@ -87,6 +102,11 @@ class LoaderParams:
     slow_lane_workers: int = 0
     slow_lane_threshold: float = 4.0
     slow_lane_lookahead: int = 8
+    retry_attempts: int = 2
+    retry_backoff_s: float = 0.01
+    retry_deadline_s: float = 2.0
+    on_bad_sample: str = "raise"
+    degraded_fault_rate: float = 0.5
 
     def __post_init__(self):
         if self.use_processes and not self.ordered:
@@ -104,6 +124,19 @@ class LoaderParams:
         if self.slow_lane_threshold <= 1.0:
             raise ValueError("slow_lane_threshold must be > 1.0 (it is a "
                              "multiple of the median item cost)")
+        if self.on_bad_sample not in ("raise", "skip", "substitute"):
+            raise ValueError(
+                "on_bad_sample must be 'raise', 'skip' or 'substitute', "
+                f"got {self.on_bad_sample!r}")
+        if self.retry_attempts < 0:
+            raise ValueError("retry_attempts must be >= 0")
+        if self.retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be >= 0")
+        if self.retry_deadline_s <= 0:
+            raise ValueError("retry_deadline_s must be > 0")
+        if not 0.0 <= self.degraded_fault_rate <= 1.0:
+            raise ValueError("degraded_fault_rate must be in [0, 1] "
+                             "(0 disables degraded mode)")
 
     def replace(self, **kw) -> "LoaderParams":
         return dataclasses.replace(self, **kw)
@@ -155,6 +188,15 @@ class TransferStats:
     sample_cost_mean_s: float = 0.0
     sample_cost_p99_s: float = 0.0
     slow_batches: int = 0
+    # fault-plane health over the window (DESIGN.md §10): retried reads,
+    # raised faults, newly-quarantined items, process-worker resubmits,
+    # and whether the loader ended the window in degraded (cache
+    # read-only) mode.  Zero/False on a healthy storage.
+    read_retries: int = 0
+    read_faults: int = 0
+    quarantined: int = 0
+    resubmits: int = 0
+    degraded: bool = False
 
     @property
     def bytes_per_second(self) -> float:
@@ -402,6 +444,20 @@ class LoaderStream:
                 self._pull_kinds.append(False)
                 yield idx
 
+    def _note_skip(self) -> None:
+        """A pool-level skip (fault policy dropped an all-quarantined
+        batch) consumed one pulled index-batch without a yield: pop its
+        pull-kind so the FIFO stays aligned, and advance the regular-batch
+        cursor — the sampler moved past it.  A skipped makeup chunk is
+        consumed, not re-queued: its samples are quarantined.  Runs on the
+        consumer thread, in delivery order, like the accounting below."""
+        with self._lock:
+            if self._pull_kinds and self._pull_kinds.popleft():
+                if self._inflight_makeup:
+                    self._inflight_makeup.popleft()
+            else:
+                self.position += 1
+
     def _host_stream(self):
         while True:
             with self._lock:
@@ -409,7 +465,8 @@ class LoaderStream:
             if due:
                 self._commit_reshard()
             pool, _monitor = self.loader._pool(self._indices(),
-                                               for_stream=True)
+                                               for_stream=True,
+                                               on_skip=self._note_skip)
             draining = False
             resharding = False
             it = iter(pool)
@@ -509,12 +566,48 @@ class DataLoader:
         # slow-lane predictor must survive the very retune that enables it
         self.cost_tracker = SampleCostTracker(
             len(dataset), threshold=params.slow_lane_threshold)
+        # fault-plane state (DESIGN.md §10), shared by every pool this
+        # loader creates: the quarantine rides state_dict like costs, and
+        # the stats' degraded flip drives the cache tier's read-only mode
+        self.quarantine = QuarantineLog()
+        self.fault_stats = FaultStats(
+            degraded_enter=params.degraded_fault_rate,
+            on_degraded=self._on_degraded)
         self.sampler = ShardedSampler(
             len(dataset), global_batch, shuffle=shuffle, seed=seed,
             host_index=host_index, host_count=host_count,
             state=sampler_state, locality_chunk=params.locality_chunk)
         if params.cache_budget_bytes > 0:
             self._sync_cache_plan()
+
+    # ---- fault plane (DESIGN.md §10) ---------------------------------------
+    def _on_degraded(self, degraded: bool) -> None:
+        """Degraded-mode flip: the cache tier serves hits but admits
+        nothing while the storage is browning out (read-only survives a
+        flush-refill cycle the failing reads could never win), and goes
+        back to normal admission once successes dilute the fault rate."""
+        tier = self._cache_tier
+        if tier is not None:
+            tier.read_only = degraded
+
+    def _on_quarantine(self, ids: List[int]) -> None:
+        """Quarantined items exit cost tracking: a permanently-failing id
+        must stop dragging the tail stats and slow-lane routing."""
+        self.cost_tracker.forget(ids)
+
+    def _fault_policy(self) -> FaultPolicy:
+        """The policy pools run reads through, rebuilt per pool from the
+        (hot-swappable) params; the quarantine/stats live on the loader."""
+        p = self.params
+        self.fault_stats.degraded_enter = max(0.0, p.degraded_fault_rate)
+        return FaultPolicy(
+            retry=RetryPolicy(attempts=p.retry_attempts,
+                              backoff_s=p.retry_backoff_s,
+                              deadline_s=p.retry_deadline_s),
+            quarantine=self.quarantine, stats=self.fault_stats,
+            on_bad_sample=p.on_bad_sample, num_items=len(self.dataset),
+            seed=getattr(self.sampler, "seed", 0),
+            on_quarantine=self._on_quarantine)
 
     # ---- cache tier (DESIGN.md §7) -----------------------------------------
     @property
@@ -583,7 +676,8 @@ class DataLoader:
                 "params": dataclasses.asdict(self.params),
                 "locality": self.sampler.locality_state(),
                 "cache_plan": self.sampler.cache_state(),
-                "costs": self.cost_tracker.state_dict()}
+                "costs": self.cost_tracker.state_dict(),
+                "quarantine": self.quarantine.state_dict()}
 
     def load_state_dict(self, d):
         self.sampler.state = SamplerState.from_dict(d["sampler"])
@@ -600,6 +694,8 @@ class DataLoader:
             self.sampler.force_cache_plan(hot_k)
         if "costs" in d:               # pre-costs checkpoints start cold
             self.cost_tracker.load_state_dict(d["costs"])
+        if "quarantine" in d:          # pre-fault checkpoints start clean
+            self.quarantine.load_state_dict(d["quarantine"])
 
     def with_params(self, params: LoaderParams) -> "DataLoader":
         """Set params for *future* pools (trial measurements, restarts).
@@ -725,7 +821,7 @@ class DataLoader:
         return self._stream_arena
 
     def _pool(self, index_iter, *, for_stream: bool = False,
-              dataset: Optional[Dataset] = None):
+              dataset: Optional[Dataset] = None, on_skip=None):
         monitor = MemoryMonitor(self.memory_budget)
         cls = ProcessWorkerPool if (self.params.use_processes
                                     and self.params.num_workers > 0) \
@@ -749,7 +845,9 @@ class DataLoader:
                    arena=self._arena(for_stream=for_stream),
                    cost_tracker=self.cost_tracker,
                    slow_lane_workers=self.params.slow_lane_workers,
-                   slow_lane_lookahead=self.params.slow_lane_lookahead)
+                   slow_lane_lookahead=self.params.slow_lane_lookahead,
+                   fault_policy=self._fault_policy(),
+                   on_skip=on_skip)
         return pool, monitor
 
     def host_batches(self, *, epoch: Optional[int] = None,
@@ -821,6 +919,17 @@ class DataLoader:
             out["sample_cost_p99_s"] = tracker.p99()
             out["sample_cost_tail_ratio"] = tracker.tail_ratio()
             out["slow_batches"] = float(tracker.slow_batches)
+        fs = self.fault_stats
+        if fs.read_faults or fs.read_retries or fs.resubmits \
+                or len(self.quarantine) or fs.degraded:
+            # fault-plane health (DESIGN.md §10): valid in process mode too
+            # — children ship their tallies back and the parent merges them
+            out["read_retries"] = float(fs.read_retries)
+            out["read_faults"] = float(fs.read_faults)
+            out["quarantined"] = float(len(self.quarantine))
+            out["resubmits"] = float(fs.resubmits)
+            out["degraded"] = 1.0 if fs.degraded else 0.0
+            out["fault_rate"] = fs.fault_rate()
         return out
 
     def _prewarm_tier(self, tier: CacheTier) -> None:
@@ -920,6 +1029,8 @@ class DataLoader:
         tier_before = (trial_tier.hits, trial_tier.misses) \
             if trial_tier is not None else (0, 0)
         slow_before = self.cost_tracker.slow_batches
+        fault_before = self.fault_stats.snapshot()
+        q_before = len(self.quarantine)
         pool, monitor = self._pool(idx_iter, dataset=trial_dataset)
         total_bytes = 0
         n = 0
@@ -983,6 +1094,15 @@ class DataLoader:
             stats.sample_cost_mean_s = self.cost_tracker.mean()
             stats.sample_cost_p99_s = self.cost_tracker.p99()
             stats.slow_batches = self.cost_tracker.slow_batches - slow_before
+        fault_after = self.fault_stats.snapshot()
+        stats.read_retries = int(fault_after["read_retries"]
+                                 - fault_before["read_retries"])
+        stats.read_faults = int(fault_after["read_faults"]
+                                - fault_before["read_faults"])
+        stats.resubmits = int(fault_after["resubmits"]
+                              - fault_before["resubmits"])
+        stats.quarantined = len(self.quarantine) - q_before
+        stats.degraded = self.fault_stats.degraded
         return stats
 
 

@@ -123,6 +123,13 @@ class StagingPool:
                 for k, v in batch.items()}
         with self._lock:
             if self._spec != spec:
+                if self._ragged_of(spec, self._spec):
+                    # a short batch (skip-mode quarantine, makeup tail):
+                    # transient — allocate fresh without thrashing the
+                    # ring the full-size batches still need
+                    self.misses += 1
+                    return {k: np.empty(shape, dtype)
+                            for k, (shape, dtype) in spec.items()}
                 # first batch, or the batch shape changed (reshard):
                 # pooled buffers of the old shape are useless — drop them
                 self._free.clear()
@@ -133,6 +140,20 @@ class StagingPool:
             self.misses += 1
         return {k: np.empty(shape, dtype) for k, (shape, dtype) in
                 spec.items()}
+
+    @staticmethod
+    def _ragged_of(spec, latched) -> bool:
+        """Is ``spec`` the latched spec with a smaller leading dim (same
+        fields, dtypes, trailing dims)?"""
+        if latched is None or set(spec) != set(latched):
+            return False
+        for k, (shape, dtype) in spec.items():
+            lshape, ldtype = latched[k]
+            if (dtype != ldtype or len(shape) != len(lshape)
+                    or not shape or shape[0] >= lshape[0]
+                    or shape[1:] != lshape[1:]):
+                return False
+        return True
 
     def release(self, buf: Dict[str, np.ndarray]) -> None:
         """The device copy landed in a private buffer: back to the ring

@@ -108,6 +108,55 @@ class StorageProfile:
             tail_mult=max(1.0, mult))
 
 
+# --------------------------------------------------------------------------
+# fault vocabulary (DESIGN.md §10): storage backends raise these, the
+# worker-pool retry machinery (data/faults.py) catches and classifies them
+# --------------------------------------------------------------------------
+class SampleReadError(IOError):
+    """A read failed.  ``index`` names the culprit item when the backend
+    can attribute the failure to one (None = whole-request failure)."""
+
+    def __init__(self, message: str, *, index: Optional[int] = None):
+        super().__init__(message)
+        self.index = index
+
+    # IOError's default __reduce__ drops keyword state; carry ``index``
+    # across process boundaries (a child's raise ships back via pickle)
+    def __reduce__(self):
+        return (self.__class__, (str(self),), {"index": self.index})
+
+
+class TransientReadError(SampleReadError):
+    """Retryable: the same read may succeed on the next attempt."""
+
+
+class BrownoutError(TransientReadError):
+    """The storage itself is unavailable — never attributable to an item,
+    so retry budgets treat it as deadline-bounded, not attempt-bounded,
+    and nothing is ever quarantined for failing during a brownout."""
+
+
+class CorruptSampleError(SampleReadError):
+    """Permanent: this item will never read correctly (bad bytes on
+    storage).  Retrying is pointless; the item is quarantine material."""
+
+
+_SPLITMIX_M64 = (1 << 64) - 1
+
+
+def splitmix_u01(seed: int, idx: int, salt: int = 0) -> float:
+    """Deterministic uniform in [0, 1) from (seed, idx, salt) — a
+    splitmix64-style integer mix with no RNG state to share or fork.
+    Shared by the heavy-tail draw, the fault draws and jittered backoff."""
+    x = (int(idx) * 0x9E3779B97F4A7C15
+         + (int(seed) * 2 + int(salt) + 1) * 0xBF58476D1CE4E5B9) \
+        & _SPLITMIX_M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _SPLITMIX_M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _SPLITMIX_M64
+    x ^= x >> 31
+    return x / float(1 << 64)
+
+
 def coalesce_runs(indices: Sequence[int]) -> List[Tuple[int, int]]:
     """Group sorted(indices) into maximal contiguous runs [(start, length)].
 
@@ -292,13 +341,27 @@ class LatencyStorage(Storage):
     across threads, processes and epochs — stragglers are reproducible
     without wall-clock-dominating sleeps (tail cost scales with
     ``latency_s``, so CI keeps it tiny).
+
+    Fault mode (DESIGN.md §10): with ``fault_rate > 0`` a cache *miss*
+    raises :class:`TransientReadError` with probability ``fault_rate``,
+    drawn from ``splitmix_u01(fault_seed, idx, attempt)`` — the draw is
+    re-keyed by the item's failure count, so an item that faulted once is
+    not doomed to fault forever: retries deterministically clear.
+    ``brownout=(start, stop)`` fails EVERY miss while the storage's access
+    clock (one tick per ``read``/``read_batch`` call) is inside the
+    window, raising :class:`BrownoutError`; retries advance the clock, so
+    a brownout heals under sustained traffic.  Cache hits are always
+    served — the "serve-hits-first" half of degraded mode is a property of
+    the storage, not just the loader.
     """
 
     def __init__(self, inner: Storage, *, latency_s: float = 1e-3,
                  bandwidth: float = 1e9, cache_bytes: int = 0,
                  concurrent_streams: int = 8, tail_fraction: float = 0.0,
                  tail_mult: float = 1.0, tail_seed: int = 0,
-                 tail_mode: str = "bimodal"):
+                 tail_mode: str = "bimodal", fault_rate: float = 0.0,
+                 fault_seed: int = 0,
+                 brownout: Optional[Tuple[int, int]] = None):
         if tail_mode not in ("bimodal", "lognormal"):
             raise ValueError(f"unknown tail_mode: {tail_mode!r}")
         self.inner = inner
@@ -309,6 +372,9 @@ class LatencyStorage(Storage):
         self.tail_mult = max(1.0, tail_mult)
         self.tail_seed = int(tail_seed)
         self.tail_mode = tail_mode
+        self.fault_rate = max(0.0, min(1.0, fault_rate))
+        self.fault_seed = int(fault_seed)
+        self.brownout = tuple(brownout) if brownout else None
         self._cache: dict = {}
         self._cache_used = 0
         self._lock = threading.Lock()
@@ -318,6 +384,9 @@ class LatencyStorage(Storage):
         self.cache_misses = 0
         self.batched_reads = 0
         self.coalesced_requests = 0
+        self.faults_injected = 0
+        self._access_clock = 0          # read/read_batch calls so far
+        self._fault_attempts: Dict[int, int] = {}   # idx -> failures so far
 
     def __len__(self):
         return len(self.inner)
@@ -326,18 +395,9 @@ class LatencyStorage(Storage):
         return self.inner.item_nbytes(idx)
 
     # ---- heavy tail --------------------------------------------------------
-    _M64 = (1 << 64) - 1
-
     def _item_u01(self, idx: int, salt: int = 0) -> float:
-        """Deterministic uniform in [0, 1) from (tail_seed, idx, salt) —
-        splitmix64-style integer mix, no RNG state to share or fork."""
-        x = (int(idx) * 0x9E3779B97F4A7C15
-             + (self.tail_seed * 2 + salt + 1) * 0xBF58476D1CE4E5B9) \
-            & self._M64
-        x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & self._M64
-        x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & self._M64
-        x ^= x >> 31
-        return x / float(1 << 64)
+        """Deterministic uniform in [0, 1) from (tail_seed, idx, salt)."""
+        return splitmix_u01(self.tail_seed, idx, salt)
 
     def tail_multiplier(self, idx: int) -> float:
         """Per-item miss-cost multiplier (1.0 when the tail is off)."""
@@ -367,6 +427,36 @@ class LatencyStorage(Storage):
         return self.latency_s * sum(
             max(0.0, self.tail_multiplier(i) - 1.0) for i in indices)
 
+    # ---- fault injection (DESIGN.md §10) -----------------------------------
+    def _maybe_fault(self, misses, clock: int) -> None:
+        """Raise for faulting misses: a brownout window fails the whole
+        request (unattributable), a transient draw fails one item — keyed
+        by that item's failure count, so retries clear deterministically."""
+        if not misses:
+            return                      # hits are always served
+        if self.brownout is not None \
+                and self.brownout[0] <= clock - 1 < self.brownout[1]:
+            with self._lock:
+                self.faults_injected += 1
+            raise BrownoutError(
+                f"storage brownout (access {clock} in "
+                f"window {self.brownout})")
+        if self.fault_rate <= 0.0:
+            return
+        for i in misses:
+            with self._lock:
+                attempt = self._fault_attempts.get(i, 0)
+            # salt 101+attempt keeps the fault stream disjoint from the
+            # tail draws (salts 0/1) even when the seeds coincide
+            if splitmix_u01(self.fault_seed, i,
+                            101 + attempt) < self.fault_rate:
+                with self._lock:
+                    self._fault_attempts[i] = attempt + 1
+                    self.faults_injected += 1
+                raise TransientReadError(
+                    f"transient read fault on item {i} "
+                    f"(attempt {attempt})", index=int(i))
+
     def _maybe_cache(self, idx: int, nbytes: int, data) -> None:
         if self.cache_bytes:
             with self._lock:
@@ -377,6 +467,8 @@ class LatencyStorage(Storage):
 
     def read(self, idx):
         with self._lock:
+            self._access_clock += 1
+            clock = self._access_clock
             self.reads += 1
             cached = idx in self._cache
             if cached:
@@ -385,6 +477,7 @@ class LatencyStorage(Storage):
                 self.cache_misses += 1
         if cached:
             return self._cache[idx]
+        self._maybe_fault((idx,), clock)
         nbytes = self.inner.item_nbytes(idx)
         with self._sem:  # bounded concurrent streams share the bus
             time.sleep(self.latency_s + nbytes / self.bandwidth
@@ -396,12 +489,15 @@ class LatencyStorage(Storage):
     def read_batch(self, indices):
         indices = [int(i) for i in indices]
         with self._lock:
+            self._access_clock += 1
+            clock = self._access_clock
             self.reads += len(indices)
             self.batched_reads += 1
             hits = {i for i in indices if i in self._cache}
             self.cache_hits += len(hits)
             self.cache_misses += len(indices) - len(hits)
         misses = [i for i in indices if i not in hits]
+        self._maybe_fault(misses, clock)
         runs = coalesce_runs(misses)
         for start, length in runs:
             run_bytes = sum(self.inner.item_nbytes(start + k)

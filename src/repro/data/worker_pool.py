@@ -8,8 +8,17 @@ idiomatic JAX-host analogue of PyTorch's forked dataloader workers).
 Backpressure implements PyTorch ``prefetch_factor`` semantics: at most
 ``num_workers * prefetch_factor`` finished batches may be queued; workers
 block (stop consuming memory) when the consumer lags.  ``ProcessWorkerPool``
-bounds its in-flight task window to the same depth (a semaphore throttles
-the pool's task pump), so process mode has real backpressure too.
+bounds its in-flight task window to the same depth (its consumer-driven
+pump submits at most that many sequences ahead), so process mode has real
+backpressure too.
+
+Fault tolerance (DESIGN.md §10): with a ``fault_policy`` the task bodies
+run reads through retry/quarantine/batch-repair machinery (data/faults.py)
+so transient storage faults never escape a worker; a policy-skipped batch
+consumes its sequence slot (``on_skip`` tells the stream) instead of
+killing the pool, and a SIGKILL'd process-pool child costs one resubmit
+instead of the stream.  Without a policy, any worker exception remains
+pool-fatal exactly as before.
 
 Delivery is **order-preserving** by default (``ordered=True``): every
 index-batch gets a sequence number when it is pulled from the sampler, and
@@ -60,6 +69,9 @@ from repro.core.monitor import MemoryMonitor, MemoryOverflow
 from repro.data.arena import ArenaBatch, SlabArena, maybe_release
 
 _SENTINEL = object()
+_SKIPPED = object()      # a fault policy dropped the whole batch: the
+#                          sequence slot is consumed but nothing is yielded
+_POOL_STOPPED = object()
 
 
 def _mp_get_batch(dataset, fast, idx):
@@ -73,6 +85,29 @@ def _mp_get_batch_timed(dataset, fast, idx):
     t0 = time.perf_counter()
     batch = dataset.get_batch(idx, fast=fast)
     return batch, time.perf_counter() - t0
+
+
+def _mp_resilient_batch(dataset, fast, policy, idx):
+    """Fault-tolerant task body (DESIGN.md §10): the child runs the read
+    through a pickled ``FaultPolicy`` snapshot and ships back (batch or
+    None, wall seconds, tally) — the parent merges quarantined ids and
+    fault counts into its live log/stats."""
+    report: dict = {}
+    t0 = time.perf_counter()
+    batch = policy.get_batch(dataset, idx, fast=fast, report=report)
+    return batch, time.perf_counter() - t0, report
+
+
+def _record_cost(cost_tracker, fault_policy, idx, dt) -> None:
+    """Fold a batch's wall time into the cost tracker, excluding ids the
+    policy just quarantined — their forgotten EWMA slots must not be
+    repopulated by the very batch that withdrew them."""
+    if fault_policy is not None and len(fault_policy.quarantine):
+        idx = np.asarray(idx).reshape(-1)
+        idx = idx[~np.isin(idx, fault_policy.quarantine.ids())]
+        if idx.size == 0:
+            return
+    cost_tracker.record(idx, dt)
 
 
 def batch_nbytes(batch) -> int:
@@ -121,13 +156,21 @@ class ThreadWorkerPool:
                  ordered: bool = True, fast: bool = True,
                  arena: Optional[SlabArena] = None,
                  cost_tracker=None, slow_lane_workers: int = 0,
-                 slow_lane_lookahead: int = 8):
+                 slow_lane_lookahead: int = 8,
+                 fault_policy=None, on_skip=None):
         self.dataset = dataset
         self.num_workers = max(0, num_workers)
         self.prefetch_factor = max(1, prefetch_factor)
         self.monitor = monitor or MemoryMonitor()
         self.ordered = ordered
         self.fast = fast
+        # data/faults.py FaultPolicy: retries + quarantine + batch repair
+        # inside the task body, so transient faults never kill the pool.
+        # ``on_skip`` fires (on the consumer thread) for each sequence
+        # slot the policy dropped entirely — streams keep their position
+        # accounting exact.
+        self.fault_policy = fault_policy
+        self.on_skip = on_skip
         self.arena = arena if (fast and getattr(
             dataset, "supports_fast_path", False)) else None
         self.cost_tracker = cost_tracker
@@ -259,16 +302,29 @@ class ThreadWorkerPool:
             return None
         return self.arena.acquire(stop=self._stop)
 
+    def _get(self, idx, out=None):
+        """The read, through the fault policy when one is armed (None =
+        every index of the batch is quarantined: skip the slot)."""
+        if self.fault_policy is not None:
+            return self.fault_policy.get_batch(self.dataset, idx, out=out,
+                                               fast=self.fast)
+        return self.dataset.get_batch(idx, out=out, fast=self.fast)
+
     def _collate(self, idx, slot):
-        """One collated batch (+ its nbytes), into ``slot`` if given."""
+        """One collated batch (+ its nbytes), into ``slot`` if given.
+        ``(None, 0)`` means the fault policy dropped the whole batch."""
         if slot is not None:
-            batch = self.dataset.get_batch(idx, out=slot.arrays,
-                                           fast=self.fast)
+            batch = self._get(idx, out=slot.arrays)
+            if batch is None:
+                slot.release()
+                return None, 0
             if batch is not slot.arrays:    # slab didn't fit (ragged tail)
                 slot.release()
                 return batch, batch_nbytes(batch)
             return ArenaBatch(slot), slot.nbytes
-        batch = self.dataset.get_batch(idx, fast=self.fast)
+        batch = self._get(idx)
+        if batch is None:
+            return None, 0
         if self.arena is not None:
             adopted = self.arena.adopt(batch)   # establishes the spec
             if adopted is not None:
@@ -305,8 +361,13 @@ class ThreadWorkerPool:
                     if slot is not None:    # not yet wrapped: recycle it
                         slot.release()
                     raise
+                if batch is None:           # policy dropped the batch: the
+                    #                         slot still consumes its seq
+                    self._queue.put((seq, _SKIPPED, 0))
+                    continue
                 if self.cost_tracker is not None:
-                    self.cost_tracker.record(idx, dt)
+                    _record_cost(self.cost_tracker, self.fault_policy,
+                                 idx, dt)
                 try:
                     self.monitor.reserve(nbytes)
                     self._queue.put((seq, batch, nbytes))
@@ -344,8 +405,13 @@ class ThreadWorkerPool:
                     return
                 t0 = time.perf_counter()
                 batch, _ = self._collate(idx, slot)
+                if batch is None:
+                    if self.on_skip is not None:
+                        self.on_skip()
+                    continue
                 if self.cost_tracker is not None:
-                    self.cost_tracker.record(idx, time.perf_counter() - t0)
+                    _record_cost(self.cost_tracker, self.fault_policy,
+                                 idx, time.perf_counter() - t0)
                 maybe_release(prev)        # consumer advanced past it
                 prev = batch               # set BEFORE yield: teardown at
                 yield batch                # the yield still recycles it
@@ -372,6 +438,10 @@ class ThreadWorkerPool:
                         for seq in sorted(reorder):
                             batch, nbytes = reorder.pop(seq)
                             self.monitor.release(nbytes)
+                            if batch is _SKIPPED:
+                                if self.on_skip is not None:
+                                    self.on_skip()
+                                continue
                             maybe_release(prev)
                             prev = batch
                             yield batch
@@ -387,6 +457,11 @@ class ThreadWorkerPool:
                     maybe_release(batch, owned_only=False)  # in hand, unyielded
                     self.shutdown()
                     raise self._error
+                if batch is _SKIPPED:      # every id was quarantined: the
+                    #                        slot advances, nothing arrives
+                    if self.on_skip is not None:
+                        self.on_skip()
+                    continue
                 maybe_release(prev)        # consumer advanced past it
                 prev = batch               # set BEFORE yield: teardown at
                 yield batch                # the yield still recycles it
@@ -420,29 +495,94 @@ class ThreadWorkerPool:
                 maybe_release(item[1], owned_only=False)
 
 
-class ProcessWorkerPool:
-    """Process-based fallback (GIL-heavy transforms).  Uses a fork pool;
-    heavier per-batch overhead, same interface.
+def _pw_worker_main(conn, dataset, fast, timed):
+    """Child loop: recv ``(seq, idx, policy)`` tasks on a private duplex
+    pipe, ship ``(seq, err, payload)`` back.  ``None`` is the shutdown
+    sentinel.  Exceptions are shipped, not raised — the parent re-raises
+    them in sequence order."""
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        if msg is None:
+            break
+        seq, idx, pol = msg
+        try:
+            if pol is not None:
+                out = _mp_resilient_batch(dataset, fast, pol, idx)
+            elif timed:
+                out = _mp_get_batch_timed(dataset, fast, idx)
+            else:
+                out = _mp_get_batch(dataset, fast, idx)
+            err = None
+        except BaseException as e:  # noqa: BLE001 — shipped to the parent
+            out, err = None, e
+        try:
+            conn.send((seq, err, out))
+        except Exception:
+            try:  # the error itself may not pickle; a repr always does
+                conn.send((seq, RuntimeError(repr(err)), None))
+            except Exception:
+                break
+    try:
+        conn.close()
+    except Exception:
+        pass
 
-    In-flight work is bounded to ``num_workers * prefetch_factor``
-    index-batches: the task pump blocks on a semaphore that the consumer
-    releases per delivered batch — real ``prefetch_factor`` backpressure
-    (previously the parameter was accepted and ignored: ``imap`` pumped the
-    whole epoch into the task queue).  Delivery is ALWAYS ordered (``imap``
-    preserves submission order); ``ordered=False`` is rejected loudly —
-    completion-order delivery needs the thread pool.  Arena slabs cannot
-    cross the process boundary; batches arrive as fresh (pickled) dicts,
-    but workers still use the batched read + vectorized transform inside
-    the child.
+
+class _PipeWorker:
+    """One child process on a private duplex pipe.  No queue or lock is
+    shared between workers, so a SIGKILL'd child poisons only its own
+    channel — which the parent reads as EOF, not as a wedged lock."""
+
+    __slots__ = ("proc", "conn", "pid", "inflight", "dead")
+
+    def __init__(self, proc, conn):
+        self.proc = proc
+        self.conn = conn
+        self.pid = proc.pid
+        self.inflight = {}      # seq -> idx array, sent but unanswered
+        self.dead = False
+
+
+class ProcessWorkerPool:
+    """Process-based fallback (GIL-heavy transforms).  Heavier per-batch
+    overhead than the thread pool, same interface.
+
+    One consumer-driven pump serves every mode: tasks are submitted at
+    most ``num_workers * prefetch_factor`` sequences ahead of the
+    consumer (real ``prefetch_factor`` backpressure) and joined strictly
+    in sequence, so delivery is ALWAYS ordered — ``ordered=False`` is
+    rejected loudly; completion-order delivery needs the thread pool.
+    Arena slabs cannot cross the process boundary; batches arrive as
+    fresh (pickled) dicts, but workers still use the batched read +
+    vectorized transform inside the child.
+
+    Transport is per-worker ``Process`` + private duplex ``Pipe`` rather
+    than ``multiprocessing.Pool`` — that choice IS the crash containment
+    (DESIGN.md §10).  A shared-queue pool cannot survive SIGKILL: idle
+    workers block in ``SimpleQueue.get`` *while holding* the queue's read
+    lock, so killing one wedges every other worker (and the pool's own
+    ``terminate``) on a lock no process will ever release.  With
+    point-to-point pipes a corpse only breaks its own channel; the parent
+    sees EOF, drains any results the worker managed to ship, respawns a
+    replacement, and resubmits exactly the dead worker's in-flight
+    sequences — up to ``resubmit_budget`` per task.  A SIGKILL mid-batch
+    costs one resubmit, not the stream.
 
     Dual-lane variant (DESIGN.md §9): with ``slow_lane_workers > 0`` and a
-    ``cost_tracker`` the pump switches to consumer-driven ``apply_async``
-    — predicted-slow batches are submitted as soon as they enter the
-    extended (``+ slow_lane_lookahead``) window, fast batches only inside
-    the base window, and the consumer joins results strictly in sequence.
-    Same early-start effect as the thread pool's slow lane; the lane
-    *width* is shared pool capacity here (processes are fungible), so the
-    knob buys lookahead rather than dedicated children.
+    ``cost_tracker``, predicted-slow batches are submitted as soon as they
+    enter the extended (``+ slow_lane_lookahead``) window, fast batches
+    only inside the base window.  Same early-start effect as the thread
+    pool's slow lane; the lane *width* is shared pool capacity here
+    (processes are fungible), so the knob buys lookahead rather than
+    dedicated children.
+
+    With a ``fault_policy`` (data/faults.py) the task body runs reads
+    through a pickled policy snapshot and ships its tally back; the parent
+    merges quarantined ids and fault counts into the live log/stats, and
+    ``on_skip`` fires for sequence slots the policy dropped entirely.
     """
 
     def __init__(self, dataset, index_iter, *, num_workers: int,
@@ -451,12 +591,14 @@ class ProcessWorkerPool:
                  ordered: bool = True, fast: bool = True,
                  arena: Optional[SlabArena] = None,
                  cost_tracker=None, slow_lane_workers: int = 0,
-                 slow_lane_lookahead: int = 8):
+                 slow_lane_lookahead: int = 8,
+                 fault_policy=None, on_skip=None,
+                 resubmit_budget: int = 2):
         import multiprocessing as mp
         if not ordered:
             raise ValueError(
-                "ProcessWorkerPool delivery is always ordered (imap "
-                "submission order); ordered=False is unsupported with "
+                "ProcessWorkerPool delivery is always ordered (strict "
+                "in-sequence join); ordered=False is unsupported with "
                 "use_processes=True — use the thread pool for "
                 "completion-order delivery")
         self.dataset = dataset
@@ -469,64 +611,153 @@ class ProcessWorkerPool:
         self.slow_lane_workers = max(0, slow_lane_workers) \
             if cost_tracker is not None else 0
         self.slow_lane_lookahead = max(0, slow_lane_lookahead)
-        self._inflight = threading.BoundedSemaphore(
-            self.num_workers * self.prefetch_factor)
-        self._submitted: deque = deque()
+        self.fault_policy = fault_policy
+        self.on_skip = on_skip
+        self.resubmit_budget = max(0, resubmit_budget)
+        self.resubmits = 0
         self._stopped = False
-        self._pool = mp.get_context("fork").Pool(self.num_workers)
+        self._ctx = mp.get_context("fork")
+        self._pending: dict = {}    # seq -> [idx, resubmits]
+        self._results: dict = {}    # seq -> (err, payload)
+        self._workers = [self._spawn_worker()
+                         for _ in range(self.num_workers)]
+        self._worker_pids = {w.pid for w in self._workers}
+        self._dead_pids: set = set()
 
     def request_drain(self) -> None:
         self._indices.drain()
 
-    def _bounded_indices(self):
-        """Yield index-batches to the pool's task pump, at most
-        num_workers * prefetch_factor ahead of the consumer."""
-        for idx in self._indices:
-            self._inflight.acquire()
-            if self._stopped:   # shutdown() released us just to unblock
-                return
-            self._submitted.append(idx)
-            yield idx
+    # ---- crash containment -------------------------------------------------
+    def _spawn_worker(self) -> _PipeWorker:
+        parent, child = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=_pw_worker_main,
+            args=(child, self.dataset, self.fast,
+                  self.cost_tracker is not None),
+            daemon=True)
+        proc.start()
+        child.close()   # the child's fork copy is the only live end now
+        return _PipeWorker(proc, parent)
 
-    def _iter_imap(self):
-        import functools
-        timed = self.cost_tracker is not None
-        fn = functools.partial(
-            _mp_get_batch_timed if timed else _mp_get_batch,
-            self.dataset, self.fast)
-        for out in self._pool.imap(fn, self._bounded_indices(),
-                                   chunksize=1):
+    def _send_task(self, seq: int, idx) -> None:
+        """Assign to the least-loaded live worker.  A broken pipe at send
+        time is a death like any other: contain it and retry on the
+        replacement."""
+        while True:
+            w = min((w for w in self._workers if not w.dead),
+                    key=lambda w: len(w.inflight))
+            w.inflight[seq] = idx
             try:
-                self._inflight.release()
-            except ValueError:      # pragma: no cover - defensive
-                pass
-            if timed:
-                batch, dt = out
-                self.cost_tracker.record(self._submitted.popleft(), dt)
-            else:
-                batch = out
-            nbytes = batch_nbytes(batch)
-            self.monitor.reserve(nbytes)
-            self.monitor.release(nbytes)
-            yield batch
+                w.conn.send((seq, idx, self.fault_policy))
+                return
+            except (OSError, ValueError):
+                del w.inflight[seq]     # never sent — not a resubmit
+                self._on_death(w)
 
-    def _iter_lane(self):
-        """Consumer-driven dual-lane pump: slow batches submitted early
-        (extended window), fast batches inside the base window, delivery
-        joined strictly in sequence — ordered semantics preserved."""
-        import functools
-        fn = functools.partial(_mp_get_batch_timed, self.dataset, self.fast)
+    def _on_msg(self, w: _PipeWorker, msg) -> None:
+        seq, err, out = msg
+        w.inflight.pop(seq, None)
+        self._results[seq] = (err, out)
+
+    def _on_death(self, w: _PipeWorker) -> None:
+        """A worker died (pipe EOF / broken pipe).  Drain any results it
+        shipped before dying, respawn a replacement, and resubmit exactly
+        its lost in-flight sequences — each up to ``resubmit_budget``."""
+        if w.dead:
+            return
+        w.dead = True
+        self._dead_pids.add(w.pid)
+        self._worker_pids.discard(w.pid)
+        try:
+            while w.conn.poll(0):
+                self._on_msg(w, w.conn.recv())
+        except (EOFError, OSError):
+            pass
+        try:
+            w.conn.close()
+        except Exception:
+            pass
+        w.proc.join(timeout=0.1)
+        lost = dict(w.inflight)
+        w.inflight.clear()
+        if self._stopped:
+            return
+        replacement = self._spawn_worker()
+        self._workers[self._workers.index(w)] = replacement
+        self._worker_pids.add(replacement.pid)
+        for seq, idx in sorted(lost.items()):
+            entry = self._pending.get(seq)
+            if entry is None:
+                continue
+            if entry[1] >= self.resubmit_budget:
+                raise RuntimeError(
+                    f"process-pool worker died (pid {w.pid}) and an "
+                    f"in-flight batch exhausted its resubmit budget "
+                    f"({self.resubmit_budget})")
+            entry[1] += 1
+            self.resubmits += 1
+            if self.fault_policy is not None:
+                self.fault_policy.stats.note_resubmit()
+            self._send_task(seq, idx)
+
+    def _poll(self, timeout: float) -> None:
+        """One multiplexed wait over every live worker pipe; EOF on a
+        pipe is a worker death handled inline."""
+        from multiprocessing import connection as mpc
+        live = {w.conn: w for w in self._workers if not w.dead}
+        if not live:
+            return
+        for conn in mpc.wait(list(live), timeout):
+            w = live[conn]
+            try:
+                self._on_msg(w, conn.recv())
+            except (EOFError, OSError):
+                self._on_death(w)
+
+    def _merge_report(self, report) -> None:
+        """Fold a child task's fault tally into the parent's live state."""
+        pol = self.fault_policy
+        if not report or pol is None:
+            return
+        newly = []
+        for i, reason in report.get("quarantined", ()):
+            if pol.quarantine.add(int(i), reason):
+                newly.append(int(i))
+        if newly and pol.on_quarantine is not None:
+            pol.on_quarantine(newly)
+        pol.stats.merge_report(report)
+
+    def _join(self, seq: int):
+        """Block until the head-of-sequence result arrives, polling the
+        worker pipes — a pipe EOF mid-wait is a death and is contained
+        inline (respawn + resubmit).  ``_POOL_STOPPED`` = shut down.
+        Shipped exceptions re-raise here, in sequence order."""
+        while True:
+            if seq in self._results:
+                err, out = self._results.pop(seq)
+                if err is not None:
+                    raise err
+                return out
+            if self._stopped:
+                return _POOL_STOPPED
+            self._poll(0.05)
+
+    # ---- the pump ----------------------------------------------------------
+    def _iter_pump(self):
+        pol = self.fault_policy
+        timed = self.cost_tracker is not None
         cap = self.num_workers * self.prefetch_factor
-        look = cap + self.slow_lane_lookahead
-        staged: deque = deque()       # fast (seq, idx) beyond the base cap
-        pending: dict = {}            # seq -> (AsyncResult, idx)
+        lane = self.slow_lane_workers > 0
+        look = cap + (self.slow_lane_lookahead if lane else 0)
+        staged: deque = deque()   # (seq, idx) parked outside the base cap
+        pending = self._pending   # seq -> [idx, resubmits]
         seq_in = 0
         next_out = 0
         exhausted = False
         it = iter(self._indices)
         while not self._stopped:
-            # pull ahead through the extended window, launching slow
-            # batches immediately and parking fast ones
+            # pull ahead through the window, launching predicted-slow
+            # batches immediately (extended window) and parking fast ones
             while not exhausted and seq_in - next_out < look:
                 try:
                     idx = next(it)
@@ -534,20 +765,36 @@ class ProcessWorkerPool:
                     exhausted = True
                     break
                 s, seq_in = seq_in, seq_in + 1
-                if self.cost_tracker.is_slow(idx):
+                if lane and self.cost_tracker.is_slow(idx):
                     self.cost_tracker.note_slow_batch()
-                    pending[s] = (self._pool.apply_async(fn, (idx,)), idx)
+                    pending[s] = [idx, 0]
+                    self._send_task(s, idx)
                 else:
                     staged.append((s, idx))
             while staged and staged[0][0] - next_out < cap:
                 s, idx = staged.popleft()
-                pending[s] = (self._pool.apply_async(fn, (idx,)), idx)
+                pending[s] = [idx, 0]
+                self._send_task(s, idx)
             if next_out not in pending:     # everything pulled is delivered
                 return
-            res, idx = pending.pop(next_out)
-            batch, dt = res.get()
-            self.cost_tracker.record(idx, dt)
+            out = self._join(next_out)
+            if out is _POOL_STOPPED:
+                return
+            idx_done = pending.pop(next_out)[0]
             next_out += 1
+            if pol is not None:
+                batch, dt, report = out
+                self._merge_report(report)
+            elif timed:
+                batch, dt = out
+            else:
+                batch, dt = out, None
+            if timed and batch is not None:
+                _record_cost(self.cost_tracker, pol, idx_done, dt)
+            if batch is None:               # policy dropped the batch
+                if self.on_skip is not None:
+                    self.on_skip()
+                continue
             nbytes = batch_nbytes(batch)
             self.monitor.reserve(nbytes)
             self.monitor.release(nbytes)
@@ -555,21 +802,31 @@ class ProcessWorkerPool:
 
     def __iter__(self):
         try:
-            if self.slow_lane_workers > 0:
-                yield from self._iter_lane()
-            else:
-                yield from self._iter_imap()
+            yield from self._iter_pump()
         finally:
             self.shutdown()
 
     def shutdown(self):
-        # Pool.terminate() joins the task-pump thread, which may be parked
-        # in _bounded_indices' semaphore acquire if the consumer quit early
-        # — unblock it first or terminate() never returns.
+        # Point-to-point pipes mean no shared queue lock a corpse could
+        # hold: send each live worker the sentinel, give the set a short
+        # grace to finish the batch in hand, then kill stragglers.  This
+        # never blocks on a dead worker (mp.Pool.terminate does — its
+        # wind-down acquires the task queue's read lock, which a
+        # SIGKILL'd idle worker takes to the grave).
         self._stopped = True
-        while True:
+        for w in self._workers:
+            if not w.dead:
+                try:
+                    w.conn.send(None)
+                except Exception:
+                    pass
+        deadline = time.monotonic() + 1.0
+        for w in self._workers:
+            w.proc.join(timeout=max(0.0, deadline - time.monotonic()))
+            if w.proc.is_alive():
+                w.proc.kill()
+                w.proc.join(timeout=1.0)
             try:
-                self._inflight.release()
-            except ValueError:          # back at the bound: pump is awake
-                break
-        self._pool.terminate()
+                w.conn.close()
+            except Exception:
+                pass

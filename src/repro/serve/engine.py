@@ -218,12 +218,24 @@ class BatchingFrontend:
     def __init__(self, engine: ServeEngine, *, max_wait_s: float = 0.01,
                  mix_monitor: Optional[BatchMixMonitor] = None,
                  agent=None, locality_controller=None,
-                 slow_lane: bool = False, slow_threshold: float = 4.0):
+                 slow_lane: bool = False, slow_threshold: float = 4.0,
+                 feature_loader=None, fault_rate_trigger: float = 0.0,
+                 on_fault=None):
         from repro.data.costs import KeyedCostTracker
         self.engine = engine
         self.max_wait_s = max_wait_s
         self.mix_monitor = mix_monitor
         self.agent = agent
+        # fault plane (DESIGN.md §10): poll the feature loader's
+        # io_counters every ~16 served batches; edge-triggered on_fault
+        # callback ("fault-drift" entering an excursion, "fault-heal"
+        # leaving) — typical hookup is agent.notify_drift or a host-local
+        # tuner.force_retune, exactly like the mix monitor
+        self.feature_loader = feature_loader
+        self.fault_rate_trigger = float(fault_rate_trigger)
+        self.on_fault = on_fault
+        self._faulted = False
+        self.fault_events = 0
         # the online locality loop's counter-driven side (DESIGN.md §6):
         # a repro.tuning.AdaptiveLocalityController built over the feature
         # loader; stepped once per served batch inside the same guarded
@@ -329,6 +341,20 @@ class BatchingFrontend:
                 continue
             self._serve_group(plen, max_new, group, t_form, lane_slow=True)
 
+    def _poll_faults(self) -> None:
+        """Edge-triggered fault watch on the feature loader (DESIGN.md
+        §10): fires ``on_fault(reason, io)`` once entering an excursion
+        and once on heal, never continuously."""
+        io = self.feature_loader.io_counters() or {}
+        faulted = (io.get("fault_rate", 0.0) > self.fault_rate_trigger
+                   or io.get("degraded", 0.0) >= 1.0)
+        if faulted == self._faulted:
+            return
+        self._faulted = faulted
+        self.fault_events += 1
+        if self.on_fault is not None:
+            self.on_fault("fault-drift" if faulted else "fault-heal", io)
+
     def _serve_group(self, plen: int, max_new: int, group: List[Request],
                      t_form: float, *, lane_slow: bool) -> None:
         prompts = np.stack([r.prompt for r in group])
@@ -352,6 +378,10 @@ class BatchingFrontend:
                 self.mix_monitor.record((plen, max_new))
             if self.locality_controller is not None:
                 self.locality_controller.step()
+            if (self.feature_loader is not None
+                    and self.fault_rate_trigger > 0.0
+                    and self.batches_served % 16 == 0):
+                self._poll_faults()
         except Exception:  # noqa: BLE001 - observe/retune must not
             import traceback  # kill the serving thread
             traceback.print_exc()

@@ -82,6 +82,10 @@ class TrainerConfig:
     # loader's tracked per-item costs, ~1 uniform; see DESIGN.md §9).
     # 0 disables; only armed when autotune_slow_lanes is set.
     retune_tail_ratio_trigger: float = 0.0
+    # retune trigger on the loader's windowed fault rate (DESIGN.md §10):
+    # fires a re-search when the storage browns out and once more when
+    # degraded mode heals.  0 disables.
+    retune_fault_rate_trigger: float = 0.0
     # the online locality loop (DESIGN.md §6): when True, an
     # AdaptiveLocalityController watches the live coalesced-run-length
     # counters and shrinks locality_chunk when the storage stops
@@ -262,7 +266,8 @@ class Trainer:
                 locality_chunks=(tuple(chunks) if chunks else None),
                 cache_budgets=(tuple(budgets) if budgets else None),
                 slow_lanes=(tuple(lanes) if lanes else None),
-                tail_ratio_trigger=self.cfg.retune_tail_ratio_trigger))
+                tail_ratio_trigger=self.cfg.retune_tail_ratio_trigger,
+                fault_rate_trigger=self.cfg.retune_fault_rate_trigger))
 
     def _make_locality_controller(self):
         """The counter-driven side of the online locality loop: applies

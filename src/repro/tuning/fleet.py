@@ -163,6 +163,11 @@ class FleetConfig:
     # helps when every host carries it.  Scored by the fleet max at a warm
     # epoch; None keeps re-consensus off the axis.
     cache_budgets: Optional[Tuple[int, ...]] = None
+    # fault-plane consensus trigger (DESIGN.md §10): re-consensus fires
+    # when any alive host's reported windowed ``fault_rate`` crosses this
+    # (edge-triggered: once per excursion, plus once when the last
+    # degraded host heals).  0 disables.
+    fault_rate_trigger: float = 0.0
     # elastic re-mesh bookkeeping (plan_remesh)
     devices_per_host: int = 1
     model_axis: int = 1
@@ -862,6 +867,9 @@ class FleetCoordinator:
         # host — a replayed or reordered report must not rewind bookkeeping
         self._last_steps: Dict[str, int] = {}
         self.stale_reports = 0
+        # fault-plane edge state (DESIGN.md §10): True while the fleet is
+        # inside a fault excursion (rate over trigger or a host degraded)
+        self._fleet_faulted = False
         # HA plumbing (set by CoordinatorServer / restore)
         self._server: Optional["CoordinatorServer"] = None
         self._store: Optional[SnapshotStore] = None
@@ -1006,6 +1014,37 @@ class FleetCoordinator:
     def drifted(self) -> bool:
         return self.fleet_stall_ratio() > self.cfg.stall_fraction
 
+    def fleet_fault_rate(self) -> float:
+        """Worst windowed fault rate over alive hosts (DESIGN.md §10).
+        A lockstep fleet runs at the max host time, so one browning-out
+        host is a fleet problem — max, not mean."""
+        alive = set(self.registry.alive_hosts())
+        rates = [float((r.io or {}).get("fault_rate", 0.0))
+                 for h, r in self.reports.items() if h in alive]
+        return max(rates) if rates else 0.0
+
+    def fleet_degraded(self) -> bool:
+        alive = set(self.registry.alive_hosts())
+        return any(float((r.io or {}).get("degraded", 0.0)) >= 1.0
+                   for h, r in self.reports.items() if h in alive)
+
+    def _fault_reason(self) -> Optional[str]:
+        """Edge-triggered fault consensus: fire once entering an
+        excursion (fault-drift) and once leaving it (fault-heal), never
+        continuously — a browning-out backend must not make the control
+        plane retune in a loop."""
+        if self.cfg.fault_rate_trigger <= 0.0:
+            return None
+        faulted = (self.fleet_fault_rate() > self.cfg.fault_rate_trigger
+                   or self.fleet_degraded())
+        if faulted and not self._fleet_faulted:
+            self._fleet_faulted = True
+            return "fault-drift"
+        if not faulted and self._fleet_faulted:
+            self._fleet_faulted = False
+            return "fault-heal"
+        return None
+
     def poll(self) -> List[Dict[str, Any]]:
         """One decide step: finish any interrupted reshard, handle deaths,
         then drift/straggler consensus.  Returns the actions taken (also
@@ -1067,7 +1106,7 @@ class FleetCoordinator:
             return f"straggler-divergence:{','.join(stragglers)}"
         if self.drifted():
             return "goodput-drift"
-        return None
+        return self._fault_reason()
 
     # ---- act: uniform re-consensus -----------------------------------------
     def _search_config(self) -> DPTConfig:
@@ -1403,7 +1442,8 @@ class FleetCoordinator:
                          "last_consensus_step": self._last_consensus_step,
                          "backoff": self._backoff,
                          "forced_reason": self._forced_reason,
-                         "stale_reports": self.stale_reports},
+                         "stale_reports": self.stale_reports,
+                         "fleet_faulted": self._fleet_faulted},
             "pushed": self._pushed,
             "pending_reshard": self._pending_reshard})
 
@@ -1436,6 +1476,7 @@ class FleetCoordinator:
         c._backoff = int(counters.get("backoff", 1))
         c._forced_reason = counters.get("forced_reason")
         c.stale_reports = int(counters.get("stale_reports", 0))
+        c._fleet_faulted = bool(counters.get("fleet_faulted", False))
         c._pushed = state.get("pushed")
         c._pending_reshard = state.get("pending_reshard")
         return c

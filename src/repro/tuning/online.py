@@ -88,6 +88,13 @@ class OnlineTunerConfig:
     # only armed when ``slow_lanes`` is set — the tail signal exists to
     # resolve the lane axis, stalls still fire the goodput trigger.
     tail_ratio_trigger: float = 0.0
+    # retune trigger on the fault plane (DESIGN.md §10): io_counters'
+    # windowed ``fault_rate``.  0 disables.  Fires on the way IN (the
+    # storage is browning out — a shallower config wastes less work on
+    # reads that will be retried) and once on the way OUT (degraded mode
+    # healed — re-search for the healthy optimum the degraded window
+    # may have walked away from).
+    fault_rate_trigger: float = 0.0
 
 
 class GoodputMonitor:
@@ -105,6 +112,10 @@ class GoodputMonitor:
         # latest per-item cost tail ratio (p99/median) pushed from the
         # loader's cost tracker via note_tail(); 0 = no signal yet
         self.tail_ratio = 0.0
+        # fault-plane signal (DESIGN.md §10), pushed via note_faults()
+        self.fault_rate = 0.0
+        self.degraded = False
+        self.fault_healed = False   # one-shot: degraded -> healthy edge
 
     def observe(self, *, data_s: float, step_s: float) -> None:
         self.steps += 1
@@ -114,6 +125,16 @@ class GoodputMonitor:
     def note_tail(self, ratio: float) -> None:
         """Push the loader's per-item cost tail ratio (DESIGN.md §9)."""
         self.tail_ratio = max(0.0, ratio)
+
+    def note_faults(self, rate: float, degraded: bool) -> None:
+        """Push the loader's windowed fault rate + degraded flag
+        (DESIGN.md §10).  The degraded→healthy transition latches
+        ``fault_healed`` so the heal fires one retune even though the
+        rate is back under the trigger by then."""
+        if self.degraded and not degraded:
+            self.fault_healed = True
+        self.fault_rate = max(0.0, rate)
+        self.degraded = bool(degraded)
 
     @property
     def full(self) -> bool:
@@ -141,6 +162,7 @@ class GoodputMonitor:
     def reset(self) -> None:
         self._data_s.clear()
         self._compute_s.clear()
+        self.fault_healed = False
 
 
 class RetunePolicy:
@@ -158,6 +180,12 @@ class RetunePolicy:
 
     def drifted(self, monitor: GoodputMonitor) -> bool:
         if monitor.stall_ratio > self.cfg.stall_fraction:
+            return True
+        # fault drift (DESIGN.md §10): the storage is failing hot (rate
+        # over trigger) or just healed from degraded mode (one-shot edge)
+        if self.cfg.fault_rate_trigger > 0.0 and (
+                monitor.fault_rate > self.cfg.fault_rate_trigger
+                or monitor.fault_healed):
             return True
         # tail drift: a heavy per-item cost tail is drift even before it
         # shows as a mean stall — only armed when the lane axis exists
@@ -453,19 +481,33 @@ class OnlineTuner:
         triggered a retune + hot-swap, else None.
         """
         self.monitor.observe(data_s=data_s, step_s=step_s)
-        # feed the per-item cost tail signal once per window (io_counters
-        # takes the tracker lock; no need to pay it every step)
-        if self.cfg.slow_lanes and self.cfg.tail_ratio_trigger > 0.0 \
+        # feed the loader-side signals once per window (io_counters takes
+        # locks; no need to pay them every step)
+        want_tail = self.cfg.slow_lanes and self.cfg.tail_ratio_trigger > 0.0
+        want_fault = self.cfg.fault_rate_trigger > 0.0
+        if (want_tail or want_fault) \
                 and self.monitor.steps % self.cfg.window == 0:
             io = self.loader.io_counters()
-            if io and "sample_cost_tail_ratio" in io:
+            if want_tail and io and "sample_cost_tail_ratio" in io:
                 self.monitor.note_tail(io["sample_cost_tail_ratio"])
+            if want_fault:
+                # absent keys mean a quiet fault plane — feed zeros so a
+                # healed loader's monitor sees the edge
+                self.monitor.note_faults(
+                    (io or {}).get("fault_rate", 0.0),
+                    bool((io or {}).get("degraded", 0.0)))
         if not self.policy.should_retune(self.monitor):
             return None
-        return self.force_retune(reason="goodput-drift"
-                                 if self.monitor.stall_ratio
-                                 > self.cfg.stall_fraction
-                                 else "cost-tail-drift")
+        if self.monitor.stall_ratio > self.cfg.stall_fraction:
+            reason = "goodput-drift"
+        elif want_fault and self.monitor.fault_healed:
+            reason = "fault-heal"
+        elif want_fault and self.monitor.fault_rate \
+                > self.cfg.fault_rate_trigger:
+            reason = "fault-drift"
+        else:
+            reason = "cost-tail-drift"
+        return self.force_retune(reason=reason)
 
     # ---- bounded re-search + hot swap --------------------------------------
     def force_retune(self, *, reason: str = "forced"

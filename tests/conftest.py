@@ -37,11 +37,14 @@ def flat_indices(batches):
 
 def make_cold_dataset(n, *, latency_s=1e-3, cache_bytes=0, bandwidth=1e9,
                       item_shape=(8, 8, 3), tail_fraction=0.0,
-                      tail_mult=1.0, tail_seed=0, tail_mode="bimodal"):
+                      tail_mult=1.0, tail_seed=0, tail_mode="bimodal",
+                      fault_rate=0.0, fault_seed=0, brownout=None):
     """Seek-bound cold storage: every miss pays a base latency, which is
     what makes coalesced (chunked-order) reads measurably faster.  The
     tail knobs plant deterministic stragglers (DESIGN.md §9): a seeded
-    ``tail_fraction`` of items costs ``tail_mult``x extra on every miss."""
+    ``tail_fraction`` of items costs ``tail_mult``x extra on every miss.
+    The fault knobs (DESIGN.md §10) inject seeded transient read errors
+    and a timed brownout window on the same splitmix64 hashing."""
     from repro.data import ArrayStorage, Dataset, LatencyStorage
     from repro.data.dataset import image_transform
     rng = np.random.default_rng(0)
@@ -51,7 +54,8 @@ def make_cold_dataset(n, *, latency_s=1e-3, cache_bytes=0, bandwidth=1e9,
                              bandwidth=bandwidth, cache_bytes=cache_bytes,
                              tail_fraction=tail_fraction,
                              tail_mult=tail_mult, tail_seed=tail_seed,
-                             tail_mode=tail_mode)
+                             tail_mode=tail_mode, fault_rate=fault_rate,
+                             fault_seed=fault_seed, brownout=brownout)
     return Dataset(storage, transform=image_transform)
 
 

@@ -68,3 +68,74 @@ def test_atomicity_no_partial_dirs(tmp_path):
     ck.save(3, _state(), block=True)
     entries = os.listdir(tmp_path)
     assert all(not e.endswith(".tmp") for e in entries)
+
+
+# ---- loader aux: checkpointing mid-quarantine (DESIGN.md §10) --------------
+
+def _faulty_loader(n, gb, bad):
+    from repro.data import (DataLoader, Dataset, FaultyStorage, LoaderParams,
+                            StorageFaultSpec)
+    from repro.data.storage import ArrayStorage
+    items = [np.full((4,), i, np.int32) for i in range(n)]
+    ds = Dataset(FaultyStorage(ArrayStorage(items),
+                               StorageFaultSpec(corrupt_items=bad)),
+                 transform=lambda a: {"x": a})
+    # prefetch window of one: the producer cannot run far enough ahead of
+    # the checkpoint to quarantine ids the consumed position hasn't seen
+    return DataLoader(ds, gb, params=LoaderParams(
+        num_workers=1, prefetch_factor=1, on_bad_sample="skip",
+        retry_attempts=2, retry_backoff_s=1e-3), shuffle=False, seed=0)
+
+
+def test_loader_checkpoint_mid_quarantine(tmp_path):
+    """A checkpoint taken mid-epoch, after some corrupt samples were
+    quarantined, restores the quarantine through the loader aux: the
+    resumed stream keeps skipping the same ids without re-probing them,
+    and combined coverage is exact (epoch minus quarantine, no dups)."""
+    from conftest import flat_indices
+    from repro.data.sampler import SamplerState
+
+    n, gb, bad = 64, 8, (3, 17, 58)
+    bpe = n // gb
+    dl = _faulty_loader(n, gb, bad)
+    s = dl.stream(to_device=False)
+    try:
+        first = [next(s) for _ in range(bpe // 2)]   # sees 3 and 17, not 58
+        saved = dl.state_dict()
+        # checkpoint the CONSUMED position, like the trainer does (the
+        # producer prefetches ahead of the consumer)
+        saved["sampler"] = SamplerState.from_absolute(s.position, bpe) \
+            .to_dict()
+        ck = Checkpointer(str(tmp_path))
+        ck.save(s.position, _state(), aux={"loader": saved}, block=True)
+    finally:
+        s.close()
+    assert sorted(dl.quarantine.ids().tolist()) == [3, 17]
+
+    _, aux = Checkpointer(str(tmp_path)).restore(_state(seed=1))
+    dl2 = _faulty_loader(n, gb, bad)
+    dl2.load_state_dict(aux["loader"])
+    assert sorted(dl2.quarantine.ids().tolist()) == [3, 17]
+    before = dl2.dataset.storage.corrupt_raised
+    s2 = dl2.stream(to_device=False)
+    try:
+        rest = [next(s2) for _ in range(bpe - bpe // 2)]
+    finally:
+        s2.close()
+    # restored ids were screened up front, never re-read; 58 is fresh
+    assert flat_indices(first + rest) == \
+        [i for i in range(n) if i not in bad]
+    assert sorted(dl2.quarantine.ids().tolist()) == sorted(bad)
+    assert dl2.dataset.storage.corrupt_raised == before + 1
+
+
+def test_loader_checkpoint_pre_fault_loads_clean(tmp_path):
+    """Checkpoints written before the fault plane existed have no
+    ``quarantine`` key — they load with an empty log, not a KeyError."""
+    n, gb = 64, 8
+    dl = _faulty_loader(n, gb, (3,))
+    saved = dl.state_dict()
+    saved.pop("quarantine")
+    dl2 = _faulty_loader(n, gb, (3,))
+    dl2.load_state_dict(saved)
+    assert len(dl2.quarantine) == 0

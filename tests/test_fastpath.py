@@ -14,6 +14,7 @@ from repro.data import (ArenaBatch, ArrayStorage, DataLoader, Dataset,
                         FileStorage, LatencyStorage, LoaderParams, SlabArena,
                         ShardedSampler, cifar10_profile, coalesce_runs,
                         coco_profile, synthetic_image_dataset, token_dataset)
+from repro.data.arena import maybe_release
 from repro.data.dataset import image_transform
 from repro.data.prefetcher import DevicePrefetcher
 from repro.data.worker_pool import ProcessWorkerPool, ThreadWorkerPool
@@ -358,7 +359,10 @@ def test_ordered_pool_raises_promptly_when_one_worker_errors():
         list(pool)
 
 
-def test_zero_copy_pool_recovers_slot_when_worker_errors():
+def test_zero_copy_pool_retries_transient_and_recovers_slot():
+    """A one-shot transient IO error no longer escapes the worker: the
+    retry loop (DESIGN.md §10) eats it and the epoch completes whole.
+    The errored attempt's arena slot is still recovered."""
     ds = synthetic_image_dataset(256, 8, seed=0)
     calls = {"n": 0}
     orig = ds.storage.read_batch
@@ -373,7 +377,30 @@ def test_zero_copy_pool_recovers_slot_when_worker_errors():
     dl = DataLoader(ds, 8, params=FAST.replace(num_workers=2), shuffle=False,
                     seed=0)
     pool, _ = dl._pool(dl.sampler.epoch_iter(0), for_stream=True)
-    with pytest.raises(OSError, match="transient"):
+    got = list(pool)
+    assert len(got) == 256 // 8        # transient fault: nothing lost
+    assert dl.fault_stats.read_retries >= 1
+    assert len(dl.quarantine) == 0
+    for b in got:
+        maybe_release(b, owned_only=False)
+    arena = dl._stream_arena
+    assert arena.in_use == 0           # the errored attempt's slot came back
+
+
+def test_zero_copy_pool_raises_when_storage_stays_down():
+    """A PERSISTENT failure still propagates under the default raise
+    policy once retries exhaust — and the worker's slot comes back."""
+    ds = synthetic_image_dataset(256, 8, seed=0)
+
+    def dead_read_batch(indices):
+        raise OSError("storage down hard")
+
+    ds.storage.read_batch = dead_read_batch
+    dl = DataLoader(ds, 8, params=FAST.replace(
+        num_workers=2, retry_attempts=1, retry_backoff_s=0.0,
+        retry_deadline_s=0.2), shuffle=False, seed=0)
+    pool, _ = dl._pool(dl.sampler.epoch_iter(0), for_stream=True)
+    with pytest.raises(OSError):
         list(pool)
     arena = dl._stream_arena
     assert arena.in_use <= 1           # the errored worker's slot came back

@@ -1,0 +1,349 @@
+"""The fault-tolerant data plane (DESIGN.md §10): storage fault
+injection, retrying reads, sample quarantine, worker-crash recovery and
+brownout degraded mode."""
+import os
+import pickle
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from conftest import flat_indices, make_cold_dataset, make_index_dataset
+from repro.data import (BrownoutError, CorruptSampleError, DataLoader,
+                        Dataset, FaultPolicy, FaultStats, FaultyStorage,
+                        LoaderParams, QuarantineLog, RetryPolicy,
+                        ShardedSampler, StorageFaultSpec, TransientReadError,
+                        quarantine_complement)
+from repro.data.storage import ArrayStorage
+from repro.data.worker_pool import ProcessWorkerPool, ThreadWorkerPool
+
+RETRY_FAST = dict(retry_attempts=3, retry_backoff_s=1e-3,
+                  retry_deadline_s=2.0)
+
+
+def _ident(a):
+    # module-level (picklable) index transform for process-pool tests
+    return {"x": a}
+
+
+def make_faulty_index_dataset(n, spec, *, width=4):
+    items = [np.full((width,), i, np.int32) for i in range(n)]
+    return Dataset(FaultyStorage(ArrayStorage(items), spec),
+                   transform=_ident)
+
+
+# ---- FaultyStorage ----------------------------------------------------------
+
+def test_faulty_storage_deterministic_and_picklable():
+    spec = StorageFaultSpec(transient_rate=0.3, corrupt_items=(5,), seed=7)
+    items = [np.full((4,), i, np.int32) for i in range(32)]
+
+    def failures(storage):
+        seen = []
+        for i in range(32):
+            try:
+                storage.read(i)
+                seen.append("ok")
+            except CorruptSampleError:
+                seen.append("corrupt")
+            except TransientReadError:
+                seen.append("transient")
+        return seen
+
+    a = failures(FaultyStorage(ArrayStorage(items), spec))
+    b = failures(FaultyStorage(ArrayStorage(items), spec))
+    assert a == b                       # pure-hash draws: replayable
+    assert a[5] == "corrupt"
+    assert "transient" in a
+    # a transient clears on retry eventually (attempt-keyed draws)
+    s = FaultyStorage(ArrayStorage(items), spec)
+    bad = next(i for i, kind in enumerate(a) if kind == "transient")
+    got = None
+    for _ in range(64):
+        try:
+            got = s.read(bad)
+            break
+        except TransientReadError:
+            continue
+    assert got is not None and int(got[0]) == bad
+    # picklable (locks remint) with counters preserved
+    s2 = pickle.loads(pickle.dumps(s))
+    assert s2.counters() == s.counters()
+    np.testing.assert_array_equal(s2.read(0), items[0])
+
+
+def test_faulty_storage_brownout_window():
+    spec = StorageFaultSpec(brownout=(2, 4))   # 0-based accesses [2, 4)
+    s = FaultyStorage(ArrayStorage(
+        [np.zeros((2,), np.int32) for _ in range(8)]), spec)
+    s.read(0)                           # access 0: before the window
+    s.read(1)                           # access 1: before the window
+    with pytest.raises(BrownoutError):
+        s.read(2)                       # access 2: inside
+    with pytest.raises(BrownoutError):
+        s.read_batch([3, 4])            # access 3: inside
+    s.read(5)                           # access 4: window passed
+    assert s.brownout_raised == 2
+
+
+def test_retry_policy_backoff_deterministic_and_bounded():
+    r = RetryPolicy(backoff_s=0.01, backoff_mult=2.0, backoff_max_s=0.05,
+                    jitter=0.5, seed=3)
+    a = [r.sleep_s(k, key=9) for k in range(1, 8)]
+    b = [r.sleep_s(k, key=9) for k in range(1, 8)]
+    assert a == b                       # deterministic jitter
+    assert all(0 < s <= 0.05 * 1.25 for s in a)
+    assert a[1] > a[0]                  # exponential before the cap
+
+
+# ---- retries / quarantine through the loader --------------------------------
+
+def test_loader_retries_transients_to_full_coverage():
+    ds = make_cold_dataset(96, latency_s=0.0, fault_rate=0.2, fault_seed=11)
+    dl = DataLoader(ds, 8, params=LoaderParams(num_workers=2, **RETRY_FAST),
+                    shuffle=False, seed=0)
+    got = list(dl.host_batches(epoch=0))
+    assert len(got) == 96 // 8          # transient faults: nothing lost
+    assert ds.storage.faults_injected > 0
+    assert dl.fault_stats.read_retries > 0
+    assert len(dl.quarantine) == 0
+    io = dl.io_counters()
+    assert io["read_retries"] >= 1 and io["quarantined"] == 0
+
+
+def test_corrupt_items_quarantined_under_skip():
+    n, bad = 64, (3, 17, 42)
+    ds = make_faulty_index_dataset(n, StorageFaultSpec(corrupt_items=bad))
+    dl = DataLoader(ds, 8, params=LoaderParams(
+        num_workers=2, on_bad_sample="skip", **RETRY_FAST),
+        shuffle=False, seed=0)
+    got = list(dl.host_batches(epoch=0))
+    assert flat_indices(got) == \
+        quarantine_complement(n, dl.quarantine).tolist()
+    assert sorted(dl.quarantine.ids().tolist()) == sorted(bad)
+    assert all("corrupt" in r for r in dl.quarantine.reasons().values())
+    # quarantined ids exit cost tracking (their EWMA slots reset)
+    slots = dl.cost_tracker._slots(list(bad))
+    assert np.isnan(dl.cost_tracker._ewma[slots]).all()
+    io = dl.io_counters()
+    assert io["quarantined"] == len(bad)
+    # the NEXT epoch never touches them again (screened up front)
+    before = ds.storage.corrupt_raised
+    got2 = list(dl.host_batches(epoch=1))
+    assert flat_indices(got2) == \
+        quarantine_complement(n, dl.quarantine).tolist()
+    assert ds.storage.corrupt_raised == before
+
+
+def test_substitute_completes_batches_deterministically():
+    n, bad = 64, (5, 20)
+    params = LoaderParams(num_workers=2, on_bad_sample="substitute",
+                          **RETRY_FAST)
+
+    def run():
+        ds = make_faulty_index_dataset(
+            n, StorageFaultSpec(corrupt_items=bad))
+        dl = DataLoader(ds, 8, params=params, shuffle=False, seed=0)
+        return [np.asarray(b["x"])[:, 0].tolist()
+                for b in dl.host_batches(epoch=0)], dl
+
+    got, dl = run()
+    got2, _ = run()
+    assert got == got2                  # seeded substitution: replayable
+    flat = [i for b in got for i in b]
+    assert len(flat) == n               # batch sizes preserved
+    assert not set(bad) & set(flat)     # corrupt ids replaced
+    assert set(flat) <= set(range(n))
+    assert sorted(dl.quarantine.ids().tolist()) == sorted(bad)
+
+
+def test_corrupt_raise_mode_propagates():
+    ds = make_faulty_index_dataset(32, StorageFaultSpec(corrupt_items=(9,)))
+    dl = DataLoader(ds, 8, params=LoaderParams(num_workers=2, **RETRY_FAST),
+                    shuffle=False, seed=0)
+    with pytest.raises(CorruptSampleError):
+        list(dl.host_batches(epoch=0))
+    assert 9 in dl.quarantine           # the log still names the culprit
+
+
+def test_poisoned_transform_contained_under_skip():
+    n = 64
+
+    def poison(a):
+        if (a == 7).any():
+            raise ValueError("poisoned sample 7")
+        return {"x": a}
+
+    ds = make_index_dataset(n, transform=poison)
+    dl = DataLoader(ds, 8, params=LoaderParams(
+        num_workers=2, on_bad_sample="skip", **RETRY_FAST),
+        shuffle=False, seed=0)
+    got = list(dl.host_batches(epoch=0))
+    assert flat_indices(got) == [i for i in range(n) if i != 7]
+    assert 7 in dl.quarantine
+    assert "poisoned" in dl.quarantine.reasons()[7]
+    # legacy default (raise) stays pool-fatal for non-IO exceptions
+    ds2 = make_index_dataset(n, transform=poison)
+    dl2 = DataLoader(ds2, 8, params=LoaderParams(num_workers=2),
+                     shuffle=False, seed=0)
+    with pytest.raises(ValueError, match="poisoned"):
+        list(dl2.host_batches(epoch=0))
+
+
+def test_stream_skip_accounting_with_preseeded_quarantine():
+    n, gb = 64, 8
+    ds = make_index_dataset(n)
+    dl = DataLoader(ds, gb, params=LoaderParams(
+        num_workers=2, on_bad_sample="skip", **RETRY_FAST),
+        shuffle=False, seed=0)
+    for i in range(gb):                 # batch 0 entirely quarantined
+        dl.quarantine.add(i, "operator")
+    stream = dl.stream(to_device=False)
+    per_epoch = n // gb
+    it = iter(stream)
+    got = [next(it) for _ in range(per_epoch - 1)]
+    assert flat_indices(got) == list(range(gb, n))
+    # the skipped slot consumed its position: the cursor reached epoch end
+    assert stream.position == per_epoch
+    stream.close()
+
+
+# ---- worker-crash containment ----------------------------------------------
+
+def test_process_pool_survives_sigkill_and_completes_epoch():
+    n, gb = 192, 8
+    ds = make_index_dataset(n, transform=_ident)
+    idx = ShardedSampler(n, gb, shuffle=False, seed=0).epoch_iter(0)
+    pool = ProcessWorkerPool(ds, idx, num_workers=2, prefetch_factor=2,
+                             ordered=True)
+    got = []
+    it = iter(pool)
+    got.append(next(it))
+    os.kill(sorted(pool._worker_pids)[0], signal.SIGKILL)
+    for b in it:
+        got.append(b)
+    assert flat_indices(got) == list(range(n))   # nothing lost, nothing dup
+    assert pool.resubmits >= 1
+
+
+def test_process_pool_shutdown_after_worker_death_does_not_hang():
+    n, gb = 256, 8
+    ds = make_index_dataset(n, transform=_ident)
+    idx = ShardedSampler(n, gb, shuffle=False, seed=0).epoch_iter(0)
+    pool = ProcessWorkerPool(ds, idx, num_workers=2, prefetch_factor=2,
+                             ordered=True)
+    it = iter(pool)
+    next(it)
+    os.kill(sorted(pool._worker_pids)[-1], signal.SIGKILL)
+    t0 = time.perf_counter()
+    pool.shutdown()
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_process_pool_quarantine_merges_to_parent():
+    n, bad = 96, (10, 33)
+    ds = make_faulty_index_dataset(n, StorageFaultSpec(corrupt_items=bad))
+    dl = DataLoader(ds, 8, params=LoaderParams(
+        num_workers=2, use_processes=True, on_bad_sample="skip",
+        **RETRY_FAST), shuffle=False, seed=0)
+    got = list(dl.host_batches(epoch=0))
+    assert flat_indices(got) == [i for i in range(n) if i not in bad]
+    # children shipped their tallies back: the PARENT log/stats moved
+    assert sorted(dl.quarantine.ids().tolist()) == sorted(bad)
+    assert dl.fault_stats.read_faults > 0
+    io = dl.io_counters()
+    assert io["quarantined"] == len(bad)
+
+
+# ---- degraded mode ----------------------------------------------------------
+
+def test_fault_stats_degraded_hysteresis():
+    flips = []
+    fs = FaultStats(degraded_enter=0.5, on_degraded=flips.append)
+    for _ in range(8):
+        fs.note_fault()
+    assert fs.degraded and flips == [True]
+    assert fs.degraded_enters == 1
+    # exit needs the rate back under a quarter of the enter threshold
+    for _ in range(FaultStats.WINDOW):
+        fs.note_ok()
+    assert not fs.degraded and flips == [True, False]
+    assert fs.fault_rate() == 0.0
+
+
+def test_brownout_degrades_and_heals_through_loader():
+    n, gb = 1024, 8
+    ds = make_cold_dataset(n, latency_s=0.0, brownout=(3, 12))
+    dl = DataLoader(ds, gb, params=LoaderParams(
+        num_workers=2, cache_budget_bytes=1 << 16,
+        degraded_fault_rate=0.3, **RETRY_FAST), shuffle=False, seed=0)
+    got = list(dl.host_batches(epoch=0))
+    assert len(got) == n // gb          # brownout ridden out, nothing lost
+    assert dl.fault_stats.degraded_enters >= 1
+    assert not dl.fault_stats.degraded  # healed by epoch end
+    assert dl.quarantine is not None and len(dl.quarantine) == 0
+    tier = dl._cache_tier
+    assert tier is not None and tier.read_only is False
+
+
+# ---- checkpointing ----------------------------------------------------------
+
+def test_quarantine_log_state_roundtrip():
+    q = QuarantineLog()
+    q.add(4, "corrupt")
+    q.add(9, "retries-exhausted")
+    q2 = QuarantineLog()
+    q2.load_state_dict(q.state_dict())
+    assert q2.ids().tolist() == [4, 9]
+    assert q2.reasons() == q.reasons()
+    assert 4 in q2 and 5 not in q2
+    q3 = pickle.loads(pickle.dumps(q))
+    assert q3.ids().tolist() == [4, 9]
+
+
+# ---- the retune trigger -----------------------------------------------------
+
+def test_goodput_monitor_fault_trigger_and_heal_oneshot():
+    from repro.tuning.online import (GoodputMonitor, OnlineTunerConfig,
+                                     RetunePolicy)
+    cfg = OnlineTunerConfig(fault_rate_trigger=0.2)
+    pol = RetunePolicy(cfg)
+    mon = GoodputMonitor(window=4)
+    for _ in range(4):
+        mon.observe(data_s=0.0, step_s=1.0)   # zero stall
+    assert not pol.drifted(mon)
+    mon.note_faults(0.5, True)                # excursion
+    assert pol.drifted(mon)
+    mon.note_faults(0.0, False)               # heal: one-shot edge
+    assert mon.fault_healed and pol.drifted(mon)
+    mon.reset()                               # consumed by the retune
+    assert not mon.fault_healed and not pol.drifted(mon)
+    # disabled trigger never fires on faults
+    off = RetunePolicy(OnlineTunerConfig())
+    mon2 = GoodputMonitor(window=4)
+    mon2.note_faults(1.0, True)
+    assert not off.drifted(mon2)
+
+
+def test_fleet_fault_consensus_edges():
+    from repro.tuning.fleet import FleetConfig, FleetCoordinator, HostReport
+
+    def report(host, fault_rate, degraded):
+        return HostReport(
+            host=host, steps=10, consumed=0, position=0, stall_ratio=0.0,
+            steps_per_s=1.0, batch_seconds=[], params=(1, 2),
+            io={"fault_rate": fault_rate, "degraded": degraded},
+            makeup_done=0)
+
+    coord = FleetCoordinator(config=FleetConfig(fault_rate_trigger=0.2))
+    coord.registry.beat("h0")
+    coord.reports["h0"] = report("h0", 0.0, 0.0)
+    assert coord._fault_reason() is None
+    coord.reports["h0"] = report("h0", 0.5, 1.0)
+    assert coord.fleet_fault_rate() == 0.5 and coord.fleet_degraded()
+    assert coord._fault_reason() == "fault-drift"
+    assert coord._fault_reason() is None      # edge, not level
+    coord.reports["h0"] = report("h0", 0.0, 0.0)
+    assert coord._fault_reason() == "fault-heal"
+    assert coord._fault_reason() is None

@@ -632,3 +632,47 @@ def test_dual_lane_survives_reshard_property(lane_w, barrier, seed):
         for s in streams:
             s.close()
     assert flat_indices(delivered) == list(range(n))
+
+
+# --------------------------------------------------------------------------
+# fault dimension (DESIGN.md §10): randomized corrupt sets + transient
+# rates must never cost a non-quarantined sample
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(0, 4),
+       st.sampled_from(["skip", "substitute"]),
+       st.sampled_from((0.0, 0.1)), st.integers(0, 10**6))
+def test_fault_quarantine_coverage_property(bpe, gb_scale, nbad, mode,
+                                            transient, seed):
+    """For ANY randomized fault config (corrupt set, transient rate,
+    bad-sample policy, epoch shape): under ``skip`` the delivered multiset
+    is exactly the epoch minus the quarantined ids; under ``substitute``
+    batch sizes are preserved and no corrupt id is ever delivered.  The
+    quarantine ends up naming exactly the corrupt set — transient faults
+    are retried away, never quarantined."""
+    from repro.data import Dataset, FaultyStorage, StorageFaultSpec
+    from repro.data.storage import ArrayStorage
+
+    gb = 8 * gb_scale
+    n = gb * bpe
+    rng = np.random.default_rng(seed)
+    bad = tuple(sorted(rng.choice(n, size=nbad, replace=False).tolist()))
+    ds = Dataset(
+        FaultyStorage(ArrayStorage(
+            [np.full((4,), i, np.int32) for i in range(n)]),
+            StorageFaultSpec(corrupt_items=bad, transient_rate=transient,
+                             seed=seed % 997)),
+        transform=lambda a: {"x": a})
+    dl = DataLoader(ds, gb, params=LoaderParams(
+        num_workers=2, on_bad_sample=mode, retry_attempts=8,
+        retry_backoff_s=1e-4, retry_deadline_s=5.0),
+        shuffle=True, seed=seed)
+    got = list(dl.host_batches(epoch=0))
+    flat = [int(i) for b in got for i in np.asarray(b["x"])[:, 0]]
+    assert sorted(dl.quarantine.ids().tolist()) == list(bad)
+    if mode == "skip":
+        assert sorted(flat) == [i for i in range(n) if i not in bad]
+    else:
+        assert len(flat) == n            # batch sizes preserved
+        assert not set(bad) & set(flat)  # corrupt ids replaced
+        assert set(flat) <= set(range(n))
