@@ -1,0 +1,302 @@
+"""Elastic batch geometry gate: per-host consensus + death-rescale.
+
+Two scenarios, both on REAL machinery (thread worker pools, live
+hot-swappable streams, the fleet control plane), recorded in
+``BENCH_elastic.json`` at the repo root (CI uploads it as an artifact):
+
+* **per-host vs uniform goodput** — a 2x-heterogeneous two-host fleet
+  (host1's sleep-based storage is 2x slower per sample) is tuned twice
+  from identical starts: once with the classic uniform consensus (one
+  fleet-wide cell, even batch split) and once with
+  ``FleetConfig.consensus="per_host"`` (each host adopts its own DPT
+  optimum and the batch partition is re-apportioned to the measured
+  per-host rates, so the fast host takes the larger contiguous
+  host-major slice).  A lockstep fleet runs at the max host time, so
+  moving work onto the fast host must raise fleet goodput: the gate is
+  **per-host >= 1.3x uniform** (hard-fail floor overridable via
+  ``ELASTIC_GATE_MIN`` for noisy shared CI runners; the honest 1.3 gate
+  is what the JSON records).  The re-apportioned epoch must still cover
+  every index exactly once — asserted over the full multiset,
+  unconditionally.
+
+* **death rescale** — a 4-host fleet at global batch 12 loses a host to
+  heartbeat timeout.  ``plan_remesh`` keeps the per-replica batch (12/4
+  = 3) and the reshard latches the planned global batch 9 at the next
+  epoch boundary no producer has crossed (DESIGN.md §11).  Asserted
+  unconditionally: the event log carries the plan + latch epoch, every
+  survivor's live loader reports ``global_batch == 9`` (local 3) after
+  the latch, and every epoch through the transition covers each index
+  exactly once — the pre-latch epochs at the old geometry (with the
+  corpse's unconsumed slices redistributed as makeup) and the first
+  epoch at the new geometry.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.evaluators import LoaderEvaluator
+from repro.data import DataLoader, Dataset, LoaderParams
+from repro.data.loader import TransferStats
+from repro.data.storage import ArrayStorage, LatencyStorage
+from repro.tuning import FleetConfig, FleetCoordinator, HostAgent
+
+TITLE = "Elastic geometry: per-host consensus + death rescale"
+PAPER_REF = "beyond paper (elastic batch geometry, DESIGN.md §11)"
+GATE_RATIO = 1.3                    # per-host goodput vs uniform consensus
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_elastic.json")
+
+GLOBAL_BATCH = 12
+BASE_LATENCY_S = 4e-3
+HET_SCALE = 2.0                     # host1's per-sample latency multiplier
+COMPUTE_S = 1e-3                    # synthetic lockstep model step
+
+
+def _search_cfg(quick: bool) -> Dict:
+    return dict(num_cpu_cores=4, num_devices=1, max_prefetch=2,
+                retune_budget_batches=4 if quick else 6)
+
+
+def _make_host(n_items: int, host: int, host_count: int,
+               latency_s: float) -> DataLoader:
+    """An index-carrying dataset behind sleep-based storage: thread workers
+    see true concurrency, and every delivered sample is accountable."""
+    items = [np.full((4,), i, np.int32) for i in range(n_items)]
+    storage = LatencyStorage(ArrayStorage(items), latency_s=latency_s,
+                             bandwidth=1e9)
+    ds = Dataset(storage, transform=lambda a: {"x": a})
+    return DataLoader(ds, GLOBAL_BATCH, shuffle=True, seed=11,
+                      params=LoaderParams(num_workers=2, prefetch_factor=2),
+                      host_index=host, host_count=host_count)
+
+
+def _lockstep(streams: List, rounds: int,
+              sink: Optional[List[np.ndarray]] = None) -> float:
+    """Drive ``rounds`` lockstep global batches; returns global batches/s.
+    Measurement windows are poll-free — the consensus cost is paid before
+    the window, where the comparison is fair to both modes."""
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for s in streams:
+            batch = next(s)
+            if sink is not None:
+                sink.append(np.asarray(batch["x"])[:, 0].copy())
+        time.sleep(COMPUTE_S)
+    return rounds / (time.perf_counter() - t0)
+
+
+def _hetero_rate(consensus: str, n_items: int, quick: bool) -> Dict:
+    """Build the 2x-heterogeneous fleet, run one forced consensus in the
+    given mode, measure the steady lockstep rate past the apply barrier,
+    then run out to an epoch boundary and check exact coverage."""
+    bpe = n_items // GLOBAL_BATCH
+    warm = 6 if quick else 10
+    window = 12 if quick else 24
+
+    coord = FleetCoordinator(config=FleetConfig(
+        heartbeat_timeout_s=1e9, warmup_steps=10_000, cooldown_steps=8,
+        consensus=consensus, **_search_cfg(quick)))
+    latencies = [BASE_LATENCY_S, BASE_LATENCY_S * HET_SCALE]
+    agents, streams = [], []
+    for h, lat in enumerate(latencies):
+        dl = _make_host(n_items, h, len(latencies), lat)
+        agents.append(coord.register(HostAgent(
+            f"host{h}", dl, evaluator=LoaderEvaluator(dl, to_device=False))))
+        streams.append(dl.stream(to_device=False))
+    delivered: List[np.ndarray] = []
+    try:
+        coord.request_consensus(reason="startup")
+        actions = coord.poll()
+        event = next((a for a in actions if a["kind"] == "consensus"), {})
+        # a per-host repartition applies at a negotiated common barrier:
+        # drain past it (plus pipeline warm-up) before the gated window
+        barrier = int(event.get("barrier") or 0)
+        while streams[0].position < barrier:
+            _lockstep(streams, 1, sink=delivered)
+        _lockstep(streams, warm, sink=delivered)
+        rate = _lockstep(streams, window, sink=delivered)
+        # run out to an epoch boundary: the (possibly mid-epoch) partition
+        # change must keep once-per-epoch delivery exact
+        epochs = -(-streams[0].position // bpe)
+        for s in streams:
+            while s.position < epochs * bpe:
+                delivered.append(np.asarray(next(s)["x"])[:, 0].copy())
+        counts = np.bincount(np.concatenate(delivered), minlength=n_items)
+        sizes = [a.loader.sampler.local_batch for a in agents]
+        return {"mode": consensus, "rate": rate, "sizes": sizes,
+                "params": event.get("params"),
+                "applied": bool(event.get("applied")),
+                "coverage_exact": bool((counts == epochs).all()),
+                "epochs": int(epochs)}
+    finally:
+        for s in streams:
+            s.close()
+
+
+def _death_rescale(quick: bool) -> Dict:
+    """4 hosts at global batch 12 lose one to heartbeat timeout: the
+    reshard must latch plan_remesh's rescaled batch (9, per-replica kept
+    at 3) at an epoch boundary with exact coverage through the
+    transition.  Correctness facts only — a table evaluator stands in
+    for measurement so the scenario is deterministic and cheap."""
+    del quick                       # correctness scenario: one size
+    gb, bpe, hosts = GLOBAL_BATCH, 6, 4
+    n_items = gb * bpe
+    timeout = 4.0
+    clock = [0.0]
+    coord = FleetCoordinator(
+        config=FleetConfig(heartbeat_timeout_s=timeout, warmup_steps=10_000,
+                           cooldown_steps=8, **_search_cfg(True)),
+        clock=lambda: clock[0])
+
+    def table_eval(i, j, *, num_batches=16, epoch=0):
+        return TransferStats(4.0 / i + 0.1 * j, num_batches, 0)
+
+    items = [np.full((4,), i, np.int32) for i in range(n_items)]
+    ds = Dataset(ArrayStorage(items), transform=lambda a: {"x": a})
+    agents, streams = {}, {}
+    for h in range(hosts):
+        dl = DataLoader(ds, gb, shuffle=True, seed=7,
+                        params=LoaderParams(num_workers=2, prefetch_factor=2),
+                        host_index=h, host_count=hosts)
+        name = f"host{h}"
+        agents[name] = coord.register(HostAgent(name, dl,
+                                                evaluator=table_eval))
+        streams[name] = dl.stream(to_device=False)
+    delivered: List[np.ndarray] = []
+    alive = sorted(set(agents) - {"host3"})
+    try:
+        for _ in range(3):          # a few healthy lockstep rounds
+            clock[0] += 1.0
+            for name in sorted(agents):
+                delivered.append(
+                    np.asarray(next(streams[name])["x"])[:, 0].copy())
+                agents[name].observe(data_s=0.001, step_s=0.05)
+            coord.poll()
+        for _ in range(int(timeout) + 2):   # host3 goes silent
+            clock[0] += 1.0
+            for name in alive:
+                agents[name].observe(data_s=0.001, step_s=0.05)
+            coord.poll()
+        event = next(e for e in coord.events if e["kind"] == "reshard")
+        plan_gb = int(event["plan"].new_global_batch)
+        ge = event["geometry_epoch"]
+        # drain the pre-latch epochs (old geometry + makeup) plus one full
+        # epoch at the NEW geometry
+        for name in alive:
+            s = streams[name]
+            while s.position < ge * bpe + n_items // plan_gb:
+                delivered.append(np.asarray(next(s)["x"])[:, 0].copy())
+        counts = np.bincount(np.concatenate(delivered), minlength=n_items)
+        return {
+            "old_global_batch": gb, "new_global_batch": plan_gb,
+            "geometry_epoch": None if ge is None else int(ge),
+            "latched": bool(ge is not None and ge >= 1),
+            "rescale_applied": all(
+                agents[name].loader.global_batch == plan_gb
+                and agents[name].loader.sampler.local_batch
+                == plan_gb // len(alive) for name in alive),
+            "makeup_batches": int(event["makeup_batches"]),
+            "barrier": int(event["barrier"]),
+            "coverage_exact": bool((counts == (ge + 1)).all()),
+            "lost": int((counts < ge + 1).sum()),
+            "dup": int((counts > ge + 1).sum()),
+            "n_items": n_items, "epochs": int(ge + 1),
+        }
+    finally:
+        for s in streams.values():
+            s.close()
+
+
+def run(quick: bool = False) -> List[Dict]:
+    n_items = 360 if quick else 720
+
+    death = _death_rescale(quick)
+    uniform = _hetero_rate("uniform", n_items, quick)
+    per_host = _hetero_rate("per_host", n_items, quick)
+
+    ratio = per_host["rate"] / uniform["rate"]
+    sizes = per_host["sizes"]
+    # the fast host (host0) must hold the strictly larger slice, and the
+    # partition must still sum to the global batch
+    rebalanced = (sum(sizes) == GLOBAL_BATCH and sizes[0] > sizes[1])
+
+    rows = [
+        {"phase": "uniform-consensus",
+         "rate_gbatch_s": round(uniform["rate"], 1),
+         "note": f"even split {uniform['sizes']}, cell "
+                 f"{uniform['params']}"},
+        {"phase": "per-host-consensus",
+         "rate_gbatch_s": round(per_host["rate"], 1),
+         "note": f"rate-apportioned split {sizes}, cells "
+                 f"{per_host['params']}"},
+        {"phase": "death-rescale", "rate_gbatch_s": None,
+         "note": f"4->3 hosts: global batch {death['old_global_batch']} -> "
+                 f"{death['new_global_batch']} latched at epoch "
+                 f"{death['geometry_epoch']}, {death['makeup_batches']} "
+                 f"makeup batches"},
+        {"phase": "gates", "rate_gbatch_s": None,
+         "note": f"per-host/uniform {ratio:.2f} (>= {GATE_RATIO}), "
+                 f"coverage exact: {per_host['coverage_exact']} / "
+                 f"{death['coverage_exact']}, rescale applied: "
+                 f"{death['rescale_applied']}"},
+    ]
+
+    facts_ok = (rebalanced and per_host["coverage_exact"]
+                and uniform["coverage_exact"] and death["latched"]
+                and death["rescale_applied"] and death["coverage_exact"]
+                and death["new_global_batch"] == 9)
+    payload = {
+        "bench": "elastic",
+        "gate": {
+            "required_ratio": GATE_RATIO,
+            "measured_ratio": round(ratio, 3),
+            "sizes_rebalanced": rebalanced,
+            "per_host_coverage_exact": per_host["coverage_exact"],
+            "uniform_coverage_exact": uniform["coverage_exact"],
+            "death_rescale_applied": death["rescale_applied"],
+            "death_geometry_latched": death["latched"],
+            "death_coverage_exact": death["coverage_exact"],
+            "passed": bool(facts_ok and ratio >= GATE_RATIO),
+        },
+        "uniform": {k: (round(v, 3) if isinstance(v, float) else v)
+                    for k, v in uniform.items()},
+        "per_host": {k: (round(v, 3) if isinstance(v, float) else v)
+                     for k, v in per_host.items()},
+        "death": death,
+        "rows": rows,
+        "host": {"platform": platform.platform(),
+                 "python": sys.version.split()[0],
+                 "numpy": np.__version__},
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+        f.write("\n")
+
+    # the protocol facts are hard failures at any noise level; only the
+    # goodput ratio gets a CI noise floor (FASTPATH_GATE_MIN precedent)
+    if not facts_ok:
+        raise RuntimeError(
+            f"elastic gate FAILED: sizes={sizes} "
+            f"coverage={per_host['coverage_exact']}/"
+            f"{death['coverage_exact']} "
+            f"rescale={death['rescale_applied']} "
+            f"new_gb={death['new_global_batch']} (see {ROOT_JSON})")
+    fail_below = float(os.environ.get("ELASTIC_GATE_MIN", GATE_RATIO))
+    if ratio < fail_below:
+        raise RuntimeError(
+            f"elastic goodput gate FAILED: per-host/uniform {ratio:.2f} "
+            f"< {fail_below} (see {ROOT_JSON})")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_table
+    print(fmt_table(run(quick="--quick" in sys.argv)))

@@ -30,6 +30,7 @@ BENCHES = [
     ("loader_wallclock", "benchmarks.bench_loader_wallclock", "real machinery"),
     ("multihost", "benchmarks.bench_multihost", "beyond-paper"),
     ("fleet", "benchmarks.bench_fleet", "beyond-paper"),
+    ("elastic", "benchmarks.bench_elastic", "beyond-paper"),
     ("goodput", "benchmarks.bench_goodput", "beyond-paper"),
     ("search_cost", "benchmarks.bench_search_cost", "beyond-paper"),
     ("online_drift", "benchmarks.bench_online_drift", "beyond-paper"),

@@ -21,6 +21,20 @@ def _batch_bucket(batch_size: int) -> int:
     return int(round(math.log2(max(batch_size, 1))))
 
 
+# the beyond-paper axes, in tuple order: (axis name, DPTResult/Trial field).
+# Every axis follows the same lifecycle — an entry records the winning
+# value plus a "<axis>_searched" flag (did the sweep actually price the
+# axis?), reads can require a searched axis, and an axis-blind refinement
+# must never clobber a searched value back to 0.  One table instead of a
+# copy of that logic per axis.
+_AXES: Tuple[Tuple[str, str], ...] = (
+    ("locality", "locality_chunk"),
+    ("cache", "cache_budget_bytes"),
+    ("slow_lane", "slow_lane_workers"),
+    ("geometry", "global_batch"),
+)
+
+
 class DPTCache:
     def __init__(self, path: Optional[str] = None):
         self.path = path
@@ -46,7 +60,9 @@ class DPTCache:
                    epoch: int = 0, *, require_locality: bool = False,
                    require_cache: bool = False, with_cache: bool = False,
                    require_slow_lane: bool = False,
-                   with_slow_lane: bool = False
+                   with_slow_lane: bool = False,
+                   require_geometry: bool = False,
+                   with_geometry: bool = False
                    ) -> Optional[Tuple[int, ...]]:
         """Like ``get`` but with the locality axis: (nworker, nprefetch,
         locality_chunk).  Entries written before the axis existed read
@@ -55,31 +71,30 @@ class DPTCache:
         run that newly enables the axis must not be satisfied by a stale
         two-axis result.
 
-        The cache axis (DESIGN.md §7) is opt-in, so the 3-tuple contract
-        above is unchanged for existing callers: ``with_cache=True``
-        appends ``cache_budget_bytes`` as a fourth element;
-        ``require_cache=True`` treats entries whose search never swept
-        the budget axis as misses (same staleness rule as locality).
-        The dual-lane axis (DESIGN.md §9) follows the same pattern:
-        ``with_slow_lane=True`` appends ``slow_lane_workers`` and
-        ``require_slow_lane=True`` treats lane-blind entries as misses."""
+        Every later axis is opt-in, so the 3-tuple contract above is
+        unchanged for existing callers; ``with_<axis>=True`` appends the
+        axis value in ``_AXES`` order (cache budget, slow-lane workers,
+        geometry global batch) and ``require_<axis>=True`` treats entries
+        whose search never swept that axis as misses — the same staleness
+        rule applied uniformly through the axis table."""
+        require = {"locality": require_locality, "cache": require_cache,
+                   "slow_lane": require_slow_lane,
+                   "geometry": require_geometry}
+        append = {"cache": with_cache, "slow_lane": with_slow_lane,
+                  "geometry": with_geometry}
         with self._lock:
             v = self._store.get(self._key(machine_fp, dataset_fp,
                                           batch_size, epoch))
         if not v:
             return None
-        if require_locality and not v.get("locality_searched", False):
-            return None
-        if require_cache and not v.get("cache_searched", False):
-            return None
-        if require_slow_lane and not v.get("slow_lane_searched", False):
-            return None
+        for axis, _field in _AXES:
+            if require[axis] and not v.get(f"{axis}_searched", False):
+                return None
         out = (v["nworker"], v["nprefetch"],
                int(v.get("locality_chunk", 0)))
-        if with_cache:
-            out = out + (int(v.get("cache_budget_bytes", 0)),)
-        if with_slow_lane:
-            out = out + (int(v.get("slow_lane_workers", 0)),)
+        for axis, field in _AXES:
+            if append.get(axis):
+                out = out + (int(v.get(field, 0)),)
         return out
 
     def put(self, machine_fp: str, dataset_fp: str, batch_size: int,
@@ -89,43 +104,25 @@ class DPTCache:
             "nworker": result.nworker,
             "nprefetch": result.nprefetch,
             "optimal_time": result.optimal_time,
-            "locality_chunk": getattr(result, "locality_chunk", 0),
-            # did the sweep actually price the axis?  any non-zero chunk
-            # among the trials means candidate chunks were measured (a
-            # searched axis always includes one)
-            "locality_searched": any(
-                getattr(t, "locality_chunk", 0) for t in result.trials),
-            "cache_budget_bytes": getattr(result, "cache_budget_bytes", 0),
-            "cache_searched": any(
-                getattr(t, "cache_budget_bytes", 0) for t in result.trials),
-            "slow_lane_workers": getattr(result, "slow_lane_workers", 0),
-            "slow_lane_searched": any(
-                getattr(t, "slow_lane_workers", 0) for t in result.trials),
         }
+        for axis, field in _AXES:
+            entry[field] = getattr(result, field, 0)
+            # did the sweep actually price the axis?  any non-zero value
+            # among the trials means candidates were measured (a searched
+            # axis always includes one)
+            entry[f"{axis}_searched"] = any(
+                getattr(t, field, 0) for t in result.trials)
         with self._lock:
             prev = self._store.get(key)
-            if (not entry["locality_searched"] and prev
-                    and prev.get("locality_searched")):
-                # a locality-blind refinement (e.g. an online 2-axis
-                # retune) was measured AT the live chunk: it refines
-                # (nworker, nprefetch) without invalidating the searched
-                # locality — keep it instead of clobbering it to 0
-                entry["locality_chunk"] = prev.get("locality_chunk", 0)
-                entry["locality_searched"] = True
-            if (not entry["cache_searched"] and prev
-                    and prev.get("cache_searched")):
-                # same protection for the cache axis: a budget-blind
-                # refinement must not clobber a searched budget to 0
-                entry["cache_budget_bytes"] = prev.get(
-                    "cache_budget_bytes", 0)
-                entry["cache_searched"] = True
-            if (not entry["slow_lane_searched"] and prev
-                    and prev.get("slow_lane_searched")):
-                # and for the dual-lane axis: a lane-blind refinement
-                # must not clobber a searched lane width to 0
-                entry["slow_lane_workers"] = prev.get(
-                    "slow_lane_workers", 0)
-                entry["slow_lane_searched"] = True
+            for axis, field in _AXES:
+                if (not entry[f"{axis}_searched"] and prev
+                        and prev.get(f"{axis}_searched")):
+                    # an axis-blind refinement (e.g. an online 2-axis
+                    # retune) was measured AT the live value: it refines
+                    # (nworker, nprefetch) without invalidating the
+                    # searched axis — keep it instead of clobbering to 0
+                    entry[field] = prev.get(field, 0)
+                    entry[f"{axis}_searched"] = True
             self._store[key] = entry
             if self.path:
                 tmp = self.path + ".tmp"

@@ -52,6 +52,11 @@ class DPTConfig:
     # worker counts (0 = dual-lane off).  Same contract: None keeps the
     # kwarg away from the evaluator entirely.
     slow_lanes: Optional[Tuple[int, ...]] = None
+    # beyond-paper sixth grid axis (DESIGN.md §11): candidate GLOBAL batch
+    # geometries (0 = keep the loader's current global batch).  Outermost
+    # of all — geometry changes re-shape every inner measurement.  Same
+    # contract: None never passes the kwarg to the evaluator.
+    geometries: Optional[Tuple[int, ...]] = None
 
     def resolve(self) -> Tuple[int, int]:
         n = self.num_cpu_cores
@@ -86,6 +91,9 @@ class Trial:
     # slow-lane workers the cell was measured with (0 = dual-lane off /
     # the lane axis was not searched)
     slow_lane_workers: int = 0
+    # global batch the cell was measured with (0 = the loader's own / the
+    # geometry axis was not searched)
+    global_batch: int = 0
 
 
 @dataclasses.dataclass
@@ -98,6 +106,7 @@ class DPTResult:
     locality_chunk: int = 0
     cache_budget_bytes: int = 0
     slow_lane_workers: int = 0
+    global_batch: int = 0
 
     @property
     def speedup_vs_default(self) -> Optional[float]:

@@ -235,8 +235,9 @@ class LoaderStream:
         self.to_device = to_device
         self.swaps = 0
         self.reshards = 0
-        bpe = loader.sampler.batches_per_epoch()
-        self.position = loader.sampler.state.absolute(bpe)
+        # schedule-aware: epochs can have different lengths once the
+        # geometry schedule has more than one step
+        self.position = loader.sampler.absolute()
         # per-yield position log: makeup yields do not advance ``position``,
         # so a consumer's absolute regular-batch position after its k-th
         # consumed yield is position_after(k), NOT initial + k.  The fleet
@@ -249,7 +250,8 @@ class LoaderStream:
         self._pos_log_base = 0           # yield index of _pos_log[0]
         self._pending: Optional[LoaderParams] = None
         self._pending_locality_epoch: Optional[int] = None
-        self._pending_reshard: Optional[Tuple[int, int, int]] = None
+        self._pending_reshard: Optional[
+            Tuple[int, int, int, Optional[Tuple[int, ...]]]] = None
         self._pending_makeup: List[np.ndarray] = []  # held until the barrier
         self._makeup: deque = deque()        # index chunks awaiting delivery
         # one flag per index-batch the pool pulled, in pull order (ordered
@@ -304,7 +306,8 @@ class LoaderStream:
 
     def apply_reshard(self, num_shards: int, shard: int, *,
                       at_batch: Optional[int] = None,
-                      makeup: Optional[Sequence[np.ndarray]] = None) -> int:
+                      makeup: Optional[Sequence[np.ndarray]] = None,
+                      sizes: Optional[Sequence[int]] = None) -> int:
         """Request an elastic reshard at global batch ``at_batch``.
 
         ``at_batch`` is an absolute global-batch position; None means the
@@ -316,11 +319,16 @@ class LoaderStream:
         boundary, so the negotiation converges).  ``makeup`` index chunks
         are delivered right after the barrier, before regular new-shard
         batches; post-settlement chunks arrive via :meth:`add_makeup`.
+        ``sizes`` is an explicit per-shard split of the global batch
+        (ragged survivor counts, per-host consensus weights); see
+        ``ShardedSampler.reshard``.
         """
         with self._lock:
             boundary = self.position if at_batch is None \
                 else max(at_batch, self.position)
-            self._pending_reshard = (num_shards, shard, boundary)
+            self._pending_reshard = (
+                num_shards, shard, boundary,
+                tuple(int(s) for s in sizes) if sizes is not None else None)
             if makeup:
                 # held back until the barrier commits: the pool running
                 # NOW must not interleave makeup with old-shard batches
@@ -397,7 +405,7 @@ class LoaderStream:
         delivered position, remap the shard, and re-spec the slab arena
         (the local batch shape changed)."""
         with self._lock:
-            num_shards, shard, _ = self._pending_reshard
+            num_shards, shard, _, sizes = self._pending_reshard
             self._pending_reshard = None
             # makeup the discarded pool pulled but never delivered goes
             # back to the FRONT of the queue (it was next in line); the
@@ -410,9 +418,8 @@ class LoaderStream:
             # pulled-but-undelivered flags belong to the discarded pool
             self._pull_kinds.clear()
         sampler = self.loader.sampler
-        bpe = sampler.batches_per_epoch()
-        sampler.state = SamplerState.from_absolute(self.position, bpe)
-        sampler.reshard(num_shards, shard)
+        sampler.state = sampler.state_at(self.position)
+        sampler.reshard(num_shards, shard, sizes=sizes)
         if self.loader._stream_arena is not None:
             # only batches of the NEW local size may establish the fresh
             # spec — a ragged makeup chunk must not pin the arena shape
@@ -430,6 +437,7 @@ class LoaderStream:
         kind so the consumer can tell a yielded makeup batch (no position
         advance) from a regular one at any interleaving."""
         sampler_it = iter(self.loader.sampler)
+        last_lb = self.loader.sampler.local_batch
         while True:
             with self._lock:             # pool pump thread vs. consumer /
                 idx = None               # coordinator readers
@@ -441,6 +449,15 @@ class LoaderStream:
                 yield idx
             else:
                 idx = next(sampler_it)
+                if len(idx) != last_lb:
+                    # a geometry latch crossed an epoch boundary (or the
+                    # split went ragged): the local batch changed shape,
+                    # so the slab arena must re-spec — in-flight slots of
+                    # the old spec drain out via their generation stamp
+                    last_lb = len(idx)
+                    arena = self.loader._stream_arena
+                    if arena is not None:
+                        arena.respec(expected_leading=last_lb)
                 self._pull_kinds.append(False)
                 yield idx
 
@@ -554,7 +571,6 @@ class DataLoader:
                  sharding=None,
                  sampler_state: Optional[SamplerState] = None):
         self.dataset = dataset
-        self.global_batch = global_batch
         self.params = params
         self.memory_budget = memory_budget
         self.sharding = sharding
@@ -579,6 +595,22 @@ class DataLoader:
             state=sampler_state, locality_chunk=params.locality_chunk)
         if params.cache_budget_bytes > 0:
             self._sync_cache_plan()
+
+    @property
+    def global_batch(self) -> int:
+        """The current epoch's global batch (elastic — follows the
+        sampler's geometry schedule)."""
+        return self.sampler.global_batch
+
+    def set_geometry(self, global_batch: int, *,
+                     epoch: Optional[int] = None) -> int:
+        """Change the global batch, epoch-latched (see ``ShardedSampler
+        .set_geometry``).  A live stream needs no restart: batch
+        boundaries only move from the latch epoch on, the stateful
+        sampler crosses into the new geometry naturally, and the stream's
+        index feed re-specs the slab arena when the local batch shape
+        changes.  Returns the effective first epoch."""
+        return self.sampler.set_geometry(global_batch, epoch=epoch)
 
     # ---- fault plane (DESIGN.md §10) ---------------------------------------
     def _on_degraded(self, degraded: bool) -> None:
@@ -676,6 +708,9 @@ class DataLoader:
                 "params": dataclasses.asdict(self.params),
                 "locality": self.sampler.locality_state(),
                 "cache_plan": self.sampler.cache_state(),
+                "geometry": self.sampler.geometry_state(),
+                "shard_sizes": list(self.sampler.shard_sizes)
+                if self.sampler.shard_sizes is not None else None,
                 "costs": self.cost_tracker.state_dict(),
                 "quarantine": self.quarantine.state_dict()}
 
@@ -687,6 +722,11 @@ class DataLoader:
             self.sampler.load_locality(d["locality"])
         else:                          # pre-locality checkpoint
             self.sampler.force_locality(self.params.locality_chunk)
+        if "geometry" in d:            # pre-elastic checkpoints keep the
+            self.sampler.load_geometry(d["geometry"])   # constructed batch
+        if d.get("shard_sizes") is not None:
+            self.sampler._shard_sizes = tuple(
+                int(s) for s in d["shard_sizes"])
         hot_k = self._ensure_tier()    # re-spec (never flush) the tier
         if "cache_plan" in d:
             self.sampler.load_cache_plan(d["cache_plan"])
@@ -753,13 +793,13 @@ class DataLoader:
             # the slow lane's wider sequence window lets the producer pull
             # that much further ahead of delivery
             inflight += p.slow_lane_workers + p.slow_lane_lookahead
-        bpe = self.sampler.batches_per_epoch()
-        pos = self.sampler.state.absolute(bpe) + inflight
-        return -(-pos // bpe)
+        return self.sampler.latch_epoch_for(
+            self.sampler.absolute() + inflight)
 
     def reshard(self, num_shards: int, shard: int, *,
                 at_batch: Optional[int] = None,
-                makeup: Optional[Sequence[np.ndarray]] = None) -> int:
+                makeup: Optional[Sequence[np.ndarray]] = None,
+                sizes: Optional[Sequence[int]] = None) -> int:
         """Elastic reshard: remap this host's shard of the global stream.
 
         With a live stream the remap happens at the ``at_batch`` barrier
@@ -772,12 +812,13 @@ class DataLoader:
         """
         if self._live_stream is not None:
             return self._live_stream.apply_reshard(
-                num_shards, shard, at_batch=at_batch, makeup=makeup)
+                num_shards, shard, at_batch=at_batch, makeup=makeup,
+                sizes=sizes)
         if makeup:
             raise ValueError("makeup delivery needs a live stream; "
                              "start one with stream() first")
-        self.sampler.reshard(num_shards, shard)
-        return self.sampler.state.absolute(self.sampler.batches_per_epoch())
+        self.sampler.reshard(num_shards, shard, sizes=sizes)
+        return self.sampler.absolute()
 
     def add_makeup(self, makeup: Sequence[np.ndarray]) -> None:
         """Queue makeup chunks on the live stream (see
@@ -951,7 +992,8 @@ class DataLoader:
                               to_device: bool = True,
                               locality_chunk: Optional[int] = None,
                               cache_budget_bytes: Optional[int] = None,
-                              slow_lane_workers: Optional[int] = None
+                              slow_lane_workers: Optional[int] = None,
+                              global_batch: Optional[int] = None
                               ) -> TransferStats:
         """Wall-clock time to deliver ``num_batches`` (storage->host[->HBM]).
 
@@ -972,6 +1014,12 @@ class DataLoader:
         override: the trial pool runs with that lane width (sharing the
         loader's learned cost tracker — the lane is only as good as its
         predictor), ``self.params`` restored afterwards.
+
+        ``global_batch`` is the geometry axis's measurement-only
+        override: the trial iterates a THROWAWAY sampler with the
+        candidate global batch (even per-host split), so DPT can price
+        batch geometries without touching the live sampler's schedule or
+        position.
         """
         if slow_lane_workers is not None \
                 and slow_lane_workers != self.params.slow_lane_workers:
@@ -982,14 +1030,28 @@ class DataLoader:
                 return self.measure_transfer_time(
                     num_batches, epoch=epoch, to_device=to_device,
                     locality_chunk=locality_chunk,
-                    cache_budget_bytes=cache_budget_bytes)
+                    cache_budget_bytes=cache_budget_bytes,
+                    global_batch=global_batch)
             finally:
                 self.params = saved
+        trial_sampler = self.sampler
+        if global_batch is not None \
+                and int(global_batch) != self.sampler.gb_for_epoch(epoch):
+            s = self.sampler
+            trial_sampler = ShardedSampler(
+                s.num_items, int(global_batch), shuffle=s.shuffle,
+                seed=s.seed, drop_last=s.drop_last,
+                host_index=s.host_index, host_count=s.host_count,
+                layout=s.layout,
+                shard_sizes=ShardedSampler.even_split(int(global_batch),
+                                                      s.host_count))
+            trial_sampler.load_locality(s.locality_state())
+            trial_sampler.load_cache_plan(s.cache_state())
         # static pre-check (the paper's N/A cells fail before running)
         if self.memory_budget is not None:
             probe = self.dataset.get_batch(
-                self.sampler.local_indices(epoch, 0, locality_chunk)[:1])
-            est_batch = batch_nbytes(probe) * self.sampler.local_batch
+                trial_sampler.local_indices(epoch, 0, locality_chunk)[:1])
+            est_batch = batch_nbytes(probe) * trial_sampler.local_batch
             est = estimate_loader_footprint(
                 est_batch, self.params.num_workers,
                 self.params.prefetch_factor, self.params.device_prefetch)
@@ -1018,7 +1080,7 @@ class DataLoader:
             trial_dataset = self.dataset.with_storage(
                 CachedStorage(self.dataset.storage, trial_tier, admit=True))
 
-        idx_iter = _take(self.sampler.epoch_iter(epoch, locality_chunk),
+        idx_iter = _take(trial_sampler.epoch_iter(epoch, locality_chunk),
                          num_batches)
         # snapshot BEFORE _pool(): worker threads start reading the moment
         # the pool is constructed, and their requests belong to this window.

@@ -29,6 +29,21 @@ dilutes locality — each host gets every H-th element, shrinking per-host
 coalesced runs toward C/H — while host-major slices keep whole chunks on
 one host at any host count.  ``layout="strided"`` keeps the legacy
 behavior for A/B measurement (bench_locality's multi-host gate).
+
+Elastic geometry (DESIGN.md §11): the global batch itself is an
+epoch-latched schedule (``set_geometry``), exactly like the locality and
+cache-plan schedules — an in-progress epoch keeps its batch boundaries
+(the stream position is counted in global batches, so moving a boundary
+mid-epoch would re-partition batches that were already delivered), and
+the new geometry applies from a pinned future epoch on every host at
+once.  Within an epoch, hosts may take *non-uniform* contiguous slices
+(``shard_sizes``): per-host sizes summing to the global batch, so a
+reshard to a survivor count that does not divide the global batch can
+finish the epoch with a ragged split instead of raising, and a per-host
+consensus can hand fast hosts proportionally larger slices.  Sizes only
+change the partition of each global batch — never the permutation or the
+batch boundaries — so they may switch at any common batch barrier, while
+geometry (which moves boundaries) must latch at an epoch boundary.
 """
 from __future__ import annotations
 
@@ -74,16 +89,29 @@ class ShardedSampler:
                  shuffle: bool = True, seed: int = 0, drop_last: bool = True,
                  host_index: int = 0, host_count: int = 1,
                  state: Optional[SamplerState] = None,
-                 locality_chunk: int = 0, layout: str = "host_major"):
+                 locality_chunk: int = 0, layout: str = "host_major",
+                 shard_sizes: Optional[Sequence[int]] = None):
         if layout not in ("host_major", "strided"):
             raise ValueError(f"unknown shard layout {layout!r}")
-        if global_batch % host_count:
+        if shard_sizes is not None:
+            shard_sizes = tuple(int(s) for s in shard_sizes)
+            if (len(shard_sizes) != host_count
+                    or sum(shard_sizes) != global_batch
+                    or min(shard_sizes) < 0):
+                raise ValueError(
+                    f"shard_sizes {shard_sizes} must be {host_count} "
+                    f"non-negative sizes summing to {global_batch}")
+        elif global_batch % host_count:
             raise ValueError(
                 f"global_batch {global_batch} not divisible by host_count "
-                f"{host_count}")
+                f"{host_count} (pass shard_sizes= for a ragged split)")
         self.num_items = num_items
-        self.global_batch = global_batch
-        self.local_batch = global_batch // host_count
+        # (first_epoch, global_batch) steps — same latch semantics as the
+        # locality schedule.  ``global_batch`` / ``local_batch`` are
+        # properties over this schedule at the current epoch.
+        self._geometry_schedule: List[Tuple[int, int]] = [
+            (0, int(global_batch))]
+        self._shard_sizes: Optional[Tuple[int, ...]] = shard_sizes
         self.shuffle = shuffle
         self.seed = seed
         self.drop_last = drop_last
@@ -105,10 +133,134 @@ class ShardedSampler:
         self._cache_schedule: List[Tuple[int, int]] = [(0, 0)]
         self._perm_cache: dict = {}
 
-    def batches_per_epoch(self) -> int:
+    def batches_per_epoch(self, epoch: Optional[int] = None) -> int:
+        return self._bpe_for(self.gb_for_epoch(
+            self.state.epoch if epoch is None else epoch))
+
+    def _bpe_for(self, global_batch: int) -> int:
         if self.drop_last:
-            return self.num_items // self.global_batch
-        return -(-self.num_items // self.global_batch)
+            return self.num_items // global_batch
+        return -(-self.num_items // global_batch)
+
+    # ---- geometry schedule --------------------------------------------------
+    @property
+    def global_batch(self) -> int:
+        return self.gb_for_epoch(self.state.epoch)
+
+    @property
+    def local_batch(self) -> int:
+        return self.sizes_for_epoch(self.state.epoch)[self.host_index]
+
+    @property
+    def shard_sizes(self) -> Optional[Tuple[int, ...]]:
+        return self._shard_sizes
+
+    @staticmethod
+    def even_split(total: int, parts: int) -> Tuple[int, ...]:
+        """Largest-remainder split of ``total`` over ``parts`` hosts: the
+        first ``total % parts`` hosts take one extra item, so sizes always
+        sum to ``total`` — the ragged fallback when divisibility fails."""
+        base, rem = divmod(int(total), int(parts))
+        return tuple(base + (1 if i < rem else 0) for i in range(parts))
+
+    def gb_for_epoch(self, epoch: int) -> int:
+        """The global batch in effect for ``epoch``."""
+        gb = self._geometry_schedule[0][1]
+        for e, g in self._geometry_schedule:
+            if e > epoch:
+                break
+            gb = g
+        return gb
+
+    def sizes_for_epoch(self, epoch: int) -> Tuple[int, ...]:
+        """Per-host slice sizes of each global batch in ``epoch``.
+
+        Explicit ``shard_sizes`` apply while they still sum to the epoch's
+        global batch; once a geometry change makes them stale the split
+        reverts to even (the coordinator re-pushes weighted sizes after a
+        geometry latch if it still wants them)."""
+        gb = self.gb_for_epoch(epoch)
+        if (self._shard_sizes is not None
+                and len(self._shard_sizes) == self.host_count
+                and sum(self._shard_sizes) == gb):
+            return self._shard_sizes
+        return self.even_split(gb, self.host_count)
+
+    def set_geometry(self, global_batch: int, *,
+                     epoch: Optional[int] = None) -> int:
+        """Change the global batch.  Epoch-latched exactly like
+        ``set_locality`` — batch boundaries are position arithmetic, so an
+        in-progress epoch must keep its geometry and a fleet pins one
+        common latch epoch for every host.  Returns the effective first
+        epoch of the new geometry."""
+        global_batch = int(global_batch)
+        if global_batch <= 0:
+            raise ValueError(f"global_batch must be positive, "
+                             f"got {global_batch}")
+        eff = self.natural_latch_epoch()
+        if epoch is not None:
+            eff = max(eff, int(epoch))
+        elif global_batch == self._geometry_schedule[-1][1]:
+            return eff
+        self._geometry_schedule = [
+            (e, g) for e, g in self._geometry_schedule if e < eff]
+        self._geometry_schedule.append((eff, global_batch))
+        return eff
+
+    def force_geometry(self, global_batch: int) -> None:
+        """Reset the schedule to ``global_batch`` for every epoch
+        (restore path)."""
+        self._geometry_schedule = [(0, int(global_batch))]
+
+    def geometry_state(self) -> List[List[int]]:
+        return [[int(e), int(g)] for e, g in self._geometry_schedule]
+
+    def load_geometry(self, schedule: Sequence[Sequence[int]]) -> None:
+        self._geometry_schedule = [(int(e), int(g)) for e, g in schedule]
+
+    # ---- schedule-aware absolute position ----------------------------------
+    def epoch_start(self, epoch: int) -> int:
+        """Absolute batch position where ``epoch`` starts.  With an
+        elastic geometry schedule epochs have different lengths, so this
+        walks the schedule instead of multiplying by a constant."""
+        total = 0
+        sched = self._geometry_schedule
+        for i, (e0, gb) in enumerate(sched):
+            if e0 >= epoch:
+                break
+            e1 = min(epoch,
+                     sched[i + 1][0] if i + 1 < len(sched) else epoch)
+            total += (e1 - e0) * self._bpe_for(gb)
+        return total
+
+    def absolute(self) -> int:
+        """The current state's position as a single global batch count
+        since step 0 (schedule-aware replacement for
+        ``SamplerState.absolute``)."""
+        return self.epoch_start(self.state.epoch) + self.state.batch_offset
+
+    def state_at(self, position: int) -> SamplerState:
+        """(epoch, batch_offset) for an absolute position under the
+        geometry schedule (schedule-aware ``SamplerState.from_absolute``)."""
+        pos = int(position)
+        sched = self._geometry_schedule
+        for i, (e0, gb) in enumerate(sched):
+            bpe = self._bpe_for(gb)
+            if i + 1 < len(sched):
+                span = (sched[i + 1][0] - e0) * bpe
+                if pos < span:
+                    return SamplerState(e0 + pos // bpe, pos % bpe)
+                pos -= span
+            else:
+                return SamplerState(e0 + pos // bpe, pos % bpe)
+        raise AssertionError("unreachable: schedule is never empty")
+
+    def latch_epoch_for(self, position: int) -> int:
+        """First epoch whose start is at or after ``position`` — where a
+        producer that has run ahead to ``position`` could first adopt a
+        new permutation or geometry."""
+        st = self.state_at(position)
+        return st.epoch + (1 if st.batch_offset else 0)
 
     # ---- locality schedule ------------------------------------------------
     def chunk_for_epoch(self, epoch: int) -> int:
@@ -287,21 +439,25 @@ class ShardedSampler:
         live schedule).
         """
         perm = self._epoch_perm(epoch, chunk)
-        start = batch * self.global_batch
-        glob = perm[start:start + self.global_batch]
-        if len(glob) < self.global_batch and not self.drop_last:
-            glob = np.concatenate([glob, perm[:self.global_batch - len(glob)]])
+        gb = self.gb_for_epoch(epoch)
+        start = batch * gb
+        glob = perm[start:start + gb]
+        if len(glob) < gb and not self.drop_last:
+            glob = np.concatenate([glob, perm[:gb - len(glob)]])
         if self.layout == "strided":
             return glob[self.host_index::self.host_count]
         # host-major: contiguous slice — whole chunks of a chunked perm
         # stay on one host (strided slices dilute runs toward C/H).  Both
-        # layouts partition the global batch, so coverage is identical.
-        lb = self.global_batch // self.host_count
-        return glob[self.host_index * lb:(self.host_index + 1) * lb]
+        # layouts partition the global batch, so coverage is identical —
+        # including under non-uniform sizes, whose prefix-sum offsets
+        # still tile the batch exactly.
+        sizes = self.sizes_for_epoch(epoch)
+        off = sum(sizes[:self.host_index])
+        return glob[off:off + sizes[self.host_index]]
 
     def __iter__(self) -> Iterator[np.ndarray]:
         while True:
-            n = self.batches_per_epoch()
+            n = self.batches_per_epoch(self.state.epoch)
             while self.state.batch_offset < n:
                 b = self.state.batch_offset
                 self.state.batch_offset += 1
@@ -314,13 +470,15 @@ class ShardedSampler:
         """One epoch, non-stateful (used by DPT trials).  ``chunk``
         overrides the scheduled locality for this iteration only."""
         e = self.state.epoch if epoch is None else epoch
-        for b in range(self.batches_per_epoch()):
+        for b in range(self.batches_per_epoch(e)):
             yield self.local_indices(e, b, chunk)
 
     # ---- elastic resharding -------------------------------------------------
-    def reshard(self, num_shards: int, shard: int) -> None:
+    def reshard(self, num_shards: int, shard: int, *,
+                sizes: Optional[Sequence[int]] = None) -> None:
         """Remap this sampler's shard of the live stream (elastic fleet
-        transition: a host died or joined).
+        transition: a host died or joined, or the coordinator re-weighted
+        the per-host split).
 
         The global permutation and the global-batch boundaries depend only
         on (seed, epoch, global_batch) — never on the shard topology — so
@@ -330,14 +488,26 @@ class ShardedSampler:
         exactly that batch's indices, which is the zero-lost/zero-duplicated
         coverage invariant the fleet coordinator relies on.  The position
         (epoch, batch_offset) is in global batches and survives unchanged.
+
+        ``sizes`` gives an explicit per-shard split of the current epoch's
+        global batch (ragged survivor counts, per-host consensus weights).
+        Without it the split must be uniform, and a non-divisible count
+        raises rather than silently truncating.
         """
         if not 0 <= shard < num_shards:
             raise ValueError(f"shard {shard} out of range for "
                              f"{num_shards} shards")
-        if self.global_batch % num_shards:
+        if sizes is not None:
+            sizes = tuple(int(s) for s in sizes)
+            if (len(sizes) != num_shards or sum(sizes) != self.global_batch
+                    or min(sizes) < 0):
+                raise ValueError(
+                    f"sizes {sizes} must be {num_shards} non-negative "
+                    f"sizes summing to {self.global_batch}")
+        elif self.global_batch % num_shards:
             raise ValueError(
                 f"global_batch {self.global_batch} not divisible by "
-                f"num_shards {num_shards}")
+                f"num_shards {num_shards} (pass sizes= for a ragged split)")
         self.host_count = num_shards
         self.host_index = shard
-        self.local_batch = self.global_batch // num_shards
+        self._shard_sizes = sizes

@@ -141,8 +141,20 @@ def plan_remesh(*, alive_hosts: int, devices_per_host: int, model_axis: int,
     if new_batch == 0:
         return ElasticPlan(old_hosts, alive_hosts, new_data, 0, restore_step,
                            feasible=False, reason="batch would be 0")
+    # The rounded batch can land on a value the sampler cannot shard
+    # uniformly (ShardedSampler requires global_batch % host_count == 0
+    # for a uniform split).  Snap to the nearest positive multiple of the
+    # survivor count so the plan is always directly applicable, and leave
+    # an audit trail of the adjustment.
+    reason = ""
+    if new_batch % alive_hosts:
+        snapped = max(alive_hosts,
+                      int(round(new_batch / alive_hosts)) * alive_hosts)
+        reason = (f"snapped global batch {new_batch} -> {snapped} "
+                  f"(nearest multiple of {alive_hosts} hosts)")
+        new_batch = snapped
     return ElasticPlan(old_hosts, alive_hosts, new_data, new_batch,
-                       restore_step, feasible=True)
+                       restore_step, feasible=True, reason=reason)
 
 
 class FailureInjector:

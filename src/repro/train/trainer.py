@@ -105,6 +105,12 @@ class TrainerConfig:
     # batch-lifetime contract holds.  Silently inert for datasets without
     # the fast path or for process pools.
     zero_copy: bool = True
+    # linear-scaling rule (DESIGN.md §11): when the elastic geometry latch
+    # changes the loader's global batch mid-run (a fleet reshard scaled
+    # the fleet), scale the LR schedule by new/old and re-jit the step.
+    # plan_remesh promises exactly this hand-off ("the LR schedule is
+    # re-scaled by the Trainer accordingly").
+    lr_linear_scaling: bool = True
     step_config: TrainStepConfig = dataclasses.field(
         default_factory=TrainStepConfig)
 
@@ -125,6 +131,9 @@ class Trainer:
         self.step_fn = jax.jit(make_train_step(model, cfg.step_config))
         self.state: Optional[TrainState] = None
         self.start_step = 0
+        # reference batch for the linear-scaling LR hook: the geometry the
+        # current step_fn's schedule was built for
+        self._lr_batch = loader.global_batch
         self.online_tuner: Optional[OnlineTuner] = None
         self.locality_controller = None
         self.history: List[Dict[str, Any]] = []
@@ -307,10 +316,13 @@ class Trainer:
     def _consumed_state(self, step: int):
         """Sampler state reflecting batches the TRAINER consumed (one per
         step) — the producer runs ahead by worker queues + device prefetch,
-        so loader.sampler.state would skip batches on restart."""
-        import dataclasses as _dc
-        bpe = self.loader.sampler.batches_per_epoch()
-        return self._stream_base.advanced(step - self._stream_base_step, bpe)
+        so loader.sampler.state would skip batches on restart.  Walks the
+        geometry schedule (batches-per-epoch can differ per epoch after an
+        elastic latch), not a fixed bpe."""
+        s = self.loader.sampler
+        base = s.epoch_start(self._stream_base.epoch) \
+            + self._stream_base.batch_offset
+        return s.state_at(base + (step - self._stream_base_step))
 
     def _rebuild_stream(self, step: int):
         """(Re)create the batch iterator from the consumed position."""
@@ -328,6 +340,26 @@ class Trainer:
         sd["sampler"] = self._consumed_state(step).to_dict()
         self.checkpointer.save(step, self.state, aux={"loader": sd},
                                block=block)
+
+    def _maybe_rescale_lr(self) -> None:
+        """Linear-scaling rule: when the global batch moved (an elastic
+        geometry latch crossed an epoch boundary), scale peak_lr by
+        new/old and re-jit.  Geometry changes are epoch-rare, so the
+        re-jit cost is negligible against an epoch of steps."""
+        gb = self.loader.global_batch
+        if not self.cfg.lr_linear_scaling or gb == self._lr_batch:
+            return
+        scale = gb / self._lr_batch
+        opt = self.cfg.step_config.optimizer
+        self.cfg.step_config = dataclasses.replace(
+            self.cfg.step_config,
+            optimizer=dataclasses.replace(opt, peak_lr=opt.peak_lr * scale))
+        self.step_fn = jax.jit(make_train_step(self.model,
+                                               self.cfg.step_config))
+        self.history.append({"event": "lr_rescale", "scale": scale,
+                             "global_batch": gb,
+                             "peak_lr": self.cfg.step_config.optimizer.peak_lr})
+        self._lr_batch = gb
 
     def _apply_delivery_defaults(self) -> None:
         """Flip zero-copy delivery on when the pipeline supports it — the
@@ -357,6 +389,7 @@ class Trainer:
         t_wall = time.perf_counter()
         last_metrics: Dict[str, Any] = {}
         while step < cfg.total_steps:
+            self._maybe_rescale_lr()
             t0 = time.perf_counter()
             try:
                 batch = next(batches)

@@ -51,16 +51,18 @@ class TrialRecorder:
                 record: bool = True,
                 locality_chunk: Optional[int] = None,
                 cache_budget_bytes: Optional[int] = None,
-                slow_lane_workers: Optional[int] = None) -> float:
+                slow_lane_workers: Optional[int] = None,
+                global_batch: Optional[int] = None) -> float:
         """Measure one cell; ``math.inf`` on overflow.
 
         ``record=False`` measures without logging a Trial (used for the
         paper's default-parameter reference run, which is not part of the
         sweep).  ``locality_chunk`` is the beyond-paper third axis,
-        ``cache_budget_bytes`` the fourth and ``slow_lane_workers`` the
-        fifth; each is forwarded to the evaluator ONLY when set, so
-        lower-dimensional searches keep working against evaluators that
-        never heard of them.
+        ``cache_budget_bytes`` the fourth, ``slow_lane_workers`` the
+        fifth and ``global_batch`` (elastic geometry) the sixth; each is
+        forwarded to the evaluator ONLY when set, so lower-dimensional
+        searches keep working against evaluators that never heard of
+        them.
         """
         nb = self.config.num_batches if num_batches is None else num_batches
         kw = {}
@@ -70,9 +72,12 @@ class TrialRecorder:
             kw["cache_budget_bytes"] = cache_budget_bytes
         if slow_lane_workers is not None:
             kw["slow_lane_workers"] = slow_lane_workers
+        if global_batch is not None:
+            kw["global_batch"] = global_batch
         chunk = locality_chunk or 0
         budget = cache_budget_bytes or 0
         lanes = slow_lane_workers or 0
+        gb = global_batch or 0
         try:
             stats = self.evaluator(nworker, nprefetch, num_batches=nb,
                                    epoch=self.config.epoch, **kw)
@@ -82,7 +87,8 @@ class TrialRecorder:
                                          overflowed=True,
                                          locality_chunk=chunk,
                                          cache_budget_bytes=budget,
-                                         slow_lane_workers=lanes))
+                                         slow_lane_workers=lanes,
+                                         global_batch=gb))
             return math.inf
         if stats.overflowed:
             if record:
@@ -90,7 +96,8 @@ class TrialRecorder:
                                          overflowed=True,
                                          locality_chunk=chunk,
                                          cache_budget_bytes=budget,
-                                         slow_lane_workers=lanes))
+                                         slow_lane_workers=lanes,
+                                         global_batch=gb))
             return math.inf
         if record:
             self.trials.append(Trial(
@@ -99,19 +106,22 @@ class TrialRecorder:
                 batch_seconds=getattr(stats, "batch_seconds", None),
                 locality_chunk=chunk,
                 cache_budget_bytes=budget,
-                slow_lane_workers=lanes))
+                slow_lane_workers=lanes,
+                global_batch=gb))
         return stats.seconds
 
     def result(self, nworker: int, nprefetch: int, optimal_time: float,
                *, default_time: Optional[float] = None,
                locality_chunk: int = 0,
                cache_budget_bytes: int = 0,
-               slow_lane_workers: int = 0) -> DPTResult:
+               slow_lane_workers: int = 0,
+               global_batch: int = 0) -> DPTResult:
         return DPTResult(nworker, nprefetch, optimal_time, self.trials,
                          default_time=default_time,
                          locality_chunk=locality_chunk,
                          cache_budget_bytes=cache_budget_bytes,
-                         slow_lane_workers=slow_lane_workers)
+                         slow_lane_workers=slow_lane_workers,
+                         global_batch=global_batch)
 
 
 def worker_rungs(num_cpu_cores: int, num_devices: int) -> List[int]:

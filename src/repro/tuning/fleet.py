@@ -171,6 +171,19 @@ class FleetConfig:
     # elastic re-mesh bookkeeping (plan_remesh)
     devices_per_host: int = 1
     model_axis: int = 1
+    # elastic geometry (DESIGN.md §11): when True, a death/leave reshard
+    # APPLIES plan_remesh's new_global_batch — pushed to every survivor
+    # at one common epoch latch (batch boundaries are position arithmetic,
+    # so the in-progress epoch finishes under the old geometry, with a
+    # ragged per-host split when the old batch does not divide by the
+    # survivor count).  False keeps the plan as a recorded recommendation.
+    elastic_geometry: bool = True
+    # consensus mode: "uniform" pushes one winning (workers, prefetch)
+    # cell fleet-wide; "per_host" gives each host its own winning cell
+    # AND a contiguous slice of the global batch proportional to its
+    # measured delivery speed (MultiHostDPT.run_per_host), so a lockstep
+    # fleet is no longer pinned to its slowest host's uniform share.
+    consensus: str = "uniform"
     # survivability knobs (DESIGN.md §8)
     max_events: int = 4096           # event-log ring size (HA snapshot keeps
                                      # the monotonic seq even after eviction)
@@ -262,8 +275,7 @@ class HostAgent:
         self.link: Optional[AgentLink] = None
         if link is not None:
             self.link = link.bind(self)
-        bpe = loader.sampler.batches_per_epoch()
-        self._base = loader.sampler.state.absolute(bpe)
+        self._base = loader.sampler.absolute()
         self.steps = 0
         # which live stream the consumed-step count refers to: makeup
         # yields do not advance the regular-batch position, so the count
@@ -321,8 +333,7 @@ class HostAgent:
         stream = self.loader._live_stream
         if stream is not None:
             return stream.position
-        return self.loader.sampler.state.absolute(
-            self.loader.sampler.batches_per_epoch())
+        return self.loader.sampler.absolute()
 
     def report(self) -> HostReport:
         p = self.loader.params
@@ -394,6 +405,7 @@ class HostAgent:
     def reshard(self, num_shards: int, shard: int, *,
                 at_batch: Optional[int] = None,
                 makeup: Optional[Sequence[np.ndarray]] = None,
+                sizes: Optional[Sequence[int]] = None,
                 op_id: Optional[str] = None) -> int:
         # op_id is the wire-level idempotency token; the in-process path
         # needs no dedup (calls are exactly-once on a stack)
@@ -401,7 +413,15 @@ class HostAgent:
         if makeup:
             self._makeup_added += len(makeup)
         return self.loader.reshard(num_shards, shard, at_batch=at_batch,
-                                   makeup=makeup)
+                                   makeup=makeup, sizes=sizes)
+
+    def set_geometry(self, global_batch: int, *,
+                     epoch: Optional[int] = None,
+                     op_id: Optional[str] = None) -> int:
+        """Adopt a new global batch from ``epoch`` on (elastic geometry
+        push — see DataLoader.set_geometry)."""
+        del op_id
+        return self.loader.set_geometry(int(global_batch), epoch=epoch)
 
     def add_makeup(self, makeup: Sequence[np.ndarray], *,
                    op_id: Optional[str] = None) -> None:
@@ -425,9 +445,7 @@ class HostAgent:
         global-batch position — how a joining host meets the fleet at the
         barrier."""
         sampler = self.loader.sampler
-        from repro.data.sampler import SamplerState
-        sampler.state = SamplerState.from_absolute(
-            position, sampler.batches_per_epoch())
+        sampler.state = sampler.state_at(position)
         self._base = position
         self.steps = 0
         self._consume_stream = None
@@ -455,18 +473,31 @@ class HostAgent:
     def global_batch(self) -> int:
         return self.loader.sampler.global_batch
 
-    def batches_per_epoch(self) -> int:
-        return self.loader.sampler.batches_per_epoch()
+    def shard_sizes(self) -> Optional[List[int]]:
+        s = self.loader.sampler.shard_sizes
+        return None if s is None else list(s)
+
+    def batches_per_epoch(self, epoch: Optional[int] = None) -> int:
+        return self.loader.sampler.batches_per_epoch(epoch)
 
     def local_indices(self, epoch: int, batch: int) -> np.ndarray:
         return self.loader.sampler.local_indices(epoch, batch)
 
+    def local_indices_at(self, position: int) -> np.ndarray:
+        """This host's slice at an absolute global-batch position —
+        schedule-aware (epochs can have different lengths under an
+        elastic geometry schedule)."""
+        s = self.loader.sampler
+        st = s.state_at(int(position))
+        return s.local_indices(st.epoch, st.batch_offset)
+
     def schedule_state(self) -> Dict[str, Any]:
-        """The uniform-permutation contract: the full (epoch -> chunk) and
-        (epoch -> hot_k) schedules plus the params they came from."""
+        """The uniform-permutation contract: the full (epoch -> chunk),
+        (epoch -> hot_k) and (epoch -> global_batch) schedules plus the
+        params they came from."""
         s = self.loader.sampler
         return {"locality": s.locality_state(), "cache": s.cache_state(),
-                **self.knob_state()}
+                "geometry": s.geometry_state(), **self.knob_state()}
 
     def sync_schedules(self, sched: Dict[str, Any]) -> None:
         """Adopt a peer's full epoch schedules (join catch-up, partition
@@ -476,6 +507,8 @@ class HostAgent:
             loader.sampler.load_locality(sched["locality"])
         if sched.get("cache") is not None:
             loader.sampler.load_cache_plan(sched["cache"])
+        if sched.get("geometry") is not None:
+            loader.sampler.load_geometry(sched["geometry"])
         chunk = sched.get("locality_chunk")
         budget = sched.get("cache_budget_bytes")
         loader.params = loader.params.replace(
@@ -513,7 +546,10 @@ class HostAgent:
                             "host_count": s.host_count,
                             "layout": s.layout,
                             "locality": s.locality_state(),
-                            "cache": s.cache_state()},
+                            "cache": s.cache_state(),
+                            "geometry": s.geometry_state(),
+                            "sizes": None if s.shard_sizes is None
+                            else list(s.shard_sizes)},
                 "params": {"num_workers": p.num_workers,
                            "prefetch_factor": p.prefetch_factor,
                            "locality_chunk": p.locality_chunk,
@@ -550,7 +586,14 @@ class HostAgent:
                 int(args["num_shards"]), int(args["shard"]),
                 at_batch=None if args.get("at_batch") is None
                 else int(args["at_batch"]),
-                makeup=makeup)
+                makeup=makeup,
+                sizes=None if args.get("sizes") is None
+                else [int(s) for s in args["sizes"]])
+        if op == "set_geometry":
+            return self.set_geometry(
+                int(args["global_batch"]),
+                epoch=None if args.get("epoch") is None
+                else int(args["epoch"]))
         if op == "add_makeup":
             self.add_makeup([np.asarray(c, dtype=np.int64)
                              for c in args["chunks"]])
@@ -589,6 +632,8 @@ class HostAgent:
                 kw["locality_chunk"] = int(args["locality_chunk"])
             if args.get("cache_budget_bytes") is not None:
                 kw["cache_budget_bytes"] = int(args["cache_budget_bytes"])
+            if args.get("global_batch") is not None:
+                kw["global_batch"] = int(args["global_batch"])
             try:
                 stats = self.evaluator(
                     int(args["nworker"]), int(args["nprefetch"]), **kw)
@@ -617,13 +662,15 @@ class _RemoteEvaluator:
     def __call__(self, nworker: int, nprefetch: int, *,
                  num_batches: int = 16, epoch: int = 0,
                  locality_chunk: Optional[int] = None,
-                 cache_budget_bytes: Optional[int] = None) -> TransferStats:
+                 cache_budget_bytes: Optional[int] = None,
+                 global_batch: Optional[int] = None) -> TransferStats:
         self.calls += 1
         r = self.proxy._send("measure", {
             "nworker": nworker, "nprefetch": nprefetch,
             "num_batches": num_batches, "epoch": epoch,
             "locality_chunk": locality_chunk,
-            "cache_budget_bytes": cache_budget_bytes})
+            "cache_budget_bytes": cache_budget_bytes,
+            "global_batch": global_batch})
         if r.get("overflow"):
             raise MemoryOverflow(r.get("error", "remote overflow"))
         return TransferStats(
@@ -659,11 +706,15 @@ class RemoteAgent:
             drop_last=bool(sp["drop_last"]),
             host_index=int(sp["host_index"]),
             host_count=int(sp["host_count"]),
-            layout=sp.get("layout", "host_major"))
+            layout=sp.get("layout", "host_major"),
+            shard_sizes=None if sp.get("sizes") is None
+            else [int(s) for s in sp["sizes"]])
         if sp.get("locality"):
             self._sampler.load_locality(sp["locality"])
         if sp.get("cache"):
             self._sampler.load_cache_plan(sp["cache"])
+        if sp.get("geometry"):
+            self._sampler.load_geometry(sp["geometry"])
         self._params = dict(spec["params"])
         self._dealt: List[np.ndarray] = [
             np.asarray(c, dtype=np.int64) for c in (dealt or [])]
@@ -689,6 +740,8 @@ class RemoteAgent:
                 self._sampler.load_locality(schedules["locality"])
             if schedules.get("cache") is not None:
                 self._sampler.load_cache_plan(schedules["cache"])
+            if schedules.get("geometry") is not None:
+                self._sampler.load_geometry(schedules["geometry"])
             if schedules.get("locality_chunk") is not None:
                 self._params["locality_chunk"] = \
                     int(schedules["locality_chunk"])
@@ -732,15 +785,25 @@ class RemoteAgent:
     def global_batch(self) -> int:
         return self._sampler.global_batch
 
-    def batches_per_epoch(self) -> int:
-        return self._sampler.batches_per_epoch()
+    def shard_sizes(self) -> Optional[List[int]]:
+        s = self._sampler.shard_sizes
+        return None if s is None else list(s)
+
+    def batches_per_epoch(self, epoch: Optional[int] = None) -> int:
+        return self._sampler.batches_per_epoch(epoch)
 
     def local_indices(self, epoch: int, batch: int) -> np.ndarray:
         return self._sampler.local_indices(epoch, batch)
 
+    def local_indices_at(self, position: int) -> np.ndarray:
+        st = self._sampler.state_at(int(position))
+        return self._sampler.local_indices(st.epoch, st.batch_offset)
+
     def schedule_state(self) -> Dict[str, Any]:
         return {"locality": self._sampler.locality_state(),
-                "cache": self._sampler.cache_state(), **self.knob_state()}
+                "cache": self._sampler.cache_state(),
+                "geometry": self._sampler.geometry_state(),
+                **self.knob_state()}
 
     # ---- member surface: fenced acts ---------------------------------------
     def apply_params(self, nworker: int, nprefetch: int,
@@ -764,17 +827,31 @@ class RemoteAgent:
     def reshard(self, num_shards: int, shard: int, *,
                 at_batch: Optional[int] = None,
                 makeup: Optional[Sequence[np.ndarray]] = None,
+                sizes: Optional[Sequence[int]] = None,
                 op_id: Optional[str] = None) -> int:
         args: Dict[str, Any] = {"num_shards": num_shards, "shard": shard,
                                 "at_batch": at_batch}
         if makeup:
             args["makeup"] = [np.asarray(c).tolist() for c in makeup]
+        if sizes is not None:
+            args["sizes"] = [int(s) for s in sizes]
         effective = int(self._send("reshard", args, op_id=op_id))
         # the ack means the host applied it: mirror follows
-        self._sampler.reshard(num_shards, shard)
+        self._sampler.reshard(num_shards, shard, sizes=sizes)
         if makeup:
             self._dealt.extend(np.asarray(c, dtype=np.int64) for c in makeup)
         return effective
+
+    def set_geometry(self, global_batch: int, *,
+                     epoch: Optional[int] = None,
+                     op_id: Optional[str] = None) -> int:
+        eff = int(self._send("set_geometry",
+                             {"global_batch": int(global_batch),
+                              "epoch": epoch}, op_id=op_id))
+        # mirror at the host's EFFECTIVE epoch (its natural latch may
+        # have clamped a stale pin upward)
+        self._sampler.set_geometry(int(global_batch), epoch=eff)
+        return eff
 
     def add_makeup(self, makeup: Sequence[np.ndarray], *,
                    op_id: Optional[str] = None) -> None:
@@ -793,6 +870,8 @@ class RemoteAgent:
             self._sampler.load_locality(sched["locality"])
         if sched.get("cache") is not None:
             self._sampler.load_cache_plan(sched["cache"])
+        if sched.get("geometry") is not None:
+            self._sampler.load_geometry(sched["geometry"])
         if sched.get("locality_chunk") is not None:
             self._params["locality_chunk"] = int(sched["locality_chunk"])
         if sched.get("cache_budget_bytes") is not None:
@@ -818,7 +897,10 @@ class RemoteAgent:
                                      "host_count": s.host_count,
                                      "layout": s.layout,
                                      "locality": s.locality_state(),
-                                     "cache": s.cache_state()},
+                                     "cache": s.cache_state(),
+                                     "geometry": s.geometry_state(),
+                                     "sizes": None if s.shard_sizes is None
+                                     else list(s.shard_sizes)},
                          "params": dict(self._params)},
                 "dealt": [c.tolist() for c in self._dealt],
                 "report": None if self.last_report is None
@@ -889,7 +971,8 @@ class FleetCoordinator:
         return agent
 
     def _negotiate_barrier(self, agents: Sequence[Any], num_shards: int,
-                           floor: int, *, rid: Optional[int] = None) -> int:
+                           floor: int, *, rid: Optional[int] = None,
+                           sizes: Optional[Sequence[int]] = None) -> int:
         """Issue the reshard to every agent at a common barrier, re-issuing
         at the max EFFECTIVE barrier until it is common.
 
@@ -900,12 +983,17 @@ class FleetCoordinator:
         ``max_barrier_rounds`` caps the loop: a faulty agent that keeps
         raising its effective barrier produces a clear diagnostic instead
         of an infinite spin.
+
+        ``sizes`` (optional) is a per-shard split of the global batch —
+        host-major contiguous slices — forwarded to every agent so a
+        ragged or deliberately non-uniform partition lands fleet-wide at
+        the same barrier.
         """
         barrier = max([a.stream_position() for a in agents] + [floor])
         history: List[int] = []
         for _ in range(max(1, self.cfg.max_barrier_rounds)):
             effective = max(
-                a.reshard(num_shards, i, at_batch=barrier,
+                a.reshard(num_shards, i, at_batch=barrier, sizes=sizes,
                           op_id=None if rid is None
                           else f"reshard-{rid}-map-{a.host}-{barrier}")
                 for i, a in enumerate(agents))
@@ -928,17 +1016,18 @@ class FleetCoordinator:
         new_count = len(incumbents) + 1
         rid = self.reshards
         barrier = self._negotiate_barrier(incumbents, new_count, 0, rid=rid)
-        agent.align_to(barrier)
         if incumbents:
             # locality is runtime-mutable now: the joiner's construction-
             # time chunk can be stale, and a host slicing a different
             # epoch permutation than its peers silently loses/duplicates
             # samples.  Copy an incumbent's full (epoch -> chunk) AND
-            # (epoch -> hot_k) schedules — including any pending latch —
-            # before the stream starts (the joiner re-sizes its own empty
-            # tier to the copied budget; the sync is a schedule no-op
-            # when the computed hot_k matches the copied plan).
+            # (epoch -> hot_k) AND (epoch -> global_batch) schedules —
+            # including any pending latch — BEFORE aligning: align_to
+            # converts the barrier to (epoch, offset) through the
+            # geometry schedule, so the joiner must hold the fleet's
+            # schedule first or it lands on the wrong epoch boundary.
             agent.sync_schedules(incumbents[0].schedule_state())
+        agent.align_to(barrier)
         agent.reshard(new_count, new_count - 1,
                       op_id=f"reshard-{rid}-align-{agent.host}")
         self.register(agent)
@@ -1118,7 +1207,12 @@ class FleetCoordinator:
 
     def _reconsensus(self, reason: str) -> Optional[Dict[str, Any]]:
         """Uniform re-consensus over every live host's evaluator, pushed
-        to the whole fleet through apply_params."""
+        to the whole fleet through apply_params.  With
+        ``cfg.consensus == "per_host"`` the fleet instead tunes each host
+        independently and re-balances the batch partition to match the
+        measured per-host rates (see :meth:`_per_host_consensus`)."""
+        if self.cfg.consensus == "per_host":
+            return self._per_host_consensus(reason)
         hosts = sorted(h for h in self.agents
                        if h in set(self.registry.alive_hosts()))
         if not hosts:
@@ -1180,6 +1274,111 @@ class FleetCoordinator:
             self._pushed = {
                 "cell": list(fleet.uniform_params) if won else None,
                 "schedule": to_wire(agents[0].schedule_state())}
+        self._checkpoint()
+        return event
+
+    @staticmethod
+    def _apportion(total: int, weights: Sequence[float]) -> List[int]:
+        """Split ``total`` into ``len(weights)`` non-negative integer parts
+        proportional to ``weights`` (largest-remainder), with every part
+        clamped to >= 1 when ``total >= len(weights)`` — a host with a
+        terrible measurement still needs a non-empty slice or it starves
+        out of the lockstep.  Zero/degenerate weights fall back to an even
+        split."""
+        parts = len(weights)
+        w = [max(0.0, float(x)) for x in weights]
+        s = sum(w)
+        if parts <= 0:
+            return []
+        if s <= 0 or not all(math.isfinite(x) for x in w):
+            return ShardedSampler.even_split(total, parts)
+        raw = [total * x / s for x in w]
+        out = [int(math.floor(r)) for r in raw]
+        if total >= parts:
+            out = [max(1, v) for v in out]
+        short = total - sum(out)
+        if short > 0:
+            order = sorted(range(parts), key=lambda i: raw[i] - out[i],
+                           reverse=True)
+            for i in range(short):
+                out[order[i % parts]] += 1
+        while short < 0:
+            # min-1 clamping overshot: shave the largest parts back down
+            j = max(range(parts), key=lambda i: out[i])
+            if out[j] <= (1 if total >= parts else 0):
+                break
+            out[j] -= 1
+            short += 1
+        return out
+
+    def _per_host_consensus(self, reason: str) -> Optional[Dict[str, Any]]:
+        """Per-host (non-uniform) consensus: every host runs its own DPT
+        sweep, adopts its own optimal (nWorker, nPrefetch), and the batch
+        partition is re-apportioned so faster hosts take proportionally
+        larger contiguous host-major slices (weights = measured samples/s
+        at each host's optimum).  The partition lands fleet-wide through
+        the same barrier protocol as a membership reshard — a partition-
+        only change is safe at any common batch boundary."""
+        hosts = sorted(h for h in self.agents
+                       if h in set(self.registry.alive_hosts()))
+        if not hosts:
+            return None
+        agents = [self.agents[h] for h in hosts]
+        tuner = MultiHostDPT([a.evaluator for a in agents],
+                             self._search_config())
+        self._last_consensus_step = self.fleet_step
+        for a in agents:
+            a.begin_trials()
+        try:
+            fleet = tuner.run_per_host()
+        except MemoryOverflow:
+            self._backoff = min(self.cfg.max_backoff, self._backoff * 2)
+            return None
+        finally:
+            for a in agents:
+                a.end_trials()
+        self.consensus_runs += 1
+        by_shard = sorted(agents, key=lambda a: a.shard_index())
+        order = {a.host: i for i, a in enumerate(by_shard)}
+        gb = by_shard[0].global_batch()
+        cur_sizes = by_shard[0].shard_sizes() \
+            or ShardedSampler.even_split(gb, len(by_shard))
+        # rate_i = local_i / optimal_time_i — what host i demonstrably
+        # moves per second at its own optimum under its CURRENT slice
+        rates = [0.0] * len(by_shard)
+        for a, r in zip(agents, fleet.per_host):
+            rates[order[a.host]] = (
+                cur_sizes[order[a.host]] / r.optimal_time
+                if r.optimal_time > 0 and math.isfinite(r.optimal_time)
+                else 0.0)
+        sizes = self._apportion(gb, rates)
+        sizes_changed = sizes != cur_sizes
+        cells_changed = any(
+            (r.nworker, r.nprefetch) != a.param_cell()
+            for a, r in zip(agents, fleet.per_host))
+        applied = cells_changed or sizes_changed
+        self._backoff = 1 if applied else min(self.cfg.max_backoff,
+                                              self._backoff * 2)
+        params_by_host = {a.host: (r.nworker, r.nprefetch)
+                          for a, r in zip(agents, fleet.per_host)}
+        event = {"kind": "consensus", "mode": "per_host", "reason": reason,
+                 "params": [params_by_host[a.host] for a in by_shard],
+                 "fleet_time": fleet.fleet_time, "hosts": hosts,
+                 "sizes": sizes if sizes_changed else None,
+                 "cell_applied": cells_changed, "applied": applied}
+        if cells_changed:
+            for a in agents:
+                nw, npf = params_by_host[a.host]
+                a.apply_params(nw, npf)
+        if sizes_changed:
+            rid = self.reshards
+            event["barrier"] = self._negotiate_barrier(
+                by_shard, len(by_shard), 0, rid=rid, sizes=sizes)
+            self.reshards += 1
+        self.events.append(event)
+        if applied:
+            self._pushed = {"cell": None,
+                            "schedule": to_wire(agents[0].schedule_state())}
         self._checkpoint()
         return event
 
@@ -1345,9 +1544,18 @@ class FleetCoordinator:
             self._pending_reshard = None
             self._checkpoint()
             return event
+        # the surviving hosts keep the OLD global batch until the geometry
+        # latch below; when it does not divide the survivor count the
+        # partition must go ragged (even_split) or the reshard would have
+        # silently truncated samples (old bug: floor division dropped
+        # global_batch % new_count samples from every batch)
+        old_gb = survivors[0].global_batch()
+        sizes: Optional[List[int]] = None
+        if old_gb % new_count:
+            sizes = ShardedSampler.even_split(old_gb, new_count)
         barrier = self._negotiate_barrier(
             survivors, new_count, max(consumed.values(), default=0),
-            rid=rid)
+            rid=rid, sizes=sizes)
         plan = plan_remesh(
             alive_hosts=new_count,
             devices_per_host=self.cfg.devices_per_host,
@@ -1355,19 +1563,31 @@ class FleetCoordinator:
             old_hosts=old_count,
             old_global_batch=departed[0].global_batch(),
             restore_step=barrier)
+        # elastic geometry: the plan's new_global_batch latches at the
+        # next epoch boundary no survivor has entered yet (geometry moves
+        # shard boundaries, so mid-epoch application would break exact
+        # coverage; the ragged sizes above bridge the mid-epoch tail).
+        # The latch epoch is FROZEN into the WAL before any host is
+        # pushed: a replay after a partial push must re-issue the same
+        # epoch everywhere or hosts would latch on divergent boundaries.
+        geometry: Optional[Dict[str, int]] = None
+        if (self.cfg.elastic_geometry and plan.feasible
+                and plan.new_global_batch != old_gb):
+            geometry = {
+                "global_batch": int(plan.new_global_batch),
+                "epoch": max(a.locality_latch_epoch() for a in survivors)}
         # makeup: every departed host's undelivered slices up to the
         # settled barrier, PLUS any makeup chunks a previous reshard dealt
         # to it that it never delivered (makeup parked on a corpse is
-        # otherwise lost), re-chunked to the NEW local batch size (so the
-        # chunks share the regular batch shape and can use the re-specced
-        # arena; at most one ragged tail chunk bypasses it) and dealt
-        # round-robin over survivors
+        # otherwise lost), re-chunked to each recipient's NEW local batch
+        # size (so the chunks share the regular batch shape and can use
+        # the re-specced arena; at most one ragged tail chunk bypasses
+        # it) and dealt round-robin over survivors
         missing: List[np.ndarray] = []
         makeup_batches = 0
         for d in departed:
-            bpe = d.batches_per_epoch()          # OLD shard map, frozen
             for b in range(consumed[d.host], barrier):
-                missing.append(d.local_indices(b // bpe, b % bpe))
+                missing.append(d.local_indices_at(b))
                 makeup_batches += 1
             inherited = d.undelivered_makeup()
             missing.extend(inherited)
@@ -1375,21 +1595,32 @@ class FleetCoordinator:
         shares: List[List[np.ndarray]] = [[] for _ in survivors]
         if missing:
             flat = np.concatenate(missing)
-            new_local = survivors[0].global_batch() // new_count
-            chunks = [flat[i:i + new_local]
-                      for i in range(0, len(flat), new_local)]
-            for i, chunk in enumerate(chunks):
-                shares[i % new_count].append(chunk)
+            local = (sizes if sizes is not None
+                     else [old_gb // new_count] * new_count)
+            pos, k = 0, 0
+            while pos < len(flat):
+                take = local[k % new_count]
+                if take > 0:
+                    shares[k % new_count].append(flat[pos:pos + take])
+                    pos += take
+                k += 1
         event.update(barrier=barrier, makeup_batches=makeup_batches,
-                     plan=plan)
+                     plan=plan, sizes=sizes,
+                     geometry_epoch=None if geometry is None
+                     else geometry["epoch"])
         if self._pending_reshard is not None:
             self._pending_reshard.update(
-                stage="deal", barrier=barrier,
+                stage="deal", barrier=barrier, geometry=geometry,
                 shares={a.host: [c.tolist() for c in share]
                         for a, share in zip(survivors, shares) if share},
                 dealt=[],
                 event=to_wire({**event, "plan": dataclasses.asdict(plan)}))
             self._checkpoint()
+        if geometry is not None:
+            for a in survivors:
+                a.set_geometry(geometry["global_batch"],
+                               epoch=geometry["epoch"],
+                               op_id=f"reshard-{rid}-geom-{a.host}")
         self._deal_makeup(
             {a.host: share for a, share in zip(survivors, shares) if share},
             rid=rid)
@@ -1513,6 +1744,15 @@ class FleetCoordinator:
                 departed, consumed,
                 reason=str(pr["reason"]) + "+replay", rid=rid)
         # stage == "deal"
+        geometry = pr.get("geometry")
+        if geometry is not None:
+            # re-issue under the ORIGINAL frozen latch epoch and op-ids:
+            # hosts already pushed dedupe on the op-id, the rest latch at
+            # the same boundary the dead leader chose
+            for a in sorted(self.agents.values(), key=lambda x: x.host):
+                a.set_geometry(int(geometry["global_batch"]),
+                               epoch=int(geometry["epoch"]),
+                               op_id=f"reshard-{rid}-geom-{a.host}")
         dealt = set(pr.get("dealt") or [])
         shares = {h: [np.asarray(c, dtype=np.int64) for c in share]
                   for h, share in (pr.get("shares") or {}).items()

@@ -43,10 +43,11 @@ class GridSearch:
     Beyond paper: when ``config.locality_chunks`` is set, the same sweep
     repeats per candidate sampler chunk size — a third, outermost axis
     (DESIGN.md §5).  ``config.cache_budgets`` adds the fourth axis the
-    same way (DESIGN.md §7), and ``config.slow_lanes`` a fifth
-    (DESIGN.md §9), outermost of all.  Left unset (the default), the loop
-    is exactly Algorithm 1 and the evaluator never sees a locality, cache
-    or slow-lane kwarg.
+    same way (DESIGN.md §7), ``config.slow_lanes`` a fifth (DESIGN.md §9)
+    and ``config.geometries`` (candidate global batches, DESIGN.md §11) a
+    sixth, outermost of all.  Left unset (the default), the loop is
+    exactly Algorithm 1 and the evaluator never sees a locality, cache,
+    slow-lane or geometry kwarg.
     """
 
     def tune(self, rec: TrialRecorder, *,
@@ -56,27 +57,32 @@ class GridSearch:
         chunks = cfg.locality_chunks if cfg.locality_chunks else (None,)
         budgets = cfg.cache_budgets if cfg.cache_budgets else (None,)
         lanes = cfg.slow_lanes if cfg.slow_lanes else (None,)
-        n_worker, n_prefetch, n_chunk, n_budget, n_lane = 0, 0, 0, 0, 0
+        geoms = cfg.geometries if cfg.geometries else (None,)
+        n_worker, n_prefetch = 0, 0
+        n_chunk, n_budget, n_lane, n_geom = 0, 0, 0, 0
         optimal_time = math.inf
-        for s in lanes:                                # beyond-paper axis 5
-            for b in budgets:                          # beyond-paper axis 4
-                for c in chunks:                       # beyond-paper axis 3
-                    for i in worker_rungs(N, G):       # lines 4-5
-                        j = cfg.min_prefetch           # line 6
-                        while j <= cfg.max_prefetch:   # line 7
-                            t = rec.seconds(i, j,      # lines 8, 12
-                                            locality_chunk=c,
-                                            cache_budget_bytes=b,
-                                            slow_lane_workers=s)
-                            if not math.isfinite(t):   # lines 9-10
-                                break
-                            if t < optimal_time:       # lines 14-17
-                                optimal_time = t
-                                n_worker, n_prefetch = i, j
-                                n_chunk = c or 0
-                                n_budget = b or 0
-                                n_lane = s or 0
-                            j += 1                     # line 19
+        for g in geoms:                            # beyond-paper axis 6
+            for s in lanes:                        # beyond-paper axis 5
+                for b in budgets:                  # beyond-paper axis 4
+                    for c in chunks:               # beyond-paper axis 3
+                        for i in worker_rungs(N, G):       # lines 4-5
+                            j = cfg.min_prefetch           # line 6
+                            while j <= cfg.max_prefetch:   # line 7
+                                t = rec.seconds(i, j,      # lines 8, 12
+                                                locality_chunk=c,
+                                                cache_budget_bytes=b,
+                                                slow_lane_workers=s,
+                                                global_batch=g)
+                                if not math.isfinite(t):   # lines 9-10
+                                    break
+                                if t < optimal_time:       # lines 14-17
+                                    optimal_time = t
+                                    n_worker, n_prefetch = i, j
+                                    n_chunk = c or 0
+                                    n_budget = b or 0
+                                    n_lane = s or 0
+                                    n_geom = g or 0
+                                j += 1                     # line 19
         default_time = None
         if measure_default:
             dw, dp = default_params(N)
@@ -85,7 +91,8 @@ class GridSearch:
                           default_time=default_time,
                           locality_chunk=n_chunk,
                           cache_budget_bytes=n_budget,
-                          slow_lane_workers=n_lane)
+                          slow_lane_workers=n_lane,
+                          global_batch=n_geom)
 
 
 @register_strategy("successive_halving")

@@ -676,3 +676,281 @@ def test_fault_quarantine_coverage_property(bpe, gb_scale, nbad, mode,
         assert len(flat) == n            # batch sizes preserved
         assert not set(bad) & set(flat)  # corrupt ids replaced
         assert set(flat) <= set(range(n))
+
+
+# --------------------------------------------------------------------------
+# elastic geometry (DESIGN.md §11): the epoch-latched global-batch schedule
+# + the two divisibility regressions it fixes (PR 10)
+# --------------------------------------------------------------------------
+def test_plan_remesh_snaps_nondivisible_global_batch_regression():
+    """Regression: a 4->3 shrink of global batch 14 rounds to a per-plan
+    batch (10 or 11) that 3 hosts cannot shard uniformly.  plan_remesh
+    must snap to the nearest positive multiple of the survivor count and
+    say so in ``reason`` — the old code returned the raw rounded value
+    and the reshard blew up (or silently truncated) downstream."""
+    from repro.distributed.fault_tolerance import plan_remesh
+    plan = plan_remesh(alive_hosts=3, devices_per_host=1, model_axis=1,
+                       old_hosts=4, old_global_batch=14, restore_step=None)
+    assert plan.feasible
+    assert plan.new_global_batch % 3 == 0, plan
+    assert plan.new_global_batch in (9, 12)
+    assert "snapped" in plan.reason
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(1, 3),
+       st.integers(1, 8), st.integers(1, 64))
+def test_plan_remesh_feasible_plans_always_shardable_property(
+        alive, dph, model_axis, old_hosts, old_gb):
+    """For ANY remesh input: a feasible plan's new_global_batch is
+    positive and divisible by the surviving host count (directly
+    applicable to a uniform ShardedSampler split)."""
+    from repro.distributed.fault_tolerance import plan_remesh
+    plan = plan_remesh(alive_hosts=alive, devices_per_host=dph,
+                       model_axis=model_axis, old_hosts=old_hosts,
+                       old_global_batch=old_gb, restore_step=None)
+    if plan.feasible:
+        assert plan.new_global_batch > 0
+        assert plan.new_global_batch % alive == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 5), st.integers(1, 3),
+       st.sampled_from(["host_major", "strided"]), st.integers(0, 10**6))
+def test_geometry_latch_exact_coverage_property(hosts, bpe, gb_scale,
+                                                layout, seed):
+    """For ANY randomized (hosts, epoch shape, layout): latching a new
+    global batch at an epoch boundary keeps exact once-per-epoch coverage
+    in BOTH epochs, batches_per_epoch follows the schedule, and the
+    schedule-aware absolute math round-trips."""
+    gb0 = 12 * gb_scale                 # divisible by every host count <= 4
+    n = gb0 * bpe
+    gb1 = max(hosts, (gb0 * 3 // 4) // hosts * hosts)  # a smaller latch
+    shards = _shards(n, gb0, hosts, chunk=0, layout=layout, seed=seed)
+    for s in shards:
+        eff = s.set_geometry(gb1, epoch=1)
+        assert eff == 1
+        assert s.gb_for_epoch(0) == gb0 and s.gb_for_epoch(1) == gb1
+        assert s.batches_per_epoch(0) == bpe
+        assert s.batches_per_epoch(1) == n // gb1
+    for epoch, gb in ((0, gb0), (1, gb1)):
+        seen = []
+        for b in range(n // gb):
+            for s in shards:
+                seen.extend(s.local_indices(epoch, b).tolist())
+        covered = n - (n % gb)          # drop_last tail at the new gb
+        assert len(seen) == covered
+        assert len(set(seen)) == covered
+    # schedule-aware absolute position round-trips through state_at
+    probe = shards[0]
+    for pos in (0, bpe - 1, bpe, bpe + 1, bpe + n // gb1 - 1):
+        st_ = probe.state_at(pos)
+        assert probe.epoch_start(st_.epoch) + st_.batch_offset == pos
+
+
+def _run_fleet_death(n, gb, hosts, *, kill, rounds_before=3, seed=7):
+    """Drive a direct-mode fleet, starve ``kill`` of heartbeats, poll
+    past the timeout, and return (coord, streams, delivered, agents)."""
+    from repro.data import DataLoader, LoaderParams
+    from repro.tuning import FleetConfig, FleetCoordinator, HostAgent
+    from conftest import make_table_evaluator
+
+    timeout = 4.0
+    clock = [0.0]
+    coord = FleetCoordinator(
+        config=FleetConfig(heartbeat_timeout_s=timeout, warmup_steps=2,
+                           cooldown_steps=8, num_cpu_cores=4, num_devices=1,
+                           max_prefetch=2, retune_budget_batches=2),
+        clock=lambda: clock[0])
+    agents, streams = {}, {}
+    for h in range(hosts):
+        dl = DataLoader(make_index_dataset(n), gb, shuffle=True, seed=seed,
+                        params=LoaderParams(num_workers=2,
+                                            prefetch_factor=2),
+                        host_index=h, host_count=hosts)
+        name = f"host{h}"
+        agents[name] = coord.register(HostAgent(
+            name, dl, evaluator=make_table_evaluator(
+                lambda i, j: 4.0 / i + 0.1 * j)))
+        streams[name] = dl.stream(to_device=False)
+    delivered = []
+    alive = set(agents)
+    for _ in range(rounds_before):
+        clock[0] += 1.0
+        for name in sorted(alive):
+            delivered.append(next(streams[name]))
+            agents[name].observe(data_s=0.001, step_s=0.05)
+        coord.poll()
+    alive.discard(kill)
+    for _ in range(int(timeout) + 2):
+        clock[0] += 1.0
+        for name in sorted(alive):
+            agents[name].observe(data_s=0.001, step_s=0.05)
+        coord.poll()
+    return coord, streams, delivered, agents, alive
+
+
+def test_elastic_reshard_applies_new_global_batch_with_exact_coverage():
+    """The tentpole: a 4->3 host death rescales the global batch 12->9 at
+    the NEXT epoch boundary (plan_remesh keeps per-replica batch at 3).
+    Epoch 0 finishes at the old geometry with exact coverage (makeup for
+    the corpse's unconsumed slices), epoch 1 runs at the new geometry
+    with exact coverage — and the new batch is observable in the event
+    log, the sampler schedules, and the HA member mirrors."""
+    gb, bpe = 12, 6
+    n = gb * bpe
+    coord, streams, delivered, agents, alive = _run_fleet_death(
+        n, gb, 4, kill="host3")
+    try:
+        event = next(e for e in coord.events if e["kind"] == "reshard")
+        assert event["plan"].new_global_batch == 9
+        # the latch epoch is the first boundary no producer (including its
+        # prefetch pipeline) has crossed yet — always in the future
+        ge = event["geometry_epoch"]
+        assert ge is not None and ge >= 1
+        assert event["sizes"] is None            # 12 % 3 == 0: no ragged
+        bpe1 = n // 9
+        for name in sorted(alive):
+            s = agents[name].loader.sampler
+            assert s.gb_for_epoch(ge - 1) == 12 and s.gb_for_epoch(ge) == 9
+        # the HA snapshot carries the schedule for a promoted standby
+        members = coord.state_dict()["members"]
+        for name in sorted(alive):
+            sched = members[name]["spec"]["sampler"]["geometry"]
+            assert [list(map(int, e)) for e in sched] == [[0, 12], [ge, 9]]
+        # drain the pre-latch epochs (old geometry + makeup) plus one full
+        # epoch at the NEW geometry
+        for name in sorted(alive):
+            s = streams[name]
+            while s.position < ge * bpe + bpe1:
+                delivered.append(next(s))
+        flat = flat_indices(delivered)
+        assert flat == sorted(list(range(n)) * (ge + 1))   # every epoch exact
+        for name in sorted(alive):
+            assert agents[name].loader.global_batch == 9
+            assert agents[name].loader.sampler.local_batch == 3
+            assert list(
+                agents[name].loader.sampler.sizes_for_epoch(ge)) == [3, 3, 3]
+    finally:
+        for s in streams.values():
+            s.close()
+
+
+def test_elastic_reshard_ragged_split_regression():
+    """Regression for the floor-division deal bug: global batch 8 over 3
+    survivors is non-divisible — the old code computed new_local = 8//3
+    and silently truncated (and the uniform reshard itself raised in the
+    stream thread).  The fix deals a ragged largest-remainder split
+    [3, 3, 2] with exact coverage, then latches the plan's snapped batch
+    (6) at the epoch boundary."""
+    gb, bpe = 8, 6
+    n = gb * bpe
+    coord, streams, delivered, agents, alive = _run_fleet_death(
+        n, gb, 4, kill="host3")
+    try:
+        event = next(e for e in coord.events if e["kind"] == "reshard")
+        assert list(event["sizes"]) == [3, 3, 2]
+        assert event["plan"].new_global_batch == 6   # 4->3 at 2/replica
+        ge = event["geometry_epoch"]
+        assert ge is not None and ge >= 1
+        by_shard = sorted((agents[name] for name in alive),
+                          key=lambda a: a.shard_index())
+        bpe1 = n // 6
+        for name in sorted(alive):
+            s = streams[name]
+            while s.position < ge * bpe + bpe1:
+                delivered.append(next(s))
+        assert flat_indices(delivered) == sorted(list(range(n)) * (ge + 1))
+        assert [a.loader.sampler.local_batch for a in by_shard] == [2, 2, 2]
+    finally:
+        for s in streams.values():
+            s.close()
+
+
+def test_geometry_checkpoint_roundtrip():
+    """DataLoader.state_dict carries the geometry schedule AND the ragged
+    shard sizes; a restored loader continues at the right epoch shape."""
+    n, gb = 96, 12
+    dl = DataLoader(make_index_dataset(n), gb, shuffle=True, seed=3,
+                    host_index=0, host_count=3)
+    assert dl.set_geometry(9, epoch=2) == 2
+    dl.sampler.reshard(3, 0, sizes=[5, 4, 3])
+    sd = dl.state_dict()
+    dl2 = DataLoader(make_index_dataset(n), gb, shuffle=True, seed=3,
+                     host_index=0, host_count=3)
+    dl2.load_state_dict(sd)
+    assert dl2.sampler.geometry_state() == dl.sampler.geometry_state()
+    assert list(dl2.sampler.shard_sizes) == [5, 4, 3]
+    assert dl2.sampler.gb_for_epoch(2) == 9
+    # stale explicit sizes (sum != the latched gb) revert to even_split
+    assert list(dl2.sampler.sizes_for_epoch(2)) == [3, 3, 3]
+
+
+def test_nondivisible_uniform_reshard_raises_without_sizes():
+    """Regression guard: the silent-truncation path is now an explicit
+    error — resharding to a count that does not divide the global batch
+    demands an explicit ragged split."""
+    s = ShardedSampler(48, 8, host_index=0, host_count=4)
+    with pytest.raises(ValueError, match="ragged"):
+        s.reshard(3, 0)
+    s.reshard(3, 0, sizes=[3, 3, 2])    # the explicit split is accepted
+    assert s.local_batch == 3
+
+
+def test_per_host_consensus_rebalances_shard_sizes():
+    """consensus="per_host": heterogeneous hosts tune independently and
+    the batch partition re-apportions toward the fast host — contiguous
+    host-major slices, exact coverage preserved mid-epoch."""
+    from repro.data import DataLoader, LoaderParams
+    from repro.tuning import FleetConfig, FleetCoordinator, HostAgent
+    from conftest import make_table_evaluator
+
+    n, gb, hosts = 240, 12, 3
+    clock = [0.0]
+    coord = FleetCoordinator(
+        config=FleetConfig(heartbeat_timeout_s=10.0, warmup_steps=2,
+                           cooldown_steps=4, num_cpu_cores=4, num_devices=1,
+                           max_prefetch=2, retune_budget_batches=2,
+                           consensus="per_host"),
+        clock=lambda: clock[0])
+    agents, streams = [], []
+    # host0 is 2x faster than its peers at every cell
+    tables = [lambda i, j: 2.0 / i + 0.05 * j,
+              lambda i, j: 4.0 / i + 0.1 * j,
+              lambda i, j: 4.0 / i + 0.1 * j]
+    for h in range(hosts):
+        dl = DataLoader(make_index_dataset(n), gb, shuffle=True, seed=11,
+                        params=LoaderParams(num_workers=2,
+                                            prefetch_factor=2),
+                        host_index=h, host_count=hosts)
+        agents.append(coord.register(HostAgent(
+            f"host{h}", dl, evaluator=make_table_evaluator(tables[h]))))
+        streams.append(dl.stream(to_device=False))
+    delivered = []
+    try:
+        for _ in range(6):
+            clock[0] += 1.0
+            for a, s in zip(agents, streams):
+                delivered.append(next(s))
+                a.observe(data_s=0.09, step_s=0.1)   # stalled: force retune
+        actions = coord.poll()
+        consensus = next(a for a in actions if a["kind"] == "consensus")
+        assert consensus["mode"] == "per_host"
+        assert consensus["applied"]
+        sizes = consensus["sizes"]
+        assert sizes is not None and sum(sizes) == gb
+        assert sizes[0] > sizes[1]           # fast host takes the bigger slice
+        # per-host cells: each host adopted its own optimum
+        assert [tuple(p) for p in consensus["params"]] == \
+            [a.param_cell() for a in agents]
+        # the partition applies at the negotiated barrier — drain the epoch
+        # (exact coverage must survive the mid-epoch repartition), then the
+        # live samplers hold the new contiguous host-major slices
+        for s in streams:
+            while s.position < n // gb:
+                delivered.append(next(s))
+        assert flat_indices(delivered) == list(range(n))
+        assert [a.loader.sampler.local_batch for a in agents] == sizes
+    finally:
+        for s in streams:
+            s.close()

@@ -362,7 +362,7 @@ class _BarrierRacer:
         return 0
 
     def reshard(self, num_shards, shard, *, at_batch=None, makeup=None,
-                op_id=None):
+                sizes=None, op_id=None):
         self.calls += 1
         return (at_batch or 0) + 1
 
